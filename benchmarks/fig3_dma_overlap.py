@@ -1,0 +1,84 @@
+"""Paper Fig. 3 — DMA transfer scaling: 2 accelerators vs 1.
+
+The board measurement behind the paper's device model: to move a fixed
+amount of input+output data, two accelerators split the *input* transfers
+(each has its own DMA stream into local BRAM) but the *output* transfers
+serialise on a shared channel.  Reproduced with the model: one round of
+transfer-only tasks moving 512 KB / 1024 KB of input and output data total,
+split across 1 vs 2 accelerators.
+
+Prediction: speedup = (T_in + T_out) / (T_in/2 + T_out) = 4/3 for equal
+in/out volume — strictly between 1× (nothing scales) and 2× (everything
+scales), the regime the paper's Fig. 3 shows.  The counterfactual
+"outputs also overlap" model yields 2.0× and is reported for contrast.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import (DevicePool, Eligibility, KernelReport, SharedResource,
+                        SystemConfig, Trace, TraceEvent, build_graph, simulate)
+
+
+def _transfer_trace(n_tasks: int, nbytes_each: int) -> Trace:
+    events = []
+    for i in range(n_tasks):
+        events.append(TraceEvent(
+            index=i, name="xfer", created_at=0.0, elapsed_smp=1e-3,
+            accesses=[(f"in{i}", "in", nbytes_each),
+                      (f"out{i}", "out", nbytes_each)],
+            devices=("fpga", "smp"), flops=1.0))
+    return Trace(events=events)
+
+
+def _system(n_acc: int, overlap_outputs: bool) -> SystemConfig:
+    return SystemConfig(
+        name=f"{n_acc}acc", pools=[DevicePool("smp", ("smp",), 2),
+                                   DevicePool("acc", ("fpga:xfer",), n_acc)],
+        shared=[SharedResource("submit", 1), SharedResource("dma_out", 1)],
+        overlap_inputs=True, overlap_outputs=overlap_outputs,
+        task_creation_cost=0.0, dma_submit_cost=0.0)
+
+
+def _report(nbytes: int, bus_bytes_per_cycle: float = 8.0,
+            clock_hz: float = 100e6) -> KernelReport:
+    xfer_s = (nbytes / bus_bytes_per_cycle) / clock_hz
+    return KernelReport(kernel="xfer", device_kind="fpga:xfer",
+                        compute_s=1e-9, dma_in_s=xfer_s, dma_out_s=xfer_s)
+
+
+def _makespan(total_bytes: int, n_acc: int, overlap_outputs: bool) -> float:
+    # fixed total volume, split across the accelerators (one round)
+    per_task = total_bytes // n_acc
+    trace = _transfer_trace(n_acc, per_task)
+    reports = {("xfer", "fpga:xfer"): _report(per_task)}
+    elig = Eligibility({"xfer": ("fpga:xfer",)})
+    sysc = _system(n_acc, overlap_outputs)
+    g = build_graph(trace, sysc, reports, elig, include_creation=False)
+    return simulate(g, sysc).makespan
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    for kb in (512, 1024):
+        total = kb * 1024
+        t0 = time.perf_counter()
+        m1 = _makespan(total, 1, overlap_outputs=False)
+        m2 = _makespan(total, 2, overlap_outputs=False)
+        m2_full = _makespan(total, 2, overlap_outputs=True)
+        us = (time.perf_counter() - t0) * 1e6
+        speedup = m1 / m2
+        counterfactual = m1 / m2_full
+        rows.append((f"fig3/{kb}KB", us,
+                     f"speedup_2acc={speedup:.3f} (paper regime: 1<s<2; "
+                     f"model predicts 4/3),counterfactual_full_overlap="
+                     f"{counterfactual:.3f}"))
+        assert 1.05 < speedup < 1.95, "asymmetric scaling regime violated"
+        assert counterfactual > speedup, "output serialisation must cost"
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,68 @@
+"""Paper Fig. 9 — Cholesky co-design: estimator vs "real" execution trends.
+
+Six configurations: FR-dgemm / FR-dsyrk / FR-dtrsm (one full-resource
+accelerator, everything else on the SMP) and dgemm+dgemm / dgemm+dsyrk /
+dgemm+dtrsm (two reduced accelerators).  dpotrf always stays on the SMP
+(paper Fig. 4 annotation).  Claim under test: same speedup trends between
+estimate and reference, normalised to the slowest configuration.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.apps import cholesky as chol
+from repro.core import (a9_smp_seconds, estimate, reference_run, same_best,
+                        spearman_rank_correlation, speedup_table)
+
+
+def run(n: int = 512, bs: int = 64, seed: int = 0) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    a9 = a9_smp_seconds("float64")
+    t0 = time.perf_counter()
+    trace = chol.trace_cholesky(n=n, bs=bs)
+    rows.append((f"fig9/trace", (time.perf_counter() - t0) * 1e6,
+                 f"tasks={len(trace)}"))
+
+    reports = chol.report_map(bs)
+    est, ref = [], []
+    for c in chol.candidates(bs):
+        assert c.feasible(), f"{c.name} should fit the fabric"
+        e = estimate(trace, c.system, reports, c.eligibility, smp_seconds_fn=a9)
+        r = reference_run(trace, c.system, reports, c.eligibility,
+                          smp_seconds_fn=a9, seed=seed)
+        est.append(e); ref.append(r)
+        rows.append((f"fig9/est/{c.name}", e.analysis_seconds * 1e6,
+                     f"est_ms={e.makespan_s * 1e3:.3f},"
+                     f"real_ms={r.makespan_s * 1e3:.3f},"
+                     f"bottleneck={e.sim.bottleneck()}"))
+
+    s_est = speedup_table(est)
+    s_ref = speedup_table(ref)
+    rho = spearman_rank_correlation(s_est, s_ref)
+    for name in sorted(s_est, key=lambda k: -s_est[k]):
+        rows.append((f"fig9/speedup/{name}", 0.0,
+                     f"est={s_est[name]:.2f},real={s_ref[name]:.2f}"))
+    rows.append(("fig9/trend_agreement", 0.0,
+                 f"spearman={rho:.3f},same_best={same_best(s_est, s_ref)},"
+                 f"best_est={max(s_est, key=lambda k: s_est[k])}"))
+    return rows
+
+
+def speedups(n: int = 512, bs: int = 64, seed: int = 0
+             ) -> Tuple[Dict[str, float], Dict[str, float]]:
+    a9 = a9_smp_seconds("float64")
+    trace = chol.trace_cholesky(n=n, bs=bs)
+    reports = chol.report_map(bs)
+    est, ref = [], []
+    for c in chol.candidates(bs):
+        est.append(estimate(trace, c.system, reports, c.eligibility,
+                            smp_seconds_fn=a9))
+        ref.append(reference_run(trace, c.system, reports, c.eligibility,
+                                 smp_seconds_fn=a9, seed=seed))
+    return speedup_table(est), speedup_table(ref)
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,51 @@
+"""§Roofline: 40-cell baseline table from the dry-run artifacts.
+
+Reads benchmarks/artifacts/dryrun/*.json (written by
+``python -m repro.launch.dryrun --all [--probes]``), computes the
+three-term roofline per (arch × shape) on the single-pod mesh, and writes
+``benchmarks/artifacts/roofline.{json,md}``.  No compilation happens here —
+this is the analysis layer the paper's methodology prescribes: static
+reports in, decision table out.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.roofline.model import (ARTIFACTS, V5E, analyze_all,
+                                  roofline_table)
+
+SINGLE_POD = "data=16×model=16"
+
+
+def main(mesh: str = SINGLE_POD) -> int:
+    cells = analyze_all(mesh_filter=mesh)
+    if not cells:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --probes` first")
+        return 1
+    cells.sort(key=lambda c: (c.arch, c.shape))
+    table = roofline_table(cells)
+    print(table)
+    (ARTIFACTS / "roofline.md").write_text(table + "\n")
+    (ARTIFACTS / "roofline.json").write_text(
+        json.dumps([c.row() for c in cells], indent=1))
+
+    doms = {}
+    for c in cells:
+        doms[c.dominant] = doms.get(c.dominant, 0) + 1
+    worst = min(cells, key=lambda c: c.roofline_fraction)
+    most_coll = max(cells, key=lambda c: c.collective_s / max(c.bound_s,
+                                                             1e-30))
+    print(f"\ncells={len(cells)} dominant-term counts={doms}")
+    print(f"worst roofline fraction: {worst.arch}×{worst.shape} "
+          f"({worst.roofline_fraction:.3f}, {worst.dominant}-bound)")
+    print(f"most collective-bound: {most_coll.arch}×{most_coll.shape} "
+          f"(collective {most_coll.collective_s:.4f}s vs bound "
+          f"{most_coll.bound_s:.4f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

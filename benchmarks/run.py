@@ -1,0 +1,42 @@
+"""Benchmark harness entry: ``python -m benchmarks.run``.
+
+One module per paper table/figure (fig3/fig5/fig6/fig9), plus the
+framework-level benches (roofline table + step estimator) that read the
+dry-run artifacts.  Output: ``name,us_per_call,derived`` CSV rows, teed by
+the top-level driver into bench_output.txt.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (fig3_dma_overlap, fig5_matmul,
+                            fig6_analysis_time, fig9_cholesky,
+                            step_estimator)
+
+    failures = 0
+    for mod in (fig3_dma_overlap, fig5_matmul, fig6_analysis_time,
+                fig9_cholesky, step_estimator):
+        print(f"# --- {mod.__name__} ---", flush=True)
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+
+    print("# --- roofline table (benchmarks/artifacts/roofline.md) ---",
+          flush=True)
+    try:
+        from benchmarks import roofline_table
+        roofline_table.main()
+    except Exception:  # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""Framework-level estimator benchmark: predicted pod step time per cell.
+
+For every dry-run cell with probe artifacts, run the coarse-grain step
+estimator (core/steptask.py) in both collective-overlap modes and compare
+against the roofline bound.  Invariant: predicted step time ≥ the
+max-of-terms bound (the simulator adds the serialization the closed-form
+bound ignores); overlap=True must never be slower than overlap=False.
+Analysis cost per candidate is microseconds→milliseconds — this ratio vs a
+full 512-way re-compile is the framework-level Fig. 6.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.core.steptask import estimate_step
+from repro.roofline.model import analyze_record, load_artifacts
+
+SINGLE_POD = "data=16×model=16"
+
+
+def _grouped():
+    records = load_artifacts()
+    fulls = {}
+    probes: Dict[Tuple[str, str], List[dict]] = {}
+    for r in records:
+        if "skipped" in r or r["mesh"] != SINGLE_POD:
+            continue
+        key = (r["arch"], r["shape"])
+        if r.get("tag", "").startswith("probe"):
+            probes.setdefault(key, []).append(r)
+        elif not r.get("tag"):
+            fulls[key] = r
+    return fulls, probes
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    fulls, probes = _grouped()
+    for key, rec in sorted(fulls.items()):
+        pr = sorted(probes.get(key, []), key=lambda r: r["n_layers"])
+        if len(pr) < 2:
+            continue
+        cell = analyze_record(rec, probes=pr)
+        t0 = time.perf_counter()
+        est_block = estimate_step(rec["arch"], rec["shape"], pr[0], pr[1],
+                                  rec["full_n_layers"], overlap=False,
+                                  params=rec["params"], variant="blocking")
+        est_ovl = estimate_step(rec["arch"], rec["shape"], pr[0], pr[1],
+                                rec["full_n_layers"], overlap=True,
+                                params=rec["params"], variant="overlap")
+        dt = time.perf_counter() - t0
+        bound = cell.bound_s
+        name = f"step_est/{rec['arch']}/{rec['shape']}"
+        ok = est_ovl.makespan_s <= est_block.makespan_s + 1e-12
+        rows.append((name, dt * 1e6 / 2,
+                     f"blocking_s={est_block.makespan_s:.5f},"
+                     f"overlap_s={est_ovl.makespan_s:.5f},"
+                     f"roofline_bound_s={bound:.5f},"
+                     f"overlap<=blocking={ok},"
+                     f"bottleneck={est_ovl.sim.bottleneck()}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,55 @@
+"""The paper's co-design loop at POD scale (framework level, DESIGN.md §2).
+
+Candidates here are sharding/overlap/schedule choices for one (arch ×
+shape) cell; costs come from the dry-run probe artifacts instead of Vivado
+HLS reports; the same discrete-event simulator ranks them.  Re-simulating a
+candidate takes milliseconds — re-compiling it for 512 chips takes minutes,
+and re-tuning on a real pod takes hours: that is Fig. 6 at pod scale.
+
+Run after the dry-run sweep:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --probes
+  PYTHONPATH=src python examples/pod_codesign.py [arch shape]
+"""
+import sys
+import time
+
+from repro.core.steptask import estimate_step
+from repro.core.paraver import ascii_gantt
+from repro.roofline.model import load_artifacts
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-4b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+MESH = "data=16×model=16"
+
+records = [r for r in load_artifacts()
+           if r.get("arch") == arch and r.get("shape") == shape
+           and r["mesh"] == MESH]
+probes = sorted((r for r in records if r.get("tag", "").startswith("probe")),
+                key=lambda r: r["n_layers"])
+full = next(r for r in records if not r.get("tag"))
+assert len(probes) >= 2, "run the probe sweep first"
+
+print(f"cell: {arch} × {shape} ({full['params'] / 1e9:.2f}B params, "
+      f"{full['full_n_layers']} layers)")
+
+t0 = time.perf_counter()
+candidates = {}
+for overlap in (False, True):
+    for pods in (1, 2):
+        name = f"{'overlap' if overlap else 'blocking'}-{pods}pod"
+        candidates[name] = estimate_step(
+            arch, shape, probes[0], probes[1], full["full_n_layers"],
+            overlap=overlap, pods=pods, params=full["params"], variant=name)
+dt = time.perf_counter() - t0
+
+print(f"\n4 candidates simulated in {dt * 1e3:.1f} ms "
+      f"(vs ~minutes per 512-chip re-compile, hours per pod retune):")
+for name, est in sorted(candidates.items(), key=lambda kv: kv[1].makespan_s):
+    u = est.sim.utilization()
+    print(f"  {name:16s} step={est.makespan_s * 1e3:9.3f} ms  "
+          f"bottleneck={est.sim.bottleneck():4s} "
+          f"util={{{', '.join(f'{k}:{v:.2f}' for k, v in sorted(u.items()))}}}")
+
+best = min(candidates.values(), key=lambda e: e.makespan_s)
+print(f"\nchosen: {best.variant} — timeline (first layers):")
+print(ascii_gantt(best.sim, width=78, max_rows=6))

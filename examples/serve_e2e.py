@@ -1,0 +1,44 @@
+"""End-to-end serving driver: batched requests against a small model.
+
+Prefill → continuous batched greedy decode with a shared KV cache, plus a
+self-check: the served tokens must equal what an incremental full-forward
+argmax would produce.
+
+Run: PYTHONPATH=src python examples/serve_e2e.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as T
+from repro.serve.engine import Engine, Request
+
+cfg = configs.get_smoke("gemma2-2b")       # local+global, softcaps — the
+params = T.init(cfg, jax.random.PRNGKey(0))  # spiciest cache layout
+rng = np.random.default_rng(0)
+
+eng = Engine(cfg, params, slots=2, max_len=32)
+prompts = [rng.integers(0, cfg.vocab, size=(12,), dtype=np.int32)
+           for _ in range(4)]
+for rid, pr in enumerate(prompts):
+    eng.submit(Request(rid=rid, prompt=pr, max_new=6))
+
+t0 = time.perf_counter()
+done = eng.run()
+dt = time.perf_counter() - t0
+print(f"served {len(done)} requests in {dt:.2f}s")
+
+# self-check vs teacher-forced full forward
+for r in done:
+    toks = list(r.prompt)
+    for i in range(len(r.out)):
+        logits, _ = T.forward(cfg, params,
+                              {"tokens": jnp.asarray(toks)[None]})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        assert nxt == r.out[i], (r.rid, i, nxt, r.out[i])
+        toks.append(nxt)
+    print(f"  req{r.rid}: {r.out}  ✓ matches full-forward greedy")
+print("OK: engine decode ≡ full-forward greedy decoding.")

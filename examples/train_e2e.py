@@ -1,0 +1,88 @@
+"""End-to-end training driver: full substrate on real (CPU) devices.
+
+Presets:
+  tiny  — ~1M-param qwen3-family model, quick CI-sized run (default)
+  100m  — ~100M-param model, a few hundred steps (the deliverable-scale
+          run; give it a while on CPU)
+
+Exercises: config system → model init → sharded train step (jit, donated
+buffers) → synthetic data pipeline → supervisor with failure injection +
+atomic checkpoints → loss-goes-down assertion.
+
+Run: PYTHONPATH=src python examples/train_e2e.py [--preset 100m] [--steps N]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models.transformer import BlockSpec, ModelConfig
+from repro.train import optimizer as opt_mod
+from repro.train import step as step_mod
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.supervisor import FailureInjector, Supervisor
+
+PRESETS = {
+    "tiny": dict(d=128, layers=4, heads=4, kv=2, ff=512, vocab=2048,
+                 seq=64, batch=8, steps=60),
+    "100m": dict(d=768, layers=12, heads=12, kv=4, ff=3072, vocab=32768,
+                 seq=256, batch=8, steps=300),
+}
+
+
+def make_cfg(p) -> ModelConfig:
+    return ModelConfig(
+        name="train-e2e", family="dense", n_layers=p["layers"],
+        d_model=p["d"], n_heads=p["heads"], n_kv=p["kv"], d_ff=p["ff"],
+        vocab=p["vocab"], head_dim=p["d"] // p["heads"], qk_norm=True,
+        tie_embeddings=True, param_dtype="float32", scan_chunk=32)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=PRESETS, default="tiny")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+    p = dict(PRESETS[args.preset])
+    if args.steps:
+        p["steps"] = args.steps
+
+    cfg = make_cfg(p)
+    print(f"model ≈ {cfg.param_count():,} params; "
+          f"{p['steps']} steps of {p['batch']}×{p['seq']} tokens")
+
+    tcfg = step_mod.TrainConfig(opt=opt_mod.OptConfig(
+        lr=3e-3, warmup_steps=max(p["steps"] // 20, 2),
+        total_steps=p["steps"]))
+    params, opt_state = step_mod.init_train_state(
+        cfg, tcfg, jax.random.PRNGKey(0))
+    train_step = jax.jit(step_mod.make_train_step(cfg, tcfg),
+                         donate_argnums=(0, 1))
+
+    ds = SyntheticLM(DataConfig(seq_len=p["seq"], global_batch=p["batch"],
+                                vocab=cfg.vocab))
+    sup = Supervisor(train_step, ds, args.ckpt_dir,
+                     ckpt_every=max(p["steps"] // 4, 10),
+                     injector=FailureInjector(
+                         at_steps=(p["steps"] // 2,)),   # chaos monkey
+                     async_ckpt=True)
+
+    t0 = time.perf_counter()
+    params, opt_state, rep = sup.run(params, opt_state, p["steps"])
+    dt = time.perf_counter() - t0
+    first, last = np.mean(rep.losses[:5]), np.mean(rep.losses[-5:])
+    print(f"done in {dt / 60:.1f} min "
+          f"({p['steps'] * p['batch'] * p['seq'] / dt:,.0f} tok/s); "
+          f"restarts={rep.restarts} (injected), replayed={rep.steps_replayed}")
+    print(f"loss: {first:.3f} → {last:.3f}")
+    assert last < first, "loss did not decrease"
+    print("OK: loss decreased through an injected failure + restore.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,22 @@
+# Assigned-architecture configs (one module per arch) + paper-app co-design
+# configs.  `get_config("<id>")` returns the exact published full-size
+# ModelConfig; `get_smoke("<id>")` a reduced same-family config for CPU
+# smoke tests.  See registry.py for shapes and input_specs().
+from .registry import (SHAPES, Arch, Shape, arch_ids, get_arch, get_config,
+                       get_smoke, input_specs, runnable, smoke_batch)
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (gemma2_2b, llama4_maverick, mixtral_8x22b, pixtral_12b,  # noqa: F401
+                   qwen15_4b, qwen3_0_6b, qwen3_4b, rwkv6_1_6b, whisper_tiny,
+                   zamba2_1_2b)
+
+
+__all__ = ["SHAPES", "Arch", "Shape", "arch_ids", "get_arch", "get_config",
+           "get_smoke", "input_specs", "runnable", "smoke_batch"]

@@ -1,0 +1,147 @@
+"""Architecture registry + assigned input-shape cells.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+provides the exact published full-size config, a reduced *smoke* config of
+the same family (CPU-runnable), and :func:`input_specs` returns weak-type-
+correct ``ShapeDtypeStruct`` stand-ins for every model input — shardable,
+no device allocation — exactly what ``launch/dryrun.py`` lowers against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import ModelConfig, init_cache
+
+# --------------------------------------------------------------------------
+# Shape cells
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k":    Shape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  Shape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   Shape("long_500k",  524_288,    1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: run for SSM/hybrid/linear-attn
+# (and SWA-bounded mixtral); skip for pure full-attention archs.  Recorded
+# in DESIGN.md §4.
+LONG_OK = ("rwkv6-1.6b", "zamba2-1.2b", "mixtral-8x22b")
+
+
+def runnable(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md §4)"
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    id: str
+    family: str
+    config: Callable[[], ModelConfig]
+    smoke: Callable[[], ModelConfig]
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, Arch] = {}
+
+
+def register(arch: Arch) -> Arch:
+    _REGISTRY[arch.id] = arch
+    return arch
+
+
+def get_arch(arch_id: str) -> Arch:
+    if arch_id not in _REGISTRY:
+        from . import _load_all   # lazy: populate on first use
+        _load_all()
+    return _REGISTRY[arch_id]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return get_arch(arch_id).config()
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return get_arch(arch_id).smoke()
+
+
+def arch_ids() -> Tuple[str, ...]:
+    from . import _load_all
+    _load_all()
+    return tuple(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> Dict[str, Any]:
+    """Stand-ins for every input of the step lowered for this cell.
+
+    train  → {"batch": {tokens, labels[, patches][, frames]}}
+    prefill→ {"batch": {tokens[, patches][, frames]}}
+    decode → {"tokens", "cache", "length"}
+    """
+    b, t = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: init_cache(cfg, b, t))
+        return {"tokens": _sds((b, 1), jnp.int32),
+                "cache": cache,
+                "length": _sds((), jnp.int32)}
+
+    batch: Dict[str, Any] = {}
+    t_text = t
+    if cfg.patch_tokens:                     # VLM stub: patch embeddings
+        t_text = t - cfg.patch_tokens
+        batch["patches"] = _sds((b, cfg.patch_tokens, cfg.d_model),
+                                cfg.param_dtype)
+    batch["tokens"] = _sds((b, t_text), jnp.int32)
+    if cfg.is_enc_dec:                       # audio stub: frame embeddings
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                               cfg.param_dtype)
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, t_text), jnp.int32)
+    return {"batch": batch}
+
+
+def smoke_batch(cfg: ModelConfig, batch: int = 2, seq: int = 32,
+                train: bool = True, seed: int = 0) -> Dict[str, jax.Array]:
+    """Concrete small batch for the reduced smoke configs (CPU)."""
+    key = jax.random.PRNGKey(seed)
+    out: Dict[str, jax.Array] = {}
+    t_text = seq - (cfg.patch_tokens or 0)
+    out["tokens"] = jax.random.randint(key, (batch, t_text), 0, cfg.vocab)
+    if cfg.patch_tokens:
+        out["patches"] = jax.random.normal(
+            key, (batch, cfg.patch_tokens, cfg.d_model), cfg.param_dtype)
+    if cfg.is_enc_dec:
+        out["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model), cfg.param_dtype)
+    if train:
+        out["labels"] = jax.random.randint(key, (batch, t_text), 0, cfg.vocab)
+    return out

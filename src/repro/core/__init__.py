@@ -1,0 +1,34 @@
+# The paper's primary contribution — the coarse-grain heterogeneous
+# performance-estimation toolchain: task tracing, HLS-analogue cost reports,
+# trace augmentation, the dataflow runtime simulator, co-design exploration,
+# and timeline export.  See DESIGN.md §1–2 for the Zynq→TPU mapping.
+from .regions import Access, Direction, Region, region_of
+from .taskgraph import Task, TaskGraph
+from .trace import Trace, TraceEvent, Tracer, task
+from .devices import DevicePool, SharedResource, SystemConfig, pod_system, zynq_system
+from .hlsreport import (HLSSynthesisModel, KernelReport, TPUConstants, TPU_V5E,
+                        XLACostModel, ZYNQ_7045_BUDGET, a9_smp_seconds, fits,
+                        smp_time_scale)
+from .augment import Eligibility, build_graph
+from .simulator import ScheduledTask, SimResult, Simulator, simulate
+from .estimator import (PerfEstimate, contention_time_model, estimate,
+                        reference_run, same_best, spearman_rank_correlation,
+                        speedup_table)
+from .codesign import Candidate, ExplorationResult, explore
+from .paraver import ascii_gantt, write_prv
+
+__all__ = [
+    "Access", "Direction", "Region", "region_of",
+    "Task", "TaskGraph",
+    "Trace", "TraceEvent", "Tracer", "task",
+    "DevicePool", "SharedResource", "SystemConfig", "pod_system", "zynq_system",
+    "HLSSynthesisModel", "KernelReport", "TPUConstants", "TPU_V5E",
+    "XLACostModel", "ZYNQ_7045_BUDGET", "a9_smp_seconds", "fits",
+    "smp_time_scale",
+    "Eligibility", "build_graph",
+    "ScheduledTask", "SimResult", "Simulator", "simulate",
+    "PerfEstimate", "contention_time_model", "estimate", "reference_run",
+    "same_best", "spearman_rank_correlation", "speedup_table",
+    "Candidate", "ExplorationResult", "explore",
+    "ascii_gantt", "write_prv",
+]

@@ -1,0 +1,296 @@
+"""Per-kernel, per-device cost reports — the "Vivado HLS report" analogue.
+
+The paper feeds its simulator with *cheap, static* reports obtained in
+seconds: HLS gives estimated compute cycles + input/output transfer cycles
+(+ resource usage) per kernel, the instrumented sequential run gives the SMP
+cost.  We provide three providers with the same output type:
+
+* :class:`HLSSynthesisModel` — an analytic Zynq-like model (pipeline-II
+  compute cycles, AXI-DMA transfer cycles, DSP/BRAM/LUT usage) calibrated so
+  the paper's feasibility statements hold (two 128×128 mxm accelerators do
+  NOT fit the fabric; two 64×64 ones do; one "full-resource" Cholesky kernel
+  excludes everything else; any two reduced Cholesky kernels fit).
+* :class:`XLACostModel` — lowers a JAX function with ``.lower().compile()``
+  and converts ``cost_analysis()`` FLOPs/bytes into seconds with TPU-v5e
+  constants.  This is the pod-scale "HLS report": static, pre-execution,
+  obtained in seconds instead of a full-scale run.
+* measured SMP costs come from ``Trace.mean_smp_cost()`` (see trace.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelReport:
+    """Static cost/resource report of one kernel on one device kind."""
+
+    kernel: str
+    device_kind: str
+    compute_s: float
+    dma_in_s: float = 0.0
+    dma_out_s: float = 0.0
+    resources: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    clock_hz: float = 0.0
+    meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def folded_cost(self) -> float:
+        """Accelerator occupancy when input transfers are folded (Fig. 3)."""
+        return self.dma_in_s + self.compute_s
+
+
+ReportKey = Tuple[str, str]  # (kernel name, device kind)
+ReportMap = Dict[ReportKey, KernelReport]
+
+
+# --------------------------------------------------------------------------
+# Zynq-7045-like fabric budget and analytic synthesis model
+# --------------------------------------------------------------------------
+
+ZYNQ_7045_BUDGET: Dict[str, float] = {
+    "dsp": 900.0,          # DSP48E1 slices
+    "bram_kb": 2452.0,     # 545 × 36Kb blocks
+    "lut": 218600.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HLSSynthesisModel:
+    """Analytic Vivado-HLS-like estimates for dense linear-algebra tiles.
+
+    Model: the inner loop is pipelined at II=1 with ``unroll`` parallel MAC
+    lanes → compute cycles ≈ MACs/unroll + ramp.  AXI DMA moves
+    ``bus_bytes_per_cycle`` per fabric cycle.  Resource usage grows linearly
+    in the MAC lanes (float ≈ 5 DSP/lane, double ≈ 14 DSP/lane) and local
+    buffers occupy BRAM.
+    """
+
+    clock_hz: float = 100e6
+    bus_bytes_per_cycle: float = 8.0
+    pipeline_ramp: float = 120.0
+    dsp_per_lane: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: {"float32": 5.0, "float64": 14.0})
+    lut_per_lane: float = 800.0
+    lut_base: float = 4500.0
+
+    def report(self, kernel: str, device_kind: str, *, macs: float,
+               in_bytes: float, out_bytes: float, buffer_bytes: float,
+               dtype: str = "float32", unroll: int = 16) -> KernelReport:
+        cycles = macs / max(unroll, 1) + self.pipeline_ramp
+        dsp = self.dsp_per_lane.get(dtype, 5.0) * unroll
+        lut = self.lut_base + self.lut_per_lane * unroll
+        bram_kb = buffer_bytes / 1024.0
+        return KernelReport(
+            kernel=kernel, device_kind=device_kind,
+            compute_s=cycles / self.clock_hz,
+            dma_in_s=(in_bytes / self.bus_bytes_per_cycle) / self.clock_hz,
+            dma_out_s=(out_bytes / self.bus_bytes_per_cycle) / self.clock_hz,
+            resources={"dsp": dsp, "bram_kb": bram_kb, "lut": lut},
+            clock_hz=self.clock_hz,
+            meta={"macs": macs, "unroll": unroll, "dtype": dtype})
+
+    # ---------------------------------------------------------------- tiles
+    def matmul_block(self, bs: int, dtype: str = "float32",
+                     unroll: Optional[int] = None,
+                     kind: Optional[str] = None) -> KernelReport:
+        """C[bs,bs] += A[bs,bs] @ B[bs,bs] — the paper's ``mxmBlock``."""
+        itemsize = 8 if dtype == "float64" else 4
+        unroll = unroll if unroll is not None else bs  # j-loop fully unrolled
+        return self.report(
+            f"mxm_block{bs}", kind_default(kind, f"fpga:mxm{bs}"),
+            macs=float(bs) ** 3,
+            in_bytes=3 * bs * bs * itemsize,      # A, B and C (inout) stream in
+            out_bytes=bs * bs * itemsize,
+            buffer_bytes=3 * bs * bs * itemsize,
+            dtype=dtype, unroll=unroll)
+
+    def cholesky_tile(self, op: str, bs: int, *, full_resources: bool = False,
+                      dtype: str = "float64",
+                      kind: Optional[str] = None) -> KernelReport:
+        """dgemm / dsyrk / dtrsm tile kernels of the Fig. 4 Cholesky.
+
+        ``full_resources`` doubles the MAC lanes — the paper's "FR" variants
+        that maximise fabric usage and therefore exclude other accelerators.
+        """
+        itemsize = 8 if dtype == "float64" else 4
+        macs = {
+            "dgemm": float(bs) ** 3,
+            "dsyrk": float(bs) ** 3 / 2.0 + bs * bs / 2.0,
+            "dtrsm": float(bs) ** 3 / 2.0 + bs * bs / 2.0,
+        }[op]
+        n_in = {"dgemm": 3, "dsyrk": 2, "dtrsm": 2}[op]
+        # FR ("full resources") maximises fabric usage: ~784/900 DSPs at 14
+        # DSP per f64 MAC lane, leaving no room for a second accelerator.
+        unroll = (56 if full_resources else 16)
+        suffix = "FR" if full_resources else f"{bs}"
+        return self.report(
+            f"{op}", kind_default(kind, f"fpga:{op}{suffix}"),
+            macs=macs,
+            in_bytes=n_in * bs * bs * itemsize,
+            out_bytes=bs * bs * itemsize,
+            buffer_bytes=n_in * bs * bs * itemsize,
+            dtype=dtype, unroll=unroll)
+
+
+def kind_default(kind: Optional[str], default: str) -> str:
+    return kind if kind is not None else default
+
+
+def _report_with_kernel_name(report: KernelReport, kernel: str) -> KernelReport:
+    return dataclasses.replace(report, kernel=kernel)
+
+
+def fits(reports_and_counts: Mapping[KernelReport, int] | list,
+         budget: Mapping[str, float] = ZYNQ_7045_BUDGET) -> bool:
+    """Feasibility check: Σ resource usage ≤ fabric budget.
+
+    Accepts either a mapping report→count or a list of (report, count).
+    Reproduces e.g. "two 128×128 mxm accelerators do not fit".
+    """
+    items = reports_and_counts.items() if hasattr(reports_and_counts, "items") \
+        else reports_and_counts
+    usage: Dict[str, float] = {}
+    for rep, count in items:
+        for res, amount in rep.resources.items():
+            usage[res] = usage.get(res, 0.0) + amount * count
+    return all(usage.get(res, 0.0) <= cap for res, cap in budget.items())
+
+
+# --------------------------------------------------------------------------
+# TPU-v5e constants + XLA-compile-based cost reports (pod-scale "HLS")
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUConstants:
+    """Per-chip peak numbers used by every roofline/cost conversion."""
+
+    peak_flops: float = 197e12      # bf16 MXU
+    hbm_bw: float = 819e9           # bytes/s
+    ici_bw: float = 50e9            # bytes/s per link direction
+    vmem_bytes: float = 128 * 2**20
+    mxu_flops_efficiency: float = 0.8   # sustained fraction on large matmuls
+    name: str = "tpu_v5e"
+
+
+TPU_V5E = TPUConstants()
+
+
+class XLACostModel:
+    """Static per-function cost reports from ``.lower().compile()``.
+
+    The compile step takes seconds (like an HLS synthesis pass) and yields
+    FLOPs + bytes-accessed without ever running or allocating — this is what
+    makes the whole methodology "minutes instead of hours" at pod scale.
+    """
+
+    def __init__(self, constants: TPUConstants = TPU_V5E):
+        self.constants = constants
+
+    def analyze(self, fn: Callable[..., Any], *args: Any,
+                static_argnums: Tuple[int, ...] = (), **kwargs: Any) -> Dict[str, float]:
+        import jax
+        lowered = jax.jit(fn, static_argnums=static_argnums).lower(*args, **kwargs)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+            cost = cost[0] if cost else {}
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+
+    def report(self, kernel: str, fn: Callable[..., Any], *args: Any,
+               device_kind: str = "tpu", in_bytes: float = 0.0,
+               out_bytes: float = 0.0, **kwargs: Any) -> KernelReport:
+        a = self.analyze(fn, *args, **kwargs)
+        c = self.constants
+        compute_s = max(a["flops"] / (c.peak_flops * c.mxu_flops_efficiency),
+                        a["bytes"] / c.hbm_bw)
+        return KernelReport(
+            kernel=kernel, device_kind=device_kind, compute_s=compute_s,
+            dma_in_s=in_bytes / c.ici_bw, dma_out_s=out_bytes / c.ici_bw,
+            resources={}, clock_hz=0.0,
+            meta={"flops": a["flops"], "bytes": a["bytes"]})
+
+
+# --------------------------------------------------------------------------
+# SMP calibration: this container's CPU → the target board's ARM A9
+# --------------------------------------------------------------------------
+
+# Single-core ARM Cortex-A9 @667MHz running -O3 naive tiled sgemm sustains
+# ~0.35 GFLOP/s (double: ~0.18).  The instrumented sequential run measures
+# *relative* per-kernel costs on the build host; this ratio rescales them to
+# the target SMP — the standard cross-compilation timing calibration.
+A9_SGEMM_GFLOPS = 0.35
+A9_DGEMM_GFLOPS = 0.18
+
+_host_gflops_cache: Dict[Tuple[str, int], float] = {}
+
+
+def host_gemm_gflops(dtype: str = "float32", n: int = 64, repeats: int = 20) -> float:
+    """Measure this host's numpy GEMM throughput at block size ``n`` (cached).
+
+    Calibrating at the *kernel's own* block size matters: a 64×64 ``np.dot``
+    runs far below machine peak (call overhead, no blocking), which is
+    exactly the regime the traced app kernels execute in.
+    """
+    key = (dtype, n)
+    if key in _host_gflops_cache:
+        return _host_gflops_cache[key]
+    import numpy as np
+    import time
+    # Same workload *form* as the traced kernels (C += A @ B over distinct
+    # buffers, mean not best-of) so host-measured task times and the
+    # calibration constant describe the same regime.
+    rng = np.random.default_rng(0)
+    sets = [(np.asarray(rng.standard_normal((n, n)), dtype=dtype),
+             np.asarray(rng.standard_normal((n, n)), dtype=dtype),
+             np.zeros((n, n), dtype=dtype)) for _ in range(8)]
+    sets[0][2].__iadd__(sets[0][0] @ sets[0][1])  # warm-up
+    t0 = time.perf_counter()
+    iters = 0
+    while iters < repeats:
+        for a, b, c in sets:
+            c += a @ b
+        iters += 1
+    mean = (time.perf_counter() - t0) / (iters * len(sets))
+    gflops = (2.0 * n ** 3 / mean) / 1e9
+    _host_gflops_cache[key] = gflops
+    return gflops
+
+
+def a9_smp_seconds(dtype: str = "float32"):
+    """``TraceEvent -> seconds`` model of the target SMP (single A9 core).
+
+    The paper's instrumented run measures task times *on the target ARM*;
+    building on a foreign host we emulate that measurement by mapping each
+    task's recorded work (FLOPs, from the @task ``work`` model) to sustained
+    A9 throughput.  Tiny-BLAS host timings do not transfer across platforms
+    (LAPACK call overhead dominates 64×64 kernels on x86 but not naive -O3
+    loops on the A9), so this is the honest calibration.
+    """
+    gflops = A9_SGEMM_GFLOPS if dtype == "float32" else A9_DGEMM_GFLOPS
+
+    def fn(event) -> float:  # noqa: ANN001 — TraceEvent
+        if event.flops <= 0:
+            raise ValueError(f"event {event.name} has no recorded work; "
+                             f"annotate the @task with a 'work' model")
+        return event.flops / (gflops * 1e9)
+
+    return fn
+
+
+def smp_time_scale(dtype: str = "float32", bs: int = 64) -> float:
+    """Factor mapping host-measured kernel seconds → target-A9 seconds.
+
+    The instrumented run measures *relative* per-kernel costs on the build
+    host; this single calibration constant rescales them to the target SMP
+    (ARM A9) — standard cross-compilation timing practice.
+    """
+    target = A9_SGEMM_GFLOPS if dtype == "float32" else A9_DGEMM_GFLOPS
+    return max(host_gemm_gflops(dtype, bs) / target, 1.0)

@@ -1,0 +1,176 @@
+"""Framework-level estimator: a pod training/serving step as a coarse task
+graph (DESIGN.md §2, level 2).
+
+This is the paper's methodology applied to the framework itself.  The
+correspondence:
+
+  Vivado HLS report   →  dry-run probe artifacts (per-layer FLOPs / bytes /
+                          collective wire bytes, launch/dryrun.py)
+  OmpSs task trace    →  the layer structure of the step (embed → L×block →
+                          head/optimizer), known statically from the config
+  accelerator slots   →  the per-chip MXU+HBM timeline ("tpu" pool)
+  shared output-DMA   →  the per-chip ICI link pair ("ici"), and the
+                          inter-pod DCI ("dci") for multi-pod runs
+  task creation cost  →  host dispatch of the step ("smp")
+  bitstream per config→  full-scale 512-chip compile/retune per candidate
+
+One ``estimate_step`` call builds the graph and runs the same
+discrete-event simulator the paper-faithful level uses (core/simulator.py),
+giving a predicted step time, a per-resource utilization/bottleneck
+breakdown, and a Paraver/ASCII timeline — in milliseconds, against hours of
+full-scale tuning.  ``codesign_sweep`` ranks sharding candidates exactly
+the way the paper ranks accelerator configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from ..roofline.model import HW, V5E, extrapolate_terms, _terms_of
+from .devices import DevicePool, SharedResource, SystemConfig
+from .simulator import SimResult, simulate
+from .taskgraph import Task, TaskGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCosts:
+    """Per-layer and outside-loop (head: embed/logits/optimizer) costs, in
+    seconds, derived from two unrolled dry-run probes."""
+
+    n_layers: int
+    layer_compute: float          # max(flops/peak, bytes/hbm) per layer
+    layer_collective: float       # ring wire time per layer on ICI
+    head_compute: float
+    head_collective: float
+    dci_collective: float = 0.0   # inter-pod gradient reduction (multi-pod)
+
+    @staticmethod
+    def from_probes(probe1: Mapping, probe2: Mapping, full_layers: int,
+                    hw: HW = V5E, pods: int = 1,
+                    params: Optional[int] = None) -> "LayerCosts":
+        l1, l2 = probe1["n_layers"], probe2["n_layers"]
+        t1, t2 = _terms_of(probe1), _terms_of(probe2)
+        slope = {k: (t2[k] - t1[k]) / max(l2 - l1, 1) for k in t1}
+        # negative slope = compiler strategy flip at the smallest depth;
+        # fall back to proportional from the larger probe
+        slope = {k: (s if s >= 0 else t2[k] / l2) for k, s in slope.items()}
+        icept = {k: max(t1[k] - slope[k] * l1, 0.0) for k in t1}
+        # layer cost = MXU time.  The XLA-CPU 'bytes accessed' term is an
+        # unfused upper bound (see roofline/analytic.py) — folding it in
+        # would make every estimate spuriously memory-bound, so the HBM
+        # floor is reported by the roofline table instead of double-counted
+        # here.
+        per_unit = lambda s: s["flops"] / hw.peak_flops
+        dci = 0.0
+        if pods > 1 and params is not None:
+            # hierarchical gradient reduction: the inter-pod hop moves each
+            # chip's grad shard once up + once down over the DCI
+            n_chips = 256 * pods
+            dci = 2.0 * (params * 2 / n_chips) / hw.dci_bw
+        return LayerCosts(
+            n_layers=full_layers,
+            layer_compute=per_unit(slope),
+            layer_collective=slope["wire"] / hw.link_bw,
+            head_compute=per_unit(icept),
+            head_collective=icept["wire"] / hw.link_bw,
+            dci_collective=dci)
+
+
+def pod_chip_system(name: str = "v5e-chip", pods: int = 1,
+                    dispatch_cost: float = 10e-6) -> SystemConfig:
+    """The per-chip resource model: one MXU+HBM slot, one ICI link pair,
+    one DCI uplink (multi-pod), and the host dispatch queue."""
+    pools = [DevicePool("host", ("smp",), 1),
+             DevicePool("tpu", ("tpu",), 1)]
+    shared = [SharedResource("ici", 1)]
+    if pods > 1:
+        shared.append(SharedResource("dci", 1))
+    return SystemConfig(name=name, pools=pools, shared=shared,
+                        overlap_inputs=True, overlap_outputs=True,
+                        task_creation_cost=dispatch_cost,
+                        meta={"pods": pods})
+
+
+def build_step_graph(costs: LayerCosts, *, overlap: bool = True,
+                     pods: int = 1) -> TaskGraph:
+    """Layer chain with per-layer ICI collectives.
+
+    ``overlap=False`` — blocking collectives: layer l+1 waits for layer l's
+    collective (the naïve schedule).  ``overlap=True`` — each collective
+    only blocks the layer *after* the next (double-buffered prefetch /
+    overlapped all-gather), the paper's "input transfers overlap" behaviour
+    mapped to ICI.
+    """
+    g = TaskGraph()
+
+    def add(name: str, kind: str, cost: float, deps: Sequence[int]) -> int:
+        uid = g.new_uid()
+        t = Task(uid=uid, name=name, devices=(kind,), costs={kind: cost},
+                 creation_index=uid, meta={"role": "compute"})
+        g.add_task(t, infer_deps=False)
+        for d in deps:
+            g.add_edge(d, uid)
+        return uid
+
+    dispatch = add("dispatch", "smp", 10e-6, [])
+    prev_layer = dispatch
+    prev_coll: Optional[int] = None
+    prev_prev_coll: Optional[int] = None
+    for l in range(costs.n_layers):
+        deps = [prev_layer]
+        gate = prev_coll if not overlap else prev_prev_coll
+        if gate is not None:
+            deps.append(gate)
+        layer = add(f"layer{l}", "tpu", costs.layer_compute, deps)
+        coll = None
+        if costs.layer_collective > 0:
+            coll = add(f"coll{l}", "ici", costs.layer_collective, [layer])
+        prev_layer = layer
+        prev_prev_coll = prev_coll
+        prev_coll = coll
+
+    head_deps = [prev_layer] + ([prev_coll] if prev_coll else [])
+    head = add("head", "tpu", costs.head_compute, head_deps)
+    if costs.head_collective > 0:
+        head = add("head_coll", "ici", costs.head_collective, [head])
+    if pods > 1 and costs.dci_collective > 0:
+        add("grad_xpod", "dci", costs.dci_collective, [head])
+    return g
+
+
+@dataclasses.dataclass
+class StepEstimate:
+    arch: str
+    shape: str
+    variant: str
+    makespan_s: float
+    sim: SimResult
+    costs: LayerCosts
+
+    def summary(self) -> Dict[str, object]:
+        d = self.sim.summary()
+        d.update(arch=self.arch, shape=self.shape, variant=self.variant,
+                 predicted_step_s=self.makespan_s)
+        return d
+
+
+def estimate_step(arch: str, shape: str, probe1: Mapping, probe2: Mapping,
+                  full_layers: int, *, overlap: bool = True, pods: int = 1,
+                  params: Optional[int] = None, hw: HW = V5E,
+                  variant: str = "") -> StepEstimate:
+    costs = LayerCosts.from_probes(probe1, probe2, full_layers, hw,
+                                   pods=pods, params=params)
+    g = build_step_graph(costs, overlap=overlap, pods=pods)
+    sim = simulate(g, pod_chip_system(pods=pods), policy="eft")
+    return StepEstimate(arch=arch, shape=shape, variant=variant,
+                        makespan_s=sim.makespan, sim=sim, costs=costs)
+
+
+def codesign_sweep(candidates: Mapping[str, Tuple[Mapping, Mapping, int]],
+                   arch: str, shape: str, **kw) -> List[StepEstimate]:
+    """Rank sharding/mesh candidates by predicted step time — the paper's
+    co-design loop with "regenerate bitstream" replaced by "re-lower"."""
+    out = [estimate_step(arch, shape, p1, p2, nl, variant=name, **kw)
+           for name, (p1, p2, nl) in candidates.items()]
+    out.sort(key=lambda e: e.makespan_s)
+    return out

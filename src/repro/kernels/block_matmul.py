@@ -1,0 +1,62 @@
+"""MXU-tiled block matmul — the paper's ``mxmBlock`` kernel, TPU-native.
+
+Hardware adaptation (DESIGN.md §2): the paper's FPGA accelerator streams
+BS×BS blocks into BRAM and pipelines MACs at II=1 with a ``BS``-lane unroll.
+The TPU analogue re-thinks the same tiling for the memory hierarchy here:
+HBM → VMEM block copies (the BlockSpec index maps below take the role of the
+AXI DMA descriptors) and a 128×128 systolic MXU instead of DSP MAC lanes —
+so blocks are multiples of 128 and the K-reduction runs as the innermost
+sequential grid dimension accumulating into a VMEM scratch tile in f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128,
+                 out_dtype=None, interpret: bool = False) -> jax.Array:
+    """``a @ b`` with explicit (block_m, block_n, block_k) VMEM tiling.
+
+    Shapes must be multiples of the block sizes — ``ops.matmul`` pads.
+    Accumulation is always f32 (MXU native); output casts to ``out_dtype``.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"shapes {a.shape}x{b.shape} not multiples of "
+                         f"blocks ({block_m},{block_n},{block_k})")
+    out_dtype = out_dtype or a.dtype
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

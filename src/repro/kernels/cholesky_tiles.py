@@ -1,0 +1,102 @@
+"""Tile kernels of the Fig. 4 Cholesky, TPU-native.
+
+The paper instantiates dgemm/dsyrk/dtrsm tile accelerators in the FPGA
+fabric; here the same tiles become Pallas kernels (dpotrf stays on the host
+path exactly as the paper keeps it on the SMP):
+
+* ``syrk_tile`` — C -= AᵀA, one (bs × bs) block fully resident in VMEM,
+  single MXU contraction.
+* ``trsm_tile`` — B ← A⁻ᵀB (A upper-triangular) by blocked forward
+  substitution: panels of ``panel`` rows are solved with a small triangular
+  inverse and the trailing update runs on the MXU — row-recurrence work is
+  minimised because the MXU prefers panel updates over scalar loops.
+
+(dgemm_tile is ``block_matmul`` with a flipped sign — see ops.py.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _syrk_kernel(a_ref, c_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (c - jax.lax.dot_general(
+        a, a, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)).astype(o_ref.dtype)
+
+
+def syrk_tile(a: jax.Array, c: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """C - AᵀA for one (bs, bs) tile resident in VMEM."""
+    bs = a.shape[0]
+    if a.shape != c.shape or a.shape != (bs, bs):
+        raise ValueError(f"syrk tile shapes {a.shape} vs {c.shape}")
+    return pl.pallas_call(
+        _syrk_kernel,
+        in_specs=[pl.BlockSpec(a.shape, lambda: (0, 0)),
+                  pl.BlockSpec(c.shape, lambda: (0, 0))],
+        out_specs=pl.BlockSpec(c.shape, lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(c.shape, c.dtype),
+        interpret=interpret,
+    )(a, c)
+
+
+def _trsm_kernel(a_ref, b_ref, o_ref, x_ref, *, bs: int, panel: int):
+    """Solve AᵀX = B for X with A upper-triangular (so Aᵀ lower)."""
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    x_ref[...] = b
+    n_panels = bs // panel
+
+    def body(p, _):
+        start = p * panel
+        # triangular sub-block L_pp = A[start:start+panel, start:...]^T
+        a_pp = jax.lax.dynamic_slice(a, (start, start), (panel, panel))
+        l_pp = a_pp.T
+        # invert the small lower-triangular panel by forward substitution
+        # on the identity (unrolled: panel is a compile-time constant)
+        eye = jnp.eye(panel, dtype=jnp.float32)
+        inv = jnp.zeros((panel, panel), jnp.float32)
+        for i in range(panel):
+            row = (eye[i] - l_pp[i] @ inv) / l_pp[i, i]
+            inv = inv.at[i].set(row)
+        rhs = x_ref[pl.ds(start, panel), :]
+        x_p = inv @ rhs
+        x_ref[pl.ds(start, panel), :] = x_p
+        # trailing update: B[start+panel:] -= L[start+panel:, panel] @ x_p
+        @pl.when(p < n_panels - 1)
+        def _update():
+            tail = (p + 1) * panel
+            l_tail = jax.lax.dynamic_slice(
+                a, (start, 0), (panel, bs)).T      # (bs, panel) of L columns
+            upd = l_tail @ x_p                      # rows < tail are garbage
+            mask = (jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0) >= tail)
+            x_ref[...] = x_ref[...] - jnp.where(mask, upd, 0.0)
+        return _
+
+    jax.lax.fori_loop(0, n_panels, body, None, unroll=False)
+    o_ref[...] = x_ref[...].astype(o_ref.dtype)
+
+
+def trsm_tile(a: jax.Array, b: jax.Array, *, panel: int = 16,
+              interpret: bool = False) -> jax.Array:
+    """A⁻ᵀ B for one (bs, bs) tile, A upper-triangular."""
+    bs = a.shape[0]
+    if a.shape != (bs, bs) or b.shape[0] != bs:
+        raise ValueError(f"trsm tile shapes {a.shape} vs {b.shape}")
+    if bs % panel:
+        raise ValueError(f"bs={bs} not a multiple of panel={panel}")
+    return pl.pallas_call(
+        functools.partial(_trsm_kernel, bs=bs, panel=panel),
+        in_specs=[pl.BlockSpec(a.shape, lambda: (0, 0)),
+                  pl.BlockSpec(b.shape, lambda: (0, 0))],
+        out_specs=pl.BlockSpec(b.shape, lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        scratch_shapes=[pltpu.VMEM(b.shape, jnp.float32)],
+        interpret=interpret,
+    )(a, b)

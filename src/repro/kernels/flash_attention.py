@@ -1,0 +1,116 @@
+"""Fused attention (flash-style) for TPU — the LM substrate's prefill hot-spot.
+
+Supports the assigned architectures' attention variants in one kernel:
+  * GQA (query-head groups sharing one KV head),
+  * causal masking,
+  * sliding-window attention (mixtral-8x22b spec, gemma2 local layers),
+  * logit soft-capping (gemma2).
+
+Tiling: queries in (block_q × head_dim) VMEM tiles, keys/values streamed in
+(block_k × head_dim) tiles along the innermost sequential grid dimension with
+the online-softmax running max/denominator kept in VMEM scratch.  Lane-width
+constants follow the TPU vector layout (8×128); head_dim is expected to be a
+multiple of 128 after padding by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  block_q: int, block_k: int, k_steps: int):
+    i = pl.program_id(1)   # query block
+    j = pl.program_id(2)   # key block (sequential, innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0].astype(jnp.float32)            # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, :1]                   # (bq, 1) replicated lanes
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # masked lanes -> exp(-inf)=0
+    correction = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...][:, :1] * correction + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * correction + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == k_steps - 1)
+    def _flush():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)          # fully-masked row guard
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, T, D) — queries flattened over batch×heads;
+    k/v: (BKV, S, D) with BH = BKV × group (GQA).  Returns (BH, T, D).
+
+    T, S must be multiples of the block sizes (``ops.attention`` pads).
+    """
+    bh, t, d = q.shape
+    bkv, s, dk = k.shape
+    if dk != d or v.shape != k.shape or bh % bkv:
+        raise ValueError(f"bad attention shapes q={q.shape} k={k.shape}")
+    group = bh // bkv
+    if t % block_q or s % block_k:
+        raise ValueError(f"T={t}, S={s} not multiples of ({block_q},{block_k})")
+    scale = scale if scale is not None else d ** -0.5
+    grid = (bh, t // block_q, s // block_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, block_q=block_q,
+                          block_k=block_k, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

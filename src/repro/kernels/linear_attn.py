@@ -1,0 +1,113 @@
+"""Chunked decayed linear attention — RWKV6 ("Finch") / GLA / Mamba2 kernel.
+
+Recurrence per head (state S ∈ R^{dk×dv}):
+
+    o_t = r_t S_{t-1} + ((r_t ⊙ u) · k_t) v_t
+    S_t = diag(w_t) S_{t-1} + kᵀ_t v_t
+
+with a data-dependent per-channel decay w_t ∈ (0,1]^{dk} (RWKV6), a scalar
+per-head decay broadcast over dk (Mamba2/SSD), and a "current token bonus"
+u ∈ R^{dk} (RWKV6; zero for GLA/Mamba2).
+
+Chunked closed form over a chunk of length C (A_t = Σ_{s≤t} log w_s):
+
+    intra[t] = Σ_{s<t} (r_t · exp(A_{t-1}-A_s) ⊙ k_s) v_s + ((r_t⊙u)·k_t) v_t
+    inter[t] = (r_t ⊙ exp(A_{t-1})) S_0
+    S_C      = diag(exp(A_C)) S_0 + Σ_s (k_s ⊙ exp(A_C - A_s))ᵀ v_s
+
+Every exponent above is ≤ 0, so the kernel is overflow-safe for arbitrarily
+strong decay (RWKV6's w can reach e^{-7} per step) without log-space
+matmuls.  The intra-chunk pairwise decay is materialised as a (C, C, dk)
+VMEM tensor — 512 KB at C=32, dk=128 — which trades VMEM for MXU-friendly
+contractions; a production TPU kernel would secondary-chunk this (noted in
+EXPERIMENTS.md §Perf).
+
+Grid: (batch×heads, T/C) — the chunk dimension is sequential on TPU, so the
+running state lives in VMEM scratch across grid steps (reset at chunk 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _linear_attn_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref,
+                        state_ref, *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)      # (C, dk)
+    k = k_ref[0].astype(jnp.float32)      # (C, dk)
+    v = v_ref[0].astype(jnp.float32)      # (C, dv)
+    w = w_ref[0].astype(jnp.float32)      # (C, dk)
+    u = u_ref[0].astype(jnp.float32)      # (1, dk) broadcastable bonus
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    a_inc = jnp.cumsum(logw, axis=0)              # A_t (inclusive)
+    a_exc = a_inc - logw                          # A_{t-1} (exclusive)
+    a_end = a_inc[-1:, :]                         # A_C
+
+    # ---- inter-chunk: previous state, decayed to each position ------------
+    r_dec = r * jnp.exp(a_exc)                    # exponent <= 0
+    inter = jax.lax.dot(r_dec, state_ref[...],
+                        preferred_element_type=jnp.float32)   # (C, dv)
+
+    # ---- intra-chunk: pairwise-safe decayed scores -------------------------
+    # D[t, s, :] = exp(A_{t-1} - A_s)  for s < t   (exponent <= 0)
+    diff = a_exc[:, None, :] - a_inc[None, :, :]             # (C, C, dk)
+    pos_t = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    pos_s = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = (pos_s < pos_t)[:, :, None]
+    dec = jnp.where(strict, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    scores = jnp.einsum("td,sd,tsd->ts", r, k, dec,
+                        preferred_element_type=jnp.float32)   # (C, C)
+    bonus = jnp.sum(r * u * k, axis=-1)                       # (C,)
+    scores += jnp.diag(bonus)
+    intra = jax.lax.dot(scores, v, preferred_element_type=jnp.float32)
+
+    o_ref[0] = (inter + intra).astype(o_ref.dtype)
+
+    # ---- state update -------------------------------------------------------
+    k_dec = k * jnp.exp(a_end - a_inc)            # exponent <= 0
+    state_ref[...] = (jnp.exp(a_end).T * state_ref[...] +
+                      jax.lax.dot(k_dec.T, v,
+                                  preferred_element_type=jnp.float32))
+
+
+def linear_attention(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                     u: jax.Array, *, chunk: int = 32,
+                     interpret: bool = False) -> jax.Array:
+    """r/k/w: (BH, T, dk); v: (BH, T, dv); u: (H, dk) with BH = B×H.
+
+    T must be a multiple of ``chunk`` (``ops.linear_attn`` pads).
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    h = u.shape[0]
+    if t % chunk:
+        raise ValueError(f"T={t} not a multiple of chunk={chunk}")
+    if bh % h:
+        raise ValueError(f"BH={bh} not divisible by heads={h}")
+    grid = (bh, t // chunk)
+    return pl.pallas_call(
+        functools.partial(_linear_attn_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk), lambda b, c, hh=h: (b % hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dv), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,127 @@
+"""Public, jit-friendly wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the compiled kernels run natively; on CPU
+(this container) they execute with ``interpret=True`` — same kernel body,
+Python evaluation — so every call path is exercised end-to-end.  Wrappers
+pad inputs to the kernels' tiling requirements and slice the result back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .block_matmul import block_matmul
+from .cholesky_tiles import syrk_tile, trsm_tile
+from .flash_attention import flash_attention
+from .linear_attn import linear_attention as linear_attention_kernel
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128,
+           interpret: bool | None = None) -> jax.Array:
+    """Padded tiled matmul; falls back to small blocks for small operands."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    block_k = min(block_k, max(8, k))
+    a, m0 = _pad_to(a, 0, block_m)
+    a, _ = _pad_to(a, 1, block_k)
+    b, _ = _pad_to(b, 0, block_k)
+    b, n0 = _pad_to(b, 1, block_n)
+    out = block_matmul(a, b, block_m=block_m, block_n=block_n,
+                       block_k=block_k, interpret=interpret)
+    return out[:m0, :n0]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, softcap: float = 0.0,
+              block_q: int = 128, block_k: int = 128,
+              interpret: bool | None = None) -> jax.Array:
+    """Flash attention with padding.  q: (BH, T, D); k/v: (BKV, S, D)."""
+    interpret = default_interpret() if interpret is None else interpret
+    bh, t, d = q.shape
+    scale = d ** -0.5                      # scale by true head_dim, pre-pad
+    block_q = min(block_q, max(8, t))
+    block_k = min(block_k, max(8, k.shape[1]))
+    q, t0 = _pad_to(q, 1, block_q)
+    k, s0 = _pad_to(k, 1, block_k)
+    v, _ = _pad_to(v, 1, block_k)
+    # padded key positions must never win the softmax: they sit at positions
+    # >= s0, and causal masking handles them iff t0 == s0; otherwise mask by
+    # zero-padding k (logit 0 can still win) -> use explicit window/causal
+    # guard: pad keys get k_pos > any valid q_pos under causal when s0 <= t0.
+    if not causal and k.shape[1] != s0:
+        raise NotImplementedError("non-causal padded attention unsupported")
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, scale=scale, block_q=block_q,
+                          block_k=block_k, interpret=interpret)
+    return out[:, :t0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def linear_attn(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                u: jax.Array, *, chunk: int = 32,
+                interpret: bool | None = None) -> jax.Array:
+    """Chunked decayed linear attention with padding on T."""
+    interpret = default_interpret() if interpret is None else interpret
+    bh, t, dk = r.shape
+    chunk = min(chunk, max(8, t))
+    r, t0 = _pad_to(r, 1, chunk)
+    k, _ = _pad_to(k, 1, chunk)
+    v, _ = _pad_to(v, 1, chunk)
+    w, _ = _pad_to(w, 1, chunk)
+    # padded decay must be 1.0 (log 0) so it neither decays state nor divides
+    if r.shape[1] != t0:
+        pad_mask = jnp.arange(r.shape[1]) >= t0
+        w = jnp.where(pad_mask[None, :, None], 1.0, w)
+    out = linear_attention_kernel(r, k, v, w, u, chunk=chunk,
+                                  interpret=interpret)
+    return out[:, :t0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def syrk(a: jax.Array, c: jax.Array, *, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return syrk_tile(a, c, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("panel", "interpret"))
+def trsm(a: jax.Array, b: jax.Array, *, panel: int = 16,
+         interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return trsm_tile(a, b, panel=panel, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gemm_update(a: jax.Array, b: jax.Array, c: jax.Array, *,
+                interpret: bool | None = None):
+    """C - BᵀA — the Cholesky dgemm tile, via the tiled matmul kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    bs = a.shape[0]
+    block = min(128, bs)
+    prod = matmul(b.T, a, block_m=block, block_n=block, block_k=block,
+                  interpret=interpret)
+    return (c.astype(jnp.float32) - prod.astype(jnp.float32)).astype(c.dtype)

@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function computes the mathematically-defined result with no tiling,
+fusion or online accumulation, so kernel bugs cannot hide in shared code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, softcap: float = 0.0,
+              scale: float | None = None) -> jax.Array:
+    """q: (BH, T, D); k/v: (BKV, S, D); GQA by head-group replication."""
+    bh, t, d = q.shape
+    bkv, s, _ = k.shape
+    group = bh // bkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(t)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hts,hsd->htd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def linear_attention(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                     u: jax.Array) -> jax.Array:
+    """Exact step-by-step recurrence (lax.scan over time).
+
+    r/k/w: (BH, T, dk); v: (BH, T, dv); u: (H, dk), BH = B×H.
+    """
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    h = u.shape[0]
+    u_full = jnp.tile(u, (bh // h, 1))                    # (BH, dk)
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs                            # (BH, dk/dv)
+        bonus = jnp.sum(r_t * u_full * k_t, axis=-1)       # (BH,)
+        o_t = jnp.einsum("bk,bkv->bv", r_t, state) + bonus[:, None] * v_t
+        state = w_t[:, :, None] * state + k_t[:, :, None] * v_t[:, None, :]
+        return state, o_t
+
+    xs = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(w, 1, 0).astype(jnp.float32))
+    state0 = jnp.zeros((bh, dk, dv), jnp.float32)
+    _, o = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype)
+
+
+def linear_attention_state(r, k, v, w, u):
+    """Final state too (for decode-cache tests): (out, state)."""
+    bh, t, dk = r.shape
+    dv = v.shape[-1]
+    h = u.shape[0]
+    u_full = jnp.tile(u, (bh // h, 1))
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs
+        bonus = jnp.sum(r_t * u_full * k_t, axis=-1)
+        o_t = jnp.einsum("bk,bkv->bv", r_t, state) + bonus[:, None] * v_t
+        state = w_t[:, :, None] * state + k_t[:, :, None] * v_t[:, None, :]
+        return state, o_t
+
+    xs = tuple(jnp.moveaxis(x, 1, 0).astype(jnp.float32) for x in (r, k, v, w))
+    state, o = jax.lax.scan(step, jnp.zeros((bh, dk, dv), jnp.float32), xs)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype), state
+
+
+def syrk(a: jax.Array, c: jax.Array) -> jax.Array:
+    return (c.astype(jnp.float32) -
+            a.astype(jnp.float32).T @ a.astype(jnp.float32)).astype(c.dtype)
+
+
+def trsm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """A⁻ᵀ B, A upper-triangular."""
+    return jax.scipy.linalg.solve_triangular(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        trans="T", lower=False).astype(b.dtype)

@@ -1,0 +1,4 @@
+# Launchers: production mesh construction, the multi-pod dry-run driver,
+# and the train/serve entry points.  NOTE: dryrun.py sets XLA_FLAGS for 512
+# placeholder devices and must be the process entry (python -m
+# repro.launch.dryrun); nothing here mutates device state at import time.

@@ -1,0 +1,38 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state).
+
+Production target: TPU v5e pods, 256 chips per pod in a 16×16 ICI torus.
+Single-pod mesh ``(data=16, model=16)``; multi-pod ``(pod=2, data=16,
+model=16)`` — the "pod" axis crosses the DCI and composes with "data" for
+hierarchical gradient reduction.  ``mesh_variant`` exposes the alternative
+single-pod factorizations the §Perf hillclimb sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_variant(data: int, model: int, pods: int = 1):
+    """Alternative (data, model) factorization at the same chip count."""
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def smoke_mesh(data: Optional[int] = None, model: int = 1):
+    """Tiny mesh over whatever devices exist (tests: 1 CPU device)."""
+    n = jax.device_count()
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def describe(mesh) -> str:
+    return "×".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)

@@ -1,0 +1,6 @@
+# Model substrate: pure-JAX, pjit-shardable definitions of every assigned
+# architecture family.  Parameters are plain pytrees (nested dicts of
+# arrays); sharding is attached by path-based rules in parallel/sharding.py.
+from . import attention, layers, linear_blocks, moe, transformer
+
+__all__ = ["attention", "layers", "linear_blocks", "moe", "transformer"]

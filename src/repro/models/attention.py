@@ -1,0 +1,215 @@
+"""Attention: GQA with qk-norm / rotary / sliding-window / soft-capping.
+
+Three interchangeable inner implementations:
+
+* ``impl="naive"``   — materialises (T, S) logits; oracle + tiny shapes.
+* ``impl="chunked"`` — flash-style online softmax as a ``lax.scan`` over key
+  chunks in pure jnp: O(T·chunk) live memory, compile-time O(1) in sequence
+  length.  This is the production path for dry-runs/CPU (same FLOPs as the
+  Pallas kernel, so roofline terms are representative).
+* ``impl="kernel"``  — the Pallas flash kernel (TPU hot path).
+
+Decode (q_len == 1 against a KV cache) uses a dedicated einsum path; XLA's
+partitioner turns its softmax reductions into collectives when the cache is
+sequence-sharded (long-context shapes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init, rotary
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- params --
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.float32, qk_norm: bool = False,
+              qkv_bias: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, n_heads * head_dim, dtype, bias=qkv_bias),
+        "wk": dense_init(ks[1], d, n_kv * head_dim, dtype, bias=qkv_bias),
+        "wv": dense_init(ks[2], d, n_kv * head_dim, dtype, bias=qkv_bias),
+        "wo": dense_init(ks[3], n_heads * head_dim, d, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+# ------------------------------------------------------------ inner impls --
+
+def _mask(t: int, s: int, offset: int, causal: bool, window: int):
+    q_pos = offset + jnp.arange(t)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    m = jnp.ones((t, s), bool)
+    if causal:
+        m &= k_pos <= q_pos
+    if window > 0:
+        m &= k_pos > q_pos - window
+    return m
+
+
+def attention_naive(q, k, v, *, causal=True, window=0, cap=0.0, offset=0):
+    """q: (B, T, H, Dh); k/v: (B, S, Hkv, Dh)."""
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("bthd,bshd->bhts", qf,
+                        jnp.repeat(kf, group, axis=2))
+    logits = layers.softcap(logits, cap)
+    logits = jnp.where(_mask(t, s, offset, causal, window)[None, None],
+                       logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs,
+                     jnp.repeat(v.astype(jnp.float32), group, axis=2))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=0, cap=0.0, offset=0,
+                      chunk: int = 512, unroll: bool = False):
+    """Flash-style online softmax over key chunks (pure jnp, lax.scan)."""
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dh).transpose(1, 0, 2, 3, 4)
+    qf = (q.astype(jnp.float32) * (dh ** -0.5)).reshape(b, t, hkv, group, dh)
+    q_pos = offset + jnp.arange(t)
+
+    def step2(carry, xs):
+        m_run, l_run, acc = carry
+        kj, vj, j = xs                                # kj: (b, chunk, hkv, dh)
+        kf = kj.astype(jnp.float32)
+        vf = vj.astype(jnp.float32)
+        logits = jnp.einsum("bthgd,bshd->bhgts", qf, kf)
+        logits = layers.softcap(logits, cap)          # (b,hkv,g,t,chunk)
+        k_pos = j * chunk + jnp.arange(chunk)
+        mask = jnp.ones((t, chunk), bool)
+        mask &= (k_pos[None, :] < s)                  # padding
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bhgts,bshd->bhgtd", p, vf)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, t, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, t, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, t, dh), jnp.float32)
+    if unroll:   # dry-run cost probes: while bodies are counted once
+        carry = (m0, l0, a0)
+        for j in range(n_chunks):
+            carry, _ = step2(carry, (kc[j], vc[j], jnp.asarray(j)))
+        m_f, l_f, acc = carry
+    else:
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            step2, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+    out = (acc / l_f).transpose(0, 3, 1, 2, 4).reshape(b, t, h, dh)
+    return out.astype(q.dtype)
+
+
+def attention_kernel(q, k, v, *, causal=True, window=0, cap=0.0, offset=0):
+    """Pallas flash kernel; only valid for offset == 0 (prefill/train)."""
+    from ..kernels import ops
+    if offset != 0:
+        raise ValueError("kernel path expects offset=0")
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, dh)
+    out = ops.attention(qh, kh, vh, causal=causal, window=window, softcap=cap)
+    return out.reshape(b, h, t, dh).transpose(0, 2, 1, 3)
+
+
+def attention_decode(q, k_cache, v_cache, *, length, window=0, cap=0.0):
+    """One-token decode: q (B, 1, H, Dh) vs cache (B, S, Hkv, Dh).
+
+    ``length`` — number of valid cache positions (the new token is at
+    ``length - 1``).  Einsum path; no flash needed for a single query.
+    """
+    b, _, h, dh = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    qf = (q.astype(jnp.float32) * (dh ** -0.5)).reshape(b, hkv, group, dh)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qf, k_cache.astype(jnp.float32))
+    logits = layers.softcap(logits, cap)
+    k_pos = jnp.arange(s)
+    valid = k_pos < length
+    if window > 0:
+        valid &= k_pos > (length - 1) - window
+    logits = jnp.where(valid[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+IMPLS = {"naive": attention_naive, "chunked": attention_chunked,
+         "kernel": attention_kernel}
+
+
+# --------------------------------------------------------------- the block --
+
+def attn_apply(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+               head_dim: int, positions: jax.Array, rope_theta: float = 1e4,
+               causal: bool = True, window: int = 0, cap: float = 0.0,
+               impl: str = "chunked", unroll: bool = False,
+               kv_cache: Optional[Dict[str, jax.Array]] = None,
+               cache_length: Optional[jax.Array] = None,
+               use_rope: bool = True) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full attention sub-layer.  Returns (output, updated_kv_cache).
+
+    Prefill/train: kv_cache=None → runs q against this segment's own k/v and
+    returns a fresh cache dict {k, v} (caller decides whether to keep it).
+    Decode: kv_cache given, x is (B, 1, d); cache is updated in place at
+    ``cache_length - 1``.
+    """
+    b, t, d = x.shape
+    q = dense(p["wq"], x).reshape(b, t, n_heads, head_dim)
+    k = dense(p["wk"], x).reshape(b, t, n_kv, head_dim)
+    v = dense(p["wv"], x).reshape(b, t, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if use_rope:
+        q = rotary(q, positions, rope_theta)
+        k = rotary(k, positions, rope_theta)
+
+    if kv_cache is None:
+        kw = {"unroll": unroll} if impl == "chunked" else {}
+        out = IMPLS[impl](q, k, v, causal=causal, window=window, cap=cap,
+                          **kw)
+        new_cache = {"k": k, "v": v}
+    else:
+        # write the new token(s) at cache_length-1 .. cache_length-1+t
+        idx = cache_length - t
+        kc = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, idx, 0, 0))
+        vc = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, idx, 0, 0))
+        out = attention_decode(q, kc, vc, length=cache_length,
+                               window=window, cap=cap)
+        new_cache = {"k": kc, "v": vc}
+    out = out.reshape(b, t, n_heads * head_dim)
+    return dense(p["wo"], out), new_cache

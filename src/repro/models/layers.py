@@ -1,0 +1,113 @@
+"""Shared layer primitives: norms, projections, rotary, MLPs, embeddings.
+
+Parameters are nested dicts of jax.Arrays.  Initialisers take an explicit
+PRNG key and return the param subtree; apply functions are pure.  All
+matmuls accept bf16 activations and keep f32 norms/softmax statistics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ inits --
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               bias: bool = False, scale: Optional[float] = None) -> Params:
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out))
+               * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6,
+            zero_centered: bool = False) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    if zero_centered:                      # gemma-style (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding (logits against the embedding table)."""
+    return x @ p["table"].T
+
+
+# ------------------------------------------------------------------ rotary --
+
+def rotary(x: jax.Array, positions: jax.Array,
+           theta: float = 1e4) -> jax.Array:
+    """x: (..., T, H, Dh) or (..., T, Dh); positions: (..., T)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., T, half)
+    if x.ndim == angles.ndim + 1:                               # head axis
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return cap * jnp.tanh(x / cap) if cap > 0 else x
+
+
+# -------------------------------------------------------------------- MLPs --
+
+def swiglu_init(key, d: int, ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": dense_init(k1, d, ff, dtype),
+            "up": dense_init(k2, d, ff, dtype),
+            "down": dense_init(k3, ff, d, dtype)}
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def gelu_mlp_init(key, d: int, ff: int, dtype=jnp.float32,
+                  bias: bool = False) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d, ff, dtype, bias=bias),
+            "down": dense_init(k2, ff, d, dtype, bias=bias)}
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+def geglu(p: Params, x: jax.Array) -> jax.Array:
+    """gemma-style GeGLU (gate/up/down shapes as swiglu)."""
+    return dense(p["down"],
+                 jax.nn.gelu(dense(p["gate"], x)) * dense(p["up"], x))

@@ -1,0 +1,295 @@
+"""Attention-free blocks: RWKV6 ("Finch") time/channel mix and Mamba2 (SSD).
+
+Both share one mathematical core — decayed linear attention —
+    o_t = r_t S_{t-1} + ((r_t ⊙ u)·k_t) v_t;   S_t = diag(w_t) S_{t-1} + kᵀ_t v_t
+with per-channel data-dependent decay (RWKV6) or per-head scalar decay
+(Mamba2).  ``linear_attention_chunked`` is the compile-friendly pure-jnp
+production path (lax.scan over chunks, O(1) compile in T, same closed form
+as the Pallas kernel in kernels/linear_attn.py); decode carries the (dk, dv)
+state explicitly — O(1) memory in context length, which is why these archs
+run the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Chunked decayed linear attention — jnp production path
+# ---------------------------------------------------------------------------
+
+def linear_attention_chunked(r, k, v, w, u, *, chunk: int = 64,
+                             state0: Optional[jax.Array] = None,
+                             unroll: bool = False
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """r/k/w: (B, H, T, dk); v: (B, H, T, dv); u: (H, dk).
+
+    Returns (out (B, H, T, dv), final_state (B, H, dk, dv)).
+    All decay exponents are ≤ 0 (overflow-safe, see kernels/linear_attn.py).
+    """
+    b, h, t, dk = r.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, t)
+    t0 = t
+    pad = (-t) % chunk
+    if pad:                      # padded steps: w=1, k=v=0 → state unchanged
+        zp = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r, k, v = (jnp.pad(a, zp) for a in (r, k, v))
+        w = jnp.pad(w, zp, constant_values=1.0)
+        t = t + pad
+    n = t // chunk
+
+    def to_chunks(x):
+        return x.reshape(b, h, n, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    uf = u.astype(jnp.float32)[None, :, None, :]               # (1, H, 1, dk)
+
+    def step(state, xs):
+        rj, kj, vj, wj = [x.astype(jnp.float32) for x in xs]   # (b,h,C,d*)
+        logw = jnp.log(jnp.maximum(wj, 1e-30))
+        a_inc = jnp.cumsum(logw, axis=2)
+        a_exc = a_inc - logw
+        a_end = a_inc[:, :, -1:, :]
+        r_dec = rj * jnp.exp(a_exc)
+        inter = jnp.einsum("bhtk,bhkv->bhtv", r_dec, state)
+        diff = jnp.minimum(a_exc[:, :, :, None, :] - a_inc[:, :, None, :, :],
+                           0.0)                                 # (b,h,C,C,dk)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        dec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bhtk,bhsk,bhtsk->bhts", rj, kj, dec)
+        bonus = jnp.sum(rj * uf * kj, axis=-1)                  # (b,h,C)
+        scores += jnp.eye(chunk)[None, None] * bonus[:, :, :, None]
+        intra = jnp.einsum("bhts,bhsv->bhtv", scores, vj)
+        k_dec = kj * jnp.exp(a_end - a_inc)
+        state = (jnp.exp(a_end).transpose(0, 1, 3, 2) * state +
+                 jnp.einsum("bhtk,bhtv->bhkv", k_dec, vj))
+        return state, inter + intra
+
+    state0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if state0 is None
+              else state0.astype(jnp.float32))
+    if unroll:   # dry-run cost probes: while bodies are counted once
+        ocs = []
+        state = state0
+        for j in range(n):
+            state, o = step(state, (rc[j], kc[j], vc[j], wc[j]))
+            ocs.append(o)
+        oc = jnp.stack(ocs)
+    else:
+        state, oc = jax.lax.scan(step, state0, (rc, kc, vc, wc))
+    out = oc.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv)[:, :, :t0]
+    return out.astype(r.dtype), state
+
+
+def linear_attention_decode(r, k, v, w, u, state):
+    """One token: r/k/w (B, H, dk), v (B, H, dv), state (B, H, dk, dv)."""
+    rf, kf, vf, wf = [x.astype(jnp.float32) for x in (r, k, v, w)]
+    bonus = jnp.sum(rf * u[None].astype(jnp.float32) * kf, axis=-1)
+    out = jnp.einsum("bhk,bhkv->bhv", rf, state) + bonus[..., None] * vf
+    state = wf[..., None] * state + kf[..., None] * vf[..., None, :]
+    return out.astype(r.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 block (time mix + channel mix)
+# ---------------------------------------------------------------------------
+
+def rwkv6_init(key, d: int, d_ff: int, head_dim: int = 64,
+               dtype=jnp.float32) -> Params:
+    h = d // head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": rmsnorm_init(d, dtype), "ln2": rmsnorm_init(d, dtype),
+        "mix": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "ww": dense_init(ks[5], d, d, dtype, scale=0.01),
+        "w_bias": jnp.full((d,), -4.0, dtype),          # base decay ≈ e^{-e^{-4}}
+        "bonus": (jax.random.normal(ks[6], (h, head_dim)) * 0.1).astype(dtype),
+        "gn": rmsnorm_init(d, dtype),
+        "wo": dense_init(ks[7], d, d, dtype),
+        "cmix": (jax.random.uniform(ks[8], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "ck": dense_init(ks[9], d, d_ff, dtype),
+        "cv": dense_init(ks[10], d_ff, d, dtype),
+        "cr": dense_init(ks[11], d, d, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """x: (B, T, d) → x shifted right by one; `last` supplies position -1."""
+    prev = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_block(p: Params, x: jax.Array, *, head_dim: int = 64,
+                chunk: int = 64, unroll: bool = False,
+                state: Optional[Dict[str, jax.Array]] = None
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full RWKV6 layer.  ``state`` (decode): {"wkv": (B,H,dk,dv),
+    "shift1": (B,d), "shift2": (B,d)}; None for train/prefill."""
+    b, t, d = x.shape
+    h = d // head_dim
+    decoding = state is not None and t == 1
+
+    # ---- time mix ----------------------------------------------------------
+    xn = rmsnorm(p["ln1"], x)
+    shifted = _token_shift(xn, state["shift1"] if decoding else None)
+    mix = p["mix"].astype(jnp.float32)
+    def lerp(i):
+        m = mix[i]
+        return (xn.astype(jnp.float32) * m +
+                shifted.astype(jnp.float32) * (1 - m)).astype(x.dtype)
+    r = dense(p["wr"], lerp(0)).reshape(b, t, h, head_dim)
+    k = dense(p["wk"], lerp(1)).reshape(b, t, h, head_dim)
+    v = dense(p["wv"], lerp(2)).reshape(b, t, h, head_dim)
+    g = dense(p["wg"], lerp(3))
+    w_log = (dense(p["ww"], lerp(4)).astype(jnp.float32) +
+             p["w_bias"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, t, h, head_dim)    # (0, 1)
+
+    rt = r.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    wt = w.transpose(0, 2, 1, 3)
+    if decoding:
+        o1, wkv = linear_attention_decode(
+            rt[:, :, 0], kt[:, :, 0], vt[:, :, 0], wt[:, :, 0],
+            p["bonus"], state["wkv"])
+        o = o1[:, :, None, :].transpose(0, 2, 1, 3)
+    else:
+        o, wkv = linear_attention_chunked(rt, kt, vt, wt, p["bonus"],
+                                          chunk=min(chunk, t),
+                                          unroll=unroll)
+        o = o.transpose(0, 2, 1, 3)
+    o = o.reshape(b, t, d)
+    o = rmsnorm(p["gn"], o) * jax.nn.silu(g)
+    x = x + dense(p["wo"], o)
+
+    # ---- channel mix -------------------------------------------------------
+    xn2 = rmsnorm(p["ln2"], x)
+    shifted2 = _token_shift(xn2, state["shift2"] if decoding else None)
+    cm = p["cmix"].astype(jnp.float32)
+    xk = (xn2.astype(jnp.float32) * cm[0] +
+          shifted2.astype(jnp.float32) * (1 - cm[0])).astype(x.dtype)
+    xr = (xn2.astype(jnp.float32) * cm[1] +
+          shifted2.astype(jnp.float32) * (1 - cm[1])).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense(p["ck"], xk)))
+    x = x + dense(p["cv"], kk) * jax.nn.sigmoid(dense(p["cr"], xr))
+
+    new_state = {"wkv": wkv, "shift1": xn[:, -1, :], "shift2": xn2[:, -1, :]}
+    return x, new_state
+
+
+def rwkv6_state_init(batch: int, d: int, head_dim: int = 64,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    h = d // head_dim
+    return {"wkv": jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+            "shift1": jnp.zeros((batch, d), dtype),
+            "shift2": jnp.zeros((batch, d), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, d: int, *, d_state: int = 64, expand: int = 2,
+                head_dim: int = 64, conv_width: int = 4,
+                dtype=jnp.float32) -> Params:
+    d_inner = expand * d
+    h = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        # in_proj → [z (d_inner), x (d_inner), B (d_state), C (d_state), dt (h)]
+        "in_proj": dense_init(ks[0], d, 2 * d_inner + 2 * d_state + h, dtype),
+        "conv": (jax.random.normal(ks[1], (conv_width, d_inner + 2 * d_state))
+                 * 0.1).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array,
+                 cache: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B, T, C); kernel: (W, C).
+
+    Returns (y, new_cache) where cache is the last W-1 inputs.
+    """
+    w = kernel.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                     # (B, T+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * kernel[i] for i in range(w))
+    return y, xp[:, -(w - 1):, :]
+
+
+def mamba2_block(p: Params, x: jax.Array, *, d_state: int = 64,
+                 expand: int = 2, head_dim: int = 64, chunk: int = 64,
+                 unroll: bool = False,
+                 state: Optional[Dict[str, jax.Array]] = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, t, d = x.shape
+    d_inner = expand * d
+    h = d_inner // head_dim
+    decoding = state is not None and t == 1
+
+    xn = rmsnorm(p["ln"], x)
+    zxbcdt = dense(p["in_proj"], xn)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_cache = _causal_conv(
+        conv_in, p["conv"], state["conv"] if decoding else None)
+    conv_out = jax.nn.silu(conv_out)
+    xs, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + d_state], axis=-1)
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,h)
+    a = jnp.exp(-dt_f * jnp.exp(p["a_log"]))                        # (B,T,h)
+    xh = xs.reshape(b, t, h, head_dim)
+    # r=C, k=B (shared across heads), v=dt*x; scalar decay per head
+    rt = jnp.broadcast_to(c_in[:, :, None, :], (b, t, h, d_state)) \
+        .transpose(0, 2, 1, 3)
+    kt = jnp.broadcast_to(b_in[:, :, None, :], (b, t, h, d_state)) \
+        .transpose(0, 2, 1, 3)
+    vt = (xh * dt_f[..., None]).transpose(0, 2, 1, 3)
+    wt = jnp.broadcast_to(a[..., None], (b, t, h, d_state)) \
+        .transpose(0, 2, 1, 3)
+    u0 = jnp.zeros((h, d_state), jnp.float32)
+    if decoding:
+        o1, ssm = linear_attention_decode(
+            rt[:, :, 0], kt[:, :, 0], vt[:, :, 0], wt[:, :, 0],
+            u0, state["ssm"])
+        y = o1[:, None, :, :]                                   # (B,1,h,dh)
+    else:
+        o, ssm = linear_attention_chunked(rt, kt, vt, wt, u0,
+                                          chunk=min(chunk, t),
+                                          unroll=unroll)
+        y = o.transpose(0, 2, 1, 3)                             # (B,T,h,dh)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(b, t, d_inner)
+    y = rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out = x + dense(p["out_proj"], y)
+    new_state = {"ssm": ssm, "conv": conv_cache}
+    return out, new_state
+
+
+def mamba2_state_init(batch: int, d: int, *, d_state: int = 64,
+                      expand: int = 2, head_dim: int = 64,
+                      conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d
+    h = d_inner // head_dim
+    return {"ssm": jnp.zeros((batch, h, d_state, head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_inner + 2 * d_state),
+                              dtype)}

@@ -1,0 +1,606 @@
+"""Unified model assembly for every assigned architecture family.
+
+One :class:`ModelConfig` describes dense / MoE / SSM / hybrid / VLM / enc-dec
+LMs; :func:`init` builds the parameter pytree (per-layer params *stacked* on a
+leading axis so the forward pass is a single ``lax.scan`` per segment —
+compile time is O(1) in depth, which is what makes 56-layer MoE dry-runs
+tractable), and :func:`forward` / :func:`prefill` / :func:`decode_step` are
+the train and serving paths.
+
+Layer heterogeneity is expressed two ways:
+
+* a **pattern** of sub-block specs cycled per period (gemma2 local/global
+  alternation, llama4 dense/MoE interleave) — each pattern element has its
+  own stacked parameters;
+* a **shared block** applied after every ``shared_every`` layers (zamba2's
+  weight-shared attention block): a single un-stacked parameter set applied
+  at ``n_layers // shared_every`` sites.  The stack is therefore walked in
+  *segments* of ``shared_every`` layers with the shared block between them;
+  the tail remainder ends the stack.
+
+Decode carries a cache pytree whose per-layer leaves are scanned alongside
+the layer parameters (cache-in as scan ``xs``, cache-out as scan ``ys``).
+Attention layers cache (k, v); rwkv6/mamba2 layers carry O(1) recurrent
+state — that is why those archs run the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import linear_blocks
+from . import moe as moe_mod
+from .attention import attn_apply, attn_init
+from .layers import (Params, dense, dense_init, embed, embedding_init,
+                     gelu_mlp, gelu_mlp_init, geglu, rmsnorm, rmsnorm_init,
+                     softcap, swiglu, swiglu_init, unembed)
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """Static settings of one sub-block of the layer pattern."""
+
+    kind: str = "attn"                # attn | moe_attn | rwkv6 | mamba2
+    window: int = 0                   # sliding-window size; 0 = full attention
+    causal: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 → d_model // n_heads
+    # ---- attention features ----
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    attn_softcap: float = 0.0         # gemma2 attention-logit soft-capping
+    final_softcap: float = 0.0        # gemma2 final-logit soft-capping
+    post_norms: bool = False          # gemma2 sandwich norms
+    zero_centered_norm: bool = False  # gemma-style (1 + scale) RMSNorm
+    embed_scale: bool = False         # gemma multiplies embeddings by sqrt(d)
+    mlp: str = "swiglu"               # swiglu | geglu | gelu
+    tie_embeddings: bool = True
+    # ---- layer pattern (cycled) ----
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec(),)
+    # ---- MoE ----
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False       # llama4: shared expert beside routed
+    capacity_factor: float = 1.25
+    moe_group_size: int = 512
+    moe_dispatch: str = "einsum"      # einsum | scatter (see models/moe.py)
+    # ---- SSM / RWKV ----
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    rwkv_head_dim: int = 64
+    scan_chunk: int = 64              # linear-attention chunk length
+    # ---- hybrid (zamba2): weight-shared attn block every k layers ----
+    shared_every: int = 0
+    # ---- encoder-decoder (whisper) ----
+    encoder_layers: int = 0
+    encoder_seq: int = 1500           # frontend stub: #frames after conv
+    # ---- multimodal frontend stub (pixtral) ----
+    patch_tokens: int = 0             # embeddings supplied by input_specs()
+    # ---- numerics ----
+    param_dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    attn_impl: str = "chunked"        # naive | chunked | kernel
+    # ---- training-time activation checkpointing over the layer scan ----
+    remat: str = "none"               # none | full | dots
+    # Unroll the layer scan into a Python loop.  Used by the dry-run's
+    # roofline probes: XLA's cost_analysis counts a while-loop body ONCE
+    # (trip count is opaque to it), so per-step FLOPs/bytes/collectives are
+    # measured on unrolled reduced-depth probes and extrapolated linearly.
+    unroll_scan: bool = False
+
+    # ------------------------------------------------------------- derived --
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (
+            f"{self.name}: n_layers {self.n_layers} not a multiple of "
+            f"pattern length {len(self.pattern)}")
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_shared_sites(self) -> int:
+        return self.n_layers // self.shared_every if self.shared_every else 0
+
+    def segments(self) -> List[Tuple[int, int, bool]]:
+        """Stack walk plan: [(period_start, period_end, shared_after)]."""
+        if not self.shared_every:
+            return [(0, self.n_periods, False)]
+        assert self.shared_every % len(self.pattern) == 0
+        seg_p = self.shared_every // len(self.pattern)
+        out: List[Tuple[int, int, bool]] = []
+        start = 0
+        while start < self.n_periods:
+            end = min(start + seg_p, self.n_periods)
+            out.append((start, end, end - start == seg_p))
+            start = end
+        return out
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def param_count(self) -> int:
+        """Exact parameter count (used for MODEL_FLOPS = 6·N·D)."""
+        leaves = jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: init(self, jax.random.PRNGKey(0))))
+        return sum(int(math.prod(l.shape)) for l in leaves)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts routed)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        total = self.param_count()
+        moe_blocks = sum(1 for b in self.pattern if b.kind == "moe_attn")
+        per_expert = 3 * self.d_model * self.d_ff
+        n_moe_layers = self.n_periods * moe_blocks
+        routed = n_moe_layers * self.n_experts * per_expert
+        active = n_moe_layers * self.top_k * per_expert
+        return total - routed + active
+
+
+# --------------------------------------------------------------------------
+# Sub-block init / apply
+# --------------------------------------------------------------------------
+
+
+def _mlp_init(cfg: ModelConfig, key) -> Params:
+    if cfg.mlp in ("swiglu", "geglu"):
+        return swiglu_init(key, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    return gelu_mlp_init(key, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+
+
+def _mlp_apply(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.mlp == "swiglu":
+        return swiglu(p, x)
+    if cfg.mlp == "geglu":
+        return geglu(p, x)
+    return gelu_mlp(p, x)
+
+
+def _norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x, eps=cfg.norm_eps,
+                   zero_centered=cfg.zero_centered_norm)
+
+
+def _block_init(cfg: ModelConfig, spec: BlockSpec, key) -> Params:
+    """Parameters of one sub-block (un-stacked)."""
+    if spec.kind == "rwkv6":
+        return linear_blocks.rwkv6_init(key, cfg.d_model, cfg.d_ff,
+                                        cfg.rwkv_head_dim, cfg.param_dtype)
+    if spec.kind == "mamba2":
+        return linear_blocks.mamba2_init(key, cfg.d_model,
+                                         d_state=cfg.ssm_state,
+                                         expand=cfg.ssm_expand,
+                                         dtype=cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                          cfg.param_dtype, qk_norm=cfg.qk_norm,
+                          qkv_bias=cfg.qkv_bias),
+    }
+    if cfg.post_norms:
+        p["post_ln1"] = rmsnorm_init(cfg.d_model, cfg.param_dtype)
+        p["post_ln2"] = rmsnorm_init(cfg.d_model, cfg.param_dtype)
+    if spec.kind == "moe_attn":
+        p["moe"] = moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                    cfg.param_dtype)
+        if cfg.shared_expert:
+            p["shared_mlp"] = _mlp_init(cfg, k3)
+    else:
+        p["mlp"] = _mlp_init(cfg, k2)
+    return p
+
+
+def _attn_cache_init(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    shape = (batch, max_len, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shape, cfg.param_dtype),
+            "v": jnp.zeros(shape, cfg.param_dtype)}
+
+
+def _block_cache_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                      max_len: int) -> Params:
+    if spec.kind == "rwkv6":
+        return linear_blocks.rwkv6_state_init(batch, cfg.d_model,
+                                              cfg.rwkv_head_dim,
+                                              cfg.param_dtype)
+    if spec.kind == "mamba2":
+        return linear_blocks.mamba2_state_init(batch, cfg.d_model,
+                                               d_state=cfg.ssm_state,
+                                               expand=cfg.ssm_expand,
+                                               dtype=cfg.param_dtype)
+    return _attn_cache_init(cfg, batch, max_len)
+
+
+def _block_apply(cfg: ModelConfig, spec: BlockSpec, p: Params, x: jax.Array,
+                 positions: jax.Array, cache: Optional[Params],
+                 cache_length: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, Params, jax.Array]:
+    """Apply one sub-block.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if spec.kind == "rwkv6":
+        x, st = linear_blocks.rwkv6_block(
+            p, x, head_dim=cfg.rwkv_head_dim, chunk=cfg.scan_chunk,
+            unroll=cfg.unroll_scan, state=cache)
+        return x, st, aux
+    if spec.kind == "mamba2":
+        x, st = linear_blocks.mamba2_block(
+            p, x, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            chunk=cfg.scan_chunk, unroll=cfg.unroll_scan, state=cache)
+        return x, st, aux
+
+    # ---- attention (+ dense-MLP or MoE) ------------------------------------
+    h = _norm(cfg, p["ln1"], x)
+    h, new_cache = attn_apply(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+        positions=positions, rope_theta=cfg.rope_theta, causal=spec.causal,
+        window=spec.window, cap=cfg.attn_softcap, impl=cfg.attn_impl,
+        unroll=cfg.unroll_scan, kv_cache=cache, cache_length=cache_length)
+    if cfg.post_norms:
+        h = _norm(cfg, p["post_ln1"], h)
+    x = x + h
+
+    h = _norm(cfg, p["ln2"], x)
+    if spec.kind == "moe_attn":
+        out, aux = moe_mod.moe_apply(
+            p["moe"], h, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            group_size=cfg.moe_group_size, dispatch=cfg.moe_dispatch)
+        if cfg.shared_expert:
+            out = out + _mlp_apply(cfg, p["shared_mlp"], h)
+        h = out
+    else:
+        h = _mlp_apply(cfg, p["mlp"], h)
+    if cfg.post_norms:
+        h = _norm(cfg, p["post_ln2"], h)
+    return x + h, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Whole-model init
+# --------------------------------------------------------------------------
+
+
+def _stacked_init(cfg: ModelConfig, spec: BlockSpec, key, n: int) -> Params:
+    return jax.vmap(lambda k: _block_init(cfg, spec, k))(
+        jax.random.split(key, n))
+
+
+def _cross_attn_init(cfg: ModelConfig, key) -> Params:
+    return {"ln": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attn_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                              cfg.hd, cfg.param_dtype)}
+
+
+def init(cfg: ModelConfig, key) -> Params:
+    """Build the full parameter pytree (per-layer params stacked)."""
+    keys = jax.random.split(key, 6 + len(cfg.pattern))
+    p: Params = {"embed": embedding_init(keys[0], cfg.vocab, cfg.d_model,
+                                         cfg.param_dtype),
+                 "final_norm": rmsnorm_init(cfg.d_model, cfg.param_dtype)}
+    for i, spec in enumerate(cfg.pattern):
+        p[f"blocks{i}"] = _stacked_init(cfg, spec, keys[1 + i], cfg.n_periods)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab,
+                                  cfg.param_dtype)
+    if cfg.shared_every:     # zamba2: one weight-shared attn+mlp block
+        p["shared"] = _block_init(cfg, BlockSpec(kind="attn"), keys[-2])
+    if cfg.is_enc_dec:       # whisper: encoder stack + per-layer cross attn
+        enc_spec = BlockSpec(kind="attn", causal=False)
+        p["encoder"] = {
+            "blocks": _stacked_init(cfg, enc_spec, keys[-3],
+                                    cfg.encoder_layers),
+            "norm": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+        p["cross"] = jax.vmap(lambda k: _cross_attn_init(cfg, k))(
+            jax.random.split(keys[-4], cfg.n_periods))
+    return p
+
+
+def _cross_attn_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                      enc_kv: Params) -> jax.Array:
+    """Cross attention against precomputed encoder K/V (no rope)."""
+    b, t, _ = x.shape
+    h = _norm(cfg, p["ln"], x)
+    q = dense(p["attn"]["wq"], h).reshape(b, t, cfg.n_heads, cfg.hd)
+    out = attn_mod.attention_chunked(q, enc_kv["k"], enc_kv["v"],
+                                     causal=False)
+    out = out.reshape(b, t, cfg.n_heads * cfg.hd)
+    return x + dense(p["attn"]["wo"], out)
+
+
+# --------------------------------------------------------------------------
+# Encoder (whisper) — frames come from the conv-frontend stub
+# --------------------------------------------------------------------------
+
+
+def _run_encoder(cfg: ModelConfig, params: Params,
+                 frames: jax.Array) -> jax.Array:
+    x = frames.astype(cfg.param_dtype)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                           (x.shape[0], x.shape[1]))
+    enc_spec = BlockSpec(kind="attn", causal=False)
+
+    def body(h, layer_p):
+        h, _, _ = _block_apply(cfg, enc_spec, layer_p, h, pos, None, None)
+        return h, None
+
+    x, _ = _scan(body, x, params["encoder"]["blocks"], cfg.unroll_scan)
+    return _norm(cfg, params["encoder"]["norm"], x)
+
+
+def _encoder_kv(cfg: ModelConfig, params: Params,
+                enc_out: jax.Array) -> Params:
+    """Cross-attention K/V per decoder layer: leaves (L, B, S, Hkv, hd)."""
+    b, s, _ = enc_out.shape
+
+    def per_layer(cross_p):
+        k = dense(cross_p["attn"]["wk"], enc_out)
+        v = dense(cross_p["attn"]["wv"], enc_out)
+        return {"k": k.reshape(b, s, cfg.n_kv, cfg.hd),
+                "v": v.reshape(b, s, cfg.n_kv, cfg.hd)}
+
+    return jax.vmap(per_layer)(params["cross"])
+
+
+# --------------------------------------------------------------------------
+# The stack walker — shared by train forward / prefill / decode
+# --------------------------------------------------------------------------
+
+
+def _slice_tree(tree: Params, s0: int, s1: int) -> Params:
+    return jax.tree.map(lambda a: a[s0:s1], tree)
+
+
+def _scan(body, carry, xs, unroll: bool):
+    """lax.scan, or an unrolled Python loop (dry-run cost probes)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and jax.tree.leaves(ys[0]):
+        stacked = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked
+
+
+def _walk_stack(cfg: ModelConfig, params: Params, x: jax.Array,
+                positions: jax.Array, *,
+                cache: Optional[Params] = None,
+                length: Optional[jax.Array] = None,
+                collect: bool = False, pad_to: int = 0,
+                enc_kv: Optional[Params] = None
+                ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Apply all layers (segments × periods × pattern).
+
+    Modes: train (``cache=None, collect=False``) — no cache returned;
+    prefill (``cache=None, collect=True``) — fresh caches padded to
+    ``pad_to``; decode (``cache`` given, ``length`` given) — updated caches.
+
+    Returns (x, cache_out, summed aux loss).
+    """
+    decoding = cache is not None
+    aux_total = jnp.zeros((), jnp.float32)
+    shared_p = params.get("shared")
+    pad = (pad_to - x.shape[1]) if collect else 0
+
+    def pad_kv(c: Params) -> Params:
+        return {k: jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                for k, v in c.items()}
+
+    def body(carry, xs):
+        h, aux = carry
+        cache_out: Dict[str, Any] = {}
+        for i, spec in enumerate(cfg.pattern):
+            c_in = xs.get(f"c{i}") if decoding else None
+            h, nc, a = _block_apply(cfg, spec, xs[f"p{i}"], h, positions,
+                                    c_in, length)
+            aux = aux + a
+            if decoding or collect:
+                if collect and spec.kind in ("attn", "moe_attn"):
+                    nc = pad_kv(nc)
+                cache_out[f"c{i}"] = nc
+        if cfg.is_enc_dec:
+            h = _cross_attn_apply(cfg, xs["px"], h, xs["enc"])
+        return (h, aux), cache_out
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    segs = cfg.segments()
+    cache_parts: List[Dict[str, Any]] = []
+    shared_cache_parts: List[Params] = []
+    site = 0
+    for (s0, s1, shared_after) in segs:
+        xs: Dict[str, Any] = {}
+        for i in range(len(cfg.pattern)):
+            xs[f"p{i}"] = _slice_tree(params[f"blocks{i}"], s0, s1)
+            if decoding:
+                xs[f"c{i}"] = _slice_tree(cache[f"blocks{i}"], s0, s1)
+        if cfg.is_enc_dec:
+            xs["px"] = _slice_tree(params["cross"], s0, s1)
+            src = enc_kv if enc_kv is not None else cache["enc_kv"]
+            xs["enc"] = _slice_tree(src, s0, s1)
+        (x, aux_total), seg_cache = _scan(
+            body, (x, aux_total), xs, cfg.unroll_scan)
+        if decoding or collect:
+            cache_parts.append(seg_cache)
+        if shared_p is not None and shared_after:
+            c_in = (jax.tree.map(lambda a: a[site], cache["shared"])
+                    if decoding else None)
+            x, nc, _ = _block_apply(cfg, BlockSpec(kind="attn"), shared_p, x,
+                                    positions, c_in, length)
+            if decoding or collect:
+                shared_cache_parts.append(pad_kv(nc) if collect else nc)
+            site += 1
+
+    cache_out: Optional[Params] = None
+    if decoding or collect:
+        cache_out = {}
+        for i in range(len(cfg.pattern)):
+            cache_out[f"blocks{i}"] = jax.tree.map(
+                lambda *parts: jnp.concatenate(parts, axis=0),
+                *[p[f"c{i}"] for p in cache_parts])
+        if shared_cache_parts:
+            cache_out["shared"] = jax.tree.map(
+                lambda *parts: jnp.stack(parts, axis=0),
+                *shared_cache_parts)
+        if cfg.is_enc_dec:
+            cache_out["enc_kv"] = (enc_kv if enc_kv is not None
+                                   else cache["enc_kv"])
+    return x, cache_out, aux_total
+
+
+# --------------------------------------------------------------------------
+# Public entry points
+# --------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params,
+                  batch: Dict[str, jax.Array]) -> jax.Array:
+    """Token embeddings, with multimodal stub fusion where configured."""
+    x = embed(params["embed"], batch["tokens"]).astype(cfg.param_dtype)
+    if cfg.patch_tokens and "patches" in batch:
+        # early fusion: precomputed patch/frame embeddings are prepended
+        x = jnp.concatenate([batch["patches"].astype(cfg.param_dtype), x],
+                            axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.param_dtype)
+    return x
+
+
+def _logits(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        out = unembed(params["embed"], x)
+    else:
+        out = dense(params["lm_head"], x)
+    return softcap(out.astype(jnp.float32), cfg.final_softcap)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits (B, T, V), aux_loss).
+
+    ``batch`` keys: "tokens" (B, T) int32; optional "patches" (VLM stub) or
+    "frames" (audio stub; drives the encoder of enc-dec models).
+    """
+    x = _embed_inputs(cfg, params, batch)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+    enc_kv = None
+    if cfg.is_enc_dec:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+        enc_kv = _encoder_kv(cfg, params, enc_out)
+    x, _, aux = _walk_stack(cfg, params, x, positions, enc_kv=enc_kv)
+    logits = _logits(cfg, params, x)
+    if cfg.patch_tokens and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:]   # text positions only
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Zeroed decode cache (per-layer leaves stacked on the period axis)."""
+    cache: Params = {}
+    for i, spec in enumerate(cfg.pattern):
+        one = _block_cache_init(cfg, spec, batch, max_len)
+        cache[f"blocks{i}"] = jax.tree.map(
+            lambda l: jnp.zeros((cfg.n_periods,) + l.shape, l.dtype), one)
+    if cfg.shared_every:
+        one = _attn_cache_init(cfg, batch, max_len)
+        cache["shared"] = jax.tree.map(
+            lambda l: jnp.zeros((cfg.n_shared_sites,) + l.shape, l.dtype),
+            one)
+    if cfg.is_enc_dec:
+        cache["enc_kv"] = {
+            "k": jnp.zeros((cfg.n_periods, batch, cfg.encoder_seq, cfg.n_kv,
+                            cfg.hd), cfg.param_dtype),
+            "v": jnp.zeros((cfg.n_periods, batch, cfg.encoder_seq, cfg.n_kv,
+                            cfg.hd), cfg.param_dtype)}
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            max_len: int) -> Tuple[jax.Array, Params]:
+    """Run the full prompt; return (last-position logits (B,1,V), cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None, :],
+                                 (b, x.shape[1]))
+    enc_kv = None
+    if cfg.is_enc_dec:
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+        enc_kv = _encoder_kv(cfg, params, enc_out)
+    x, cache, _ = _walk_stack(cfg, params, x, positions, collect=True,
+                              pad_to=max_len, enc_kv=enc_kv)
+    return _logits(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Params, length: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One serving step: ``tokens`` (B, 1) against a cache whose first
+    ``length`` positions are valid (the new token is written at
+    ``length - 1``).  Returns (logits (B, 1, V), updated cache).  This is
+    the ``serve_step`` lowered for the ``decode_*`` / ``long_*`` cells.
+    """
+    x = embed(params["embed"], tokens).astype(cfg.param_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.param_dtype)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(length[None, None] - 1, (b, t))
+    x, new_cache, _ = _walk_stack(cfg, params, x, positions, cache=cache,
+                                  length=length)
+    return _logits(cfg, params, x), new_cache
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            aux_weight: float = 0.01
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (f32 logits) + MoE aux loss."""
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}

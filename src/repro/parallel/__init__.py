@@ -1,0 +1,5 @@
+# Distribution layer: sharding rules (DP/TP/EP/SP/FSDP + pod axis),
+# overlap-friendly collectives, gradient compression, pipeline schedules.
+from . import collectives, compression, pipeline, sharding
+
+__all__ = ["collectives", "compression", "pipeline", "sharding"]

@@ -1,0 +1,75 @@
+"""Gradient compression for the slow inter-pod (DCI) hop: int8 linear
+quantization with error feedback, and top-k sparsification.
+
+On a 2-pod mesh the gradient all-reduce decomposes into (reduce-scatter
+intra-pod over ICI) + (all-reduce inter-pod over DCI) + (all-gather
+intra-pod).  Only the middle hop is bandwidth-starved (~25 GB/s/chip vs
+~50 GB/s/link ICI), so compressing just that hop cuts the exposed
+inter-pod time ~4× (bf16 → int8 + scales) at negligible quality cost when
+error feedback carries the quantization residual to the next step
+(Seide et al. 1-bit SGD lineage).  ``fake_quant_int8`` applies the
+quantize→dequantize round trip inside the train step so the *numerical*
+effect is exercised end-to-end on CPU; the wire encoding itself is
+exercised by ``compress``/``decompress`` unit tests.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8: returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quant_int8(tree: Tree) -> Tree:
+    """Quantize→dequantize every leaf (emulates the DCI wire format)."""
+    def one(g):
+        q, s = compress(g)
+        return decompress(q, s, g.dtype)
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------- error FB --
+
+
+def ef_init(tree: Tree) -> Tree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def ef_compress(tree: Tree, residual: Tree) -> Tuple[Tree, Tree]:
+    """Error-feedback int8: compress (g + residual); the quantization error
+    becomes the next step's residual.  Returns (dequantized tree, residual).
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = compress(corrected)
+        deq = decompress(q, s)
+        return deq.astype(g.dtype), corrected - deq
+    pairs = jax.tree.map(one, tree, residual)
+    deq = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return deq, res
+
+
+def topk_sparsify(x: jax.Array, k_fraction: float = 0.01) -> jax.Array:
+    """Keep the top-|k| fraction of entries (magnitude), zero the rest."""
+    flat = jnp.abs(x.reshape(-1)).astype(jnp.float32)
+    k = max(int(flat.size * k_fraction), 1)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, jnp.zeros_like(x))

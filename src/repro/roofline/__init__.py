@@ -1,0 +1,5 @@
+from .model import (HW, V5E, CellRoofline, analyze_record, load_artifacts,
+                    roofline_table)
+
+__all__ = ["HW", "V5E", "CellRoofline", "analyze_record", "load_artifacts",
+           "roofline_table"]

@@ -1,0 +1,89 @@
+"""Analytic per-device HBM-traffic floor — the TPU-adapted memory term.
+
+XLA's ``bytes accessed`` on the CPU backend charges every HLO operand as a
+memory access; on a TPU most of that traffic stays in VMEM/registers after
+fusion, so it overstates HBM traffic by orders of magnitude (kept in the
+table as ``memory_hlo_s``, a diagnostic upper bound).  The *floor* model
+below counts the traffic a perfectly-fused execution cannot avoid:
+
+  train   — weights read twice (fwd+bwd), gradient write+read, parameter
+            read+write and two moments read+write at the optimizer;
+            layer-boundary activations (saved + reread + remat recompute
+            reread); logits write+read (f32).
+  prefill — weights read once, layer-boundary activations, KV-cache write.
+  decode  — weights read once, full cache read + new-token write.
+
+All quantities are per device under the cell's actual sharding: resident
+parameter bytes divide by the axes that shard them (TP, ×DP when FSDP);
+activations/tokens divide by the batch-sharding axes; caches divide by
+(batch × sequence/head) sharding.  The roofline fraction then compares
+``ideal = max(model-FLOPs time, traffic-floor time)`` against
+``bound = max(compute, traffic-floor, collective)`` — i.e. a cell scores
+1.0 exactly when compiled compute and collectives hide under the intrinsic
+arithmetic-intensity limit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+from .model import HW, V5E
+
+
+def _cfg_of(record: Dict):
+    from .. import configs
+    return configs.get_config(record["arch"])
+
+
+def _plan_of(cfg):
+    from ..parallel.sharding import plan_for
+    return plan_for(cfg)
+
+
+def cache_bytes_global(cfg, batch: int, seq: int) -> int:
+    """Total decode-cache bytes (KV or recurrent state), all devices."""
+    import jax
+
+    from ..models.transformer import init_cache
+    leaves = jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: init_cache(cfg, batch, seq)))
+    return sum(int(math.prod(l.shape)) * l.dtype.itemsize for l in leaves)
+
+
+def min_traffic_bytes(record: Dict, hw: HW = V5E) -> float:
+    """Per-device HBM-traffic floor for this cell, in bytes."""
+    cfg = _cfg_of(record)
+    plan = _plan_of(cfg)
+    kind = record["kind"]
+    n_dev = int(record["n_devices"])
+    tp = 16
+    dp = n_dev // tp
+    b, s = record["global_batch"], record["seq_len"]
+
+    p_bytes = record["params"] * 2                       # bf16 weights
+    w_shards = n_dev if plan.fsdp else tp                # FSDP vs TP-resident
+    p_loc = p_bytes / w_shards
+
+    tokens_dev = b * s / min(dp, b)          # batch shards over ≤ b rows
+    act_loc = tokens_dev * cfg.d_model * 2               # one residual, bf16
+
+    if kind == "train":
+        weights = 2 * p_loc                              # fwd + bwd reads
+        grads = 2 * p_loc                                # write + opt read
+        m_itemsize = 2 if "bfloat16" in str(plan.moment_dtype) else 4
+        opt = (2 + 4) * record["params"] * m_itemsize / w_shards  # p rw, 2m rw
+        n_saved = cfg.n_layers * (2 if plan.remat == "full" else 1)
+        acts = act_loc * n_saved * 2                     # write + read
+        logits = tokens_dev * cfg.vocab / tp * 4 * 2     # f32 write + read
+        return weights + grads + opt + acts + logits
+    if kind == "prefill":
+        cache = cache_bytes_global(cfg, b, s) / n_dev
+        return p_loc + act_loc * cfg.n_layers * 2 + cache
+    # decode: read every weight + the whole cache once per token
+    cache_shards = min(dp, b) * tp
+    cache = cache_bytes_global(cfg, b, s) / cache_shards
+    return p_loc + cache
+
+
+def min_traffic_seconds(record: Dict, hw: HW = V5E) -> float:
+    return min_traffic_bytes(record, hw) / hw.hbm_bw

@@ -1,0 +1,218 @@
+"""Three-term roofline model over the dry-run's compiled artifacts.
+
+Definitions (per DESIGN.md; all terms in **seconds per step**):
+
+* ``compute``    = HLO_FLOPs / (chips · peak)   — ``cost_analysis()['flops']``
+  on the SPMD-partitioned module is *per device*, so this is simply
+  ``flops_per_device / peak``.
+* ``memory``     = HLO_bytes / (chips · HBM_bw) — idem with
+  ``'bytes accessed'``.  Note XLA's byte counter charges every fusion
+  operand read from "memory"; on a real TPU much of that traffic stays in
+  VMEM/registers, so this term is an upper bound (recorded as such).
+* ``collective`` = wire_bytes / link_bw — ring-model wire traffic per
+  device (launch/dryrun.py `collective_bytes`), one ICI link conservatively.
+
+``MODEL_FLOPS`` = 6·N·D for training (N = params, active params for MoE;
+D = global tokens), 2·N·D for prefill, 2·N·B for one decode step.  The
+ratio MODEL_FLOPS / HLO_FLOPs(global) shows how much compiled compute is
+"useful" — remat recompute, replicated compute on idle mesh axes, and
+attention/vocab work all land in the denominator.
+
+``roofline_fraction`` = ideal_time / max(term): ideal_time is the time the
+*useful* model FLOPs would take at peak on all chips; max(term) is the
+bound the compiled program actually hits.  This is the score §Perf drives
+up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float            # per chip, bf16
+    hbm_bw: float                # per chip, B/s
+    link_bw: float               # per ICI link, B/s
+    hbm_bytes: float             # per chip
+    dci_bw: float = 25e9         # inter-pod, per chip, B/s
+
+
+V5E = HW(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+         hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    tag: str
+    n_devices: int
+    compute_s: float
+    memory_s: float              # analytic HBM-traffic floor (TPU-adapted)
+    collective_s: float
+    memory_hlo_s: float          # XLA 'bytes accessed' (diagnostic bound)
+    model_flops: float           # 6·N·D / 2·N·D / 2·N·B
+    hlo_flops_global: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs(global)
+    ideal_s: float
+    roofline_fraction: float
+    peak_mem_gb: Optional[float]
+    fits: Optional[bool]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=lambda k: terms[k])
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "tag": self.tag,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "memory_hlo_s": self.memory_hlo_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "ideal_s": self.ideal_s,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_mem_gb": self.peak_mem_gb, "fits": self.fits,
+        }
+
+
+def model_flops(record: Dict) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode) with N = active."""
+    n = record.get("active_params") or record["params"]
+    kind = record["kind"]
+    if kind == "train":
+        d = record["global_batch"] * record["seq_len"]
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = record["global_batch"] * record["seq_len"]
+        return 2.0 * n * d
+    return 2.0 * n * record["global_batch"]        # decode: one token/seq
+
+
+def _terms_of(record: Dict) -> Dict[str, float]:
+    return {
+        "flops": float(record["cost_analysis"].get("flops", 0.0)),
+        "bytes": float(record["cost_analysis"].get("bytes accessed", 0.0)),
+        "wire": float(record["collectives"]["wire_bytes"]),
+    }
+
+
+def extrapolate_terms(probe1: Dict, probe2: Dict,
+                      full_layers: int) -> Dict[str, float]:
+    """Linear fit term(L) = O + B·L over two unrolled probes.
+
+    XLA cost_analysis counts while-loop bodies once, so full-depth scanned
+    compiles under-count all three terms; the probes are unrolled at depths
+    L1 < L2 and extrapolated to the full depth (exact for homogeneous
+    stacks; ≤±½-site error for zamba2's shared-block tail, DESIGN.md §4).
+    """
+    l1, l2 = probe1["n_layers"], probe2["n_layers"]
+    t1, t2 = _terms_of(probe1), _terms_of(probe2)
+    out = {}
+    for k in t1:
+        slope = (t2[k] - t1[k]) / max(l2 - l1, 1)
+        if slope < 0:
+            # XLA occasionally picks a different collective strategy at the
+            # smallest depth; fall back to proportional from the larger
+            # probe rather than extrapolating a negative slope.
+            out[k] = t2[k] * full_layers / l2
+        else:
+            out[k] = t1[k] + slope * (full_layers - l1)
+    return out
+
+
+def analyze_record(record: Dict, hw: HW = V5E,
+                   probes: Optional[List[Dict]] = None) -> CellRoofline:
+    if probes and len(probes) >= 2:
+        ps = sorted(probes, key=lambda r: r["n_layers"])
+        terms = extrapolate_terms(ps[0], ps[-1],
+                                  record.get("full_n_layers",
+                                             record["n_layers"]))
+        flops_dev, bytes_dev, wire_dev = (terms["flops"], terms["bytes"],
+                                          terms["wire"])
+    else:
+        t = _terms_of(record)
+        flops_dev, bytes_dev, wire_dev = t["flops"], t["bytes"], t["wire"]
+    from .analytic import min_traffic_seconds
+
+    n_dev = int(record["n_devices"])
+    compute_s = flops_dev / hw.peak_flops
+    memory_hlo_s = bytes_dev / hw.hbm_bw
+    memory_s = min_traffic_seconds(record, hw)
+    collective_s = wire_dev / hw.link_bw
+    mf = model_flops(record)
+    hlo_global = flops_dev * n_dev
+    # ideal: the intrinsic limit — model FLOPs at peak, or the HBM-traffic
+    # floor, whichever binds.  fraction = 1 ⇔ compiled compute and
+    # collectives hide entirely under that limit.
+    ideal = max(mf / (n_dev * hw.peak_flops), memory_s)
+    bound = max(compute_s, memory_s, collective_s, 1e-30)
+    peak = record["memory"].get("peak_memory_in_bytes")
+    return CellRoofline(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        kind=record["kind"], tag=record.get("tag", ""), n_devices=n_dev,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        memory_hlo_s=memory_hlo_s,
+        model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=mf / max(hlo_global, 1e-30),
+        ideal_s=ideal, roofline_fraction=min(ideal / bound, 1.0),
+        peak_mem_gb=(peak / 1e9 if peak is not None else None),
+        fits=(peak <= hw.hbm_bytes if peak is not None else None))
+
+
+def load_artifacts(pattern: str = "*.json",
+                   subdir: str = "dryrun") -> List[Dict]:
+    out = []
+    for fn in sorted((ARTIFACTS / subdir).glob(pattern)):
+        out.append(json.loads(fn.read_text()))
+    return out
+
+
+def analyze_all(mesh_filter: Optional[str] = None,
+                hw: HW = V5E) -> List[CellRoofline]:
+    """Pair every full-depth artifact with its probes; one row per cell."""
+    records = load_artifacts()
+    fulls = [r for r in records if not r.get("tag") and "skipped" not in r]
+    probes: Dict[tuple, List[Dict]] = {}
+    for r in records:
+        if r.get("tag", "").startswith("probe"):
+            probes.setdefault((r["arch"], r["shape"], r["mesh"]), []).append(r)
+    out = []
+    for r in fulls:
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        out.append(analyze_record(r, hw, probes=probes.get(key)))
+    return out
+
+
+def roofline_table(cells: List[CellRoofline], fmt: str = "md") -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "hlo-mem s | dominant | useful | roofline | peak GB | fits |")
+    sep = "|" + "---|" * 12
+    rows = [hdr, sep]
+    for c in cells:
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.compute_s:.4f} | "
+            f"{c.memory_s:.4f} | {c.collective_s:.4f} | "
+            f"{c.memory_hlo_s:.3f} | {c.dominant} | "
+            f"{c.useful_ratio:.3f} | {c.roofline_fraction:.3f} | "
+            f"{'' if c.peak_mem_gb is None else f'{c.peak_mem_gb:.2f}'} | "
+            f"{'yes' if c.fits else 'NO' if c.fits is not None else '?'} |")
+    return "\n".join(rows)

@@ -1,0 +1,4 @@
+# Serving substrate: KV-cache management + prefill/decode engine.
+from . import engine
+
+__all__ = ["engine"]

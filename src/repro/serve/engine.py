@@ -1,0 +1,109 @@
+"""Serving engine: prefill + decode steps and a simple batched scheduler.
+
+``make_serve_step``/``make_prefill_step`` return the pure functions the
+multi-pod dry-run lowers for the ``decode_*``/``long_*``/``prefill_32k``
+cells.  ``Engine`` is the host-side driver used by examples/serve_e2e.py:
+continuous batching over a fixed slot count, greedy sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+
+Cache = Any
+
+
+def make_serve_step(cfg: T.ModelConfig
+                    ) -> Callable[[Any, jax.Array, Cache, jax.Array],
+                                  Tuple[jax.Array, Cache]]:
+    """One decode step: (params, tokens (B,1), cache, length) →
+    (next_tokens (B,1), new cache).  Greedy sampling on-device."""
+
+    def serve_step(params, tokens, cache, length):
+        logits, cache = T.decode_step(cfg, params, tokens, cache, length)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: T.ModelConfig, max_len: int
+                      ) -> Callable[[Any, Dict[str, jax.Array]],
+                                    Tuple[jax.Array, Cache]]:
+    """Prefill the prompt; returns (first sampled token (B,1), cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache = T.prefill(cfg, params, batch, max_len=max_len)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return prefill_step
+
+
+# --------------------------------------------------------------------------
+# Host-side batched engine (examples/serve_e2e.py)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (T,) int32
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Fixed-slot continuous batching: all slots share one cache buffer;
+    finished slots are refilled from the queue between decode steps."""
+
+    def __init__(self, cfg: T.ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.prefill_one = jax.jit(make_prefill_step(cfg, max_len))
+        self.step = jax.jit(make_serve_step(cfg))
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> List[Request]:
+        """Drain the queue (batch-of-one prefill, batched decode)."""
+        while self.queue:
+            active = [self.queue.pop(0)
+                      for _ in range(min(self.slots, len(self.queue)))]
+            caches, tokens, lengths = [], [], []
+            for r in active:
+                batch = {"tokens": jnp.asarray(r.prompt)[None]}
+                tok, cache = self.prefill_one(self.params, batch)
+                r.out.append(int(tok[0, 0]))
+                caches.append(cache)
+                tokens.append(tok)
+                lengths.append(len(r.prompt))
+            cache = jax.tree.map(
+                lambda *ls: jnp.concatenate(ls, axis=1), *caches) \
+                if len(caches) > 1 else caches[0]
+            toks = jnp.concatenate(tokens, axis=0)
+            # decode lock-step to the longest request
+            steps = max(r.max_new - 1 for r in active)
+            length = max(lengths) + 1
+            for _ in range(steps):
+                toks, cache = self.step(self.params, toks, cache,
+                                        jnp.int32(length))
+                length += 1
+                for i, r in enumerate(active):
+                    if len(r.out) < r.max_new:
+                        r.out.append(int(toks[i, 0]))
+            for r in active:
+                r.done = True
+                self.finished.append(r)
+        return self.finished

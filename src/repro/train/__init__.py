@@ -1,0 +1,6 @@
+# Training substrate: optimizer, train step (remat / accumulation / mixed
+# precision), synthetic data pipeline, checkpointing, and the fault-tolerant
+# supervisor loop.
+from . import optimizer, step
+
+__all__ = ["optimizer", "step"]

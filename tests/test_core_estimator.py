@@ -1,0 +1,144 @@
+"""Integration tests: trace → augment → estimate on the paper's apps."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.apps import cholesky as chol
+from repro.apps import matmul as mm
+from repro.core import (Eligibility, Trace, ascii_gantt, build_graph, estimate,
+                        explore, fits, reference_run, same_best,
+                        spearman_rank_correlation, speedup_table, write_prv,
+                        zynq_system, ZYNQ_7045_BUDGET)
+
+
+@pytest.fixture(scope="module")
+def mm_trace():
+    return mm.trace_matmul(n=256, bs=64)
+
+
+@pytest.fixture(scope="module")
+def chol_trace():
+    return chol.trace_cholesky(n=512, bs=64)   # NB=8: dgemm-dominated graph
+
+
+def test_trace_matmul_counts_and_numerics(mm_trace):
+    nb = 256 // 64
+    assert len(mm_trace) == nb ** 3          # one task per (i,j,k)
+    assert set(mm_trace.names()) == {"mxm_block"}
+    assert all(e.elapsed_smp > 0 for e in mm_trace.events)
+
+
+def test_trace_roundtrip(tmp_path, mm_trace):
+    p = str(tmp_path / "t.jsonl")
+    mm_trace.save(p)
+    t2 = Trace.load(p)
+    assert len(t2) == len(mm_trace)
+    assert t2.events[3].accesses == mm_trace.events[3].accesses
+    assert t2.events[3].elapsed_smp == mm_trace.events[3].elapsed_smp
+
+
+def test_matmul_graph_dependencies(mm_trace):
+    """C[i][j] blocks form chains over k; independent (i,j) cells don't."""
+    reps = mm.report_map()
+    g = build_graph(mm_trace, zynq_system("s", {"fpga:mxm64": 1}), reps,
+                    Eligibility({"mxm_block": ("fpga:mxm64", "smp")}))
+    g.validate_acyclic()
+    stats = g.subgraph_stats()
+    nb = 4
+    assert stats["per_name"]["mxm_block"] == nb ** 3
+    assert stats["per_name"]["create:mxm_block"] == nb ** 3
+    # 3 reads (A, B, C-inout) -> 3 submit_in; 1 write -> submit_out + xfer_out
+    assert stats["per_name"]["submit_in:mxm_block"] == 3 * nb ** 3
+    assert stats["per_name"]["xfer_out:mxm_block"] == nb ** 3
+
+
+def test_augmentation_on_smp_only_task(chol_trace):
+    """dpotrf is SMP-only: it must get no DMA machinery at all."""
+    reps = chol.report_map(64)
+    cand = chol.candidates(64)[0]
+    g = build_graph(chol_trace, cand.system, reps, cand.eligibility)
+    names = g.subgraph_stats()["per_name"]
+    assert "submit_in:dpotrf" not in names
+    assert "xfer_out:dpotrf" not in names
+    assert names["create:dpotrf"] == names["dpotrf"]
+
+
+def test_feasibility_reproduces_paper_statements():
+    reps = mm.hls_reports()
+    assert fits([(reps[64], 2)])            # two 64x64 accelerators fit
+    assert fits([(reps[128], 1)])           # one 128x128 fits
+    assert not fits([(reps[128], 2)])       # two 128x128 do NOT fit (paper)
+    creps = chol.hls_reports(64)
+    fr = creps["dgemm"][True]
+    small = creps["dsyrk"][False]
+    assert fits([(fr, 1)])
+    assert not fits([(fr, 1), (small, 1)])  # FR excludes everything else
+    assert fits([(creps["dgemm"][False], 1), (creps["dtrsm"][False], 1)])
+
+
+def test_estimate_faster_accel_config_wins(mm_trace):
+    from repro.core import a9_smp_seconds
+    reps = mm.report_map()
+    cands = mm.candidates()[64]
+    res = explore(mm_trace, cands, reps,
+                  smp_seconds_fn=a9_smp_seconds("float32"))
+    assert res.best is not None
+    times = {r.candidate: r.makespan_s for r in res.table}
+    assert times["2acc64"] < times["1acc64"]          # more accels help
+    # heterogeneous spill to a much slower SMP hurts (paper Fig. 5 trend):
+    # with availability scheduling the free SMP cores grab tasks whose FPGA
+    # version is ~40x faster -> load-imbalance tail
+    assert times["2acc64"] < times["2acc64+smp"]
+    assert times["1acc64"] < times["1acc64+smp"]
+
+
+def test_estimator_vs_reference_trends(mm_trace):
+    """The headline claim: estimated and 'real' speedup trends agree."""
+    from repro.core import a9_smp_seconds
+    a9 = a9_smp_seconds("float32")
+    reps = mm.report_map()
+    cands = mm.candidates()[64]
+    est = [estimate(mm_trace, c.system, reps, c.eligibility, smp_seconds_fn=a9)
+           for c in cands]
+    ref = [reference_run(mm_trace, c.system, reps, c.eligibility,
+                         smp_seconds_fn=a9, seed=1) for c in cands]
+    s_est = speedup_table(est)
+    s_ref = speedup_table(ref)
+    assert spearman_rank_correlation(s_est, s_ref) >= 0.9
+    assert same_best(s_est, s_ref)
+
+
+def test_estimate_makespan_at_least_critical_path(mm_trace):
+    reps = mm.report_map()
+    c = mm.candidates()[64][0]
+    r = estimate(mm_trace, c.system, reps, c.eligibility, smp_scale=8.0)
+    assert r.makespan_s >= r.critical_path_s - 1e-12
+
+
+def test_paraver_and_gantt_export(tmp_path, mm_trace):
+    reps = mm.report_map()
+    c = mm.candidates()[64][0]
+    r = estimate(mm_trace, c.system, reps, c.eligibility, smp_scale=8.0)
+    prv = write_prv(r.sim, str(tmp_path / "mm"))
+    assert os.path.exists(prv)
+    lines = open(prv).read().strip().splitlines()
+    assert lines[0].startswith("#Paraver")
+    assert len(lines) > 10
+    assert os.path.exists(str(tmp_path / "mm.row"))
+    g = ascii_gantt(r.sim)
+    assert "makespan" in g and "legend" in g
+
+
+def test_cholesky_explore_ranks_dgemm_first(chol_trace):
+    """dgemm carries ~NB^3/6 of the work: any config accelerating it must
+    beat the FR configs that leave dgemm on the SMP (paper Fig. 9 trend)."""
+    from repro.core import a9_smp_seconds
+    reps = chol.report_map(64)
+    res = explore(chol_trace, chol.candidates(64), reps,
+                  smp_seconds_fn=a9_smp_seconds("float64"))
+    times = {r.candidate: r.makespan_s for r in res.table}
+    assert times["FR-dgemm"] < times["FR-dsyrk"]
+    assert times["FR-dgemm"] < times["FR-dtrsm"]
+    best_name = res.best.candidate
+    assert "dgemm" in best_name

@@ -1,0 +1,195 @@
+"""Simulator correctness: hand-checked schedules, bounds, determinism,
+policy behaviour, and conditional (placement-dependent) augmentation tasks."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.devices import DevicePool, SharedResource, SystemConfig
+from repro.core.regions import Access, Direction, Region
+from repro.core.simulator import simulate
+from repro.core.taskgraph import Task, TaskGraph
+
+
+def sys_smp(cores=2, name="smp-only"):
+    return SystemConfig(name=name, pools=[DevicePool("smp", ("smp",), cores)])
+
+
+def chain_graph(n, cost=1.0):
+    g = TaskGraph()
+    prev = None
+    for i in range(n):
+        t = Task(uid=g.new_uid(), name=f"t{i}", costs={"smp": cost},
+                 creation_index=i)
+        g.add_task(t, infer_deps=False)
+        if prev is not None:
+            g.add_edge(prev, t.uid)
+        prev = t.uid
+    return g
+
+
+def independent_graph(n, cost=1.0):
+    g = TaskGraph()
+    for i in range(n):
+        g.add_task(Task(uid=g.new_uid(), name=f"t{i}", costs={"smp": cost},
+                        creation_index=i), infer_deps=False)
+    return g
+
+
+def test_chain_is_serial():
+    g = chain_graph(5, cost=2.0)
+    r = simulate(g, sys_smp(4))
+    assert r.makespan == pytest.approx(10.0)
+
+
+def test_independent_tasks_fill_slots():
+    g = independent_graph(6, cost=1.0)
+    r = simulate(g, sys_smp(2))
+    assert r.makespan == pytest.approx(3.0)   # 6 tasks / 2 cores
+    assert r.utilization()["smp"] == pytest.approx(1.0)
+
+
+def test_diamond_schedule():
+    g = TaskGraph()
+    a = Task(uid=g.new_uid(), name="a", costs={"smp": 1.0}, creation_index=0)
+    b = Task(uid=g.new_uid(), name="b", costs={"smp": 2.0}, creation_index=1)
+    c = Task(uid=g.new_uid(), name="c", costs={"smp": 3.0}, creation_index=2)
+    d = Task(uid=g.new_uid(), name="d", costs={"smp": 1.0}, creation_index=3)
+    for t in (a, b, c, d):
+        g.add_task(t, infer_deps=False)
+    g.add_edge(a.uid, b.uid); g.add_edge(a.uid, c.uid)
+    g.add_edge(b.uid, d.uid); g.add_edge(c.uid, d.uid)
+    r = simulate(g, sys_smp(2))
+    assert r.makespan == pytest.approx(1.0 + 3.0 + 1.0)
+
+
+def test_heterogeneous_availability_prefers_accelerator():
+    g = TaskGraph()
+    t = Task(uid=g.new_uid(), name="k", devices=("fpga:k", "smp"),
+             costs={"fpga:k": 1.0, "smp": 10.0}, creation_index=0)
+    g.add_task(t, infer_deps=False)
+    sys = SystemConfig(name="het", pools=[DevicePool("smp", ("smp",), 1),
+                                          DevicePool("acc", ("fpga:k",), 1)])
+    r = simulate(g, sys, policy="availability")
+    assert r.placements[t.uid] == "fpga:k"
+    assert r.makespan == pytest.approx(1.0)
+
+
+def test_availability_spills_to_smp_and_creates_imbalance():
+    """The paper's Fig. 5/7 pathology: a free-but-slow SMP grabs work."""
+    g = independent_graph(4, cost=0.0)
+    for t in g.tasks.values():
+        t.devices = ("fpga:k", "smp")
+        t.costs = {"fpga:k": 1.0, "smp": 30.0}
+    sys = SystemConfig(name="het", pools=[DevicePool("smp", ("smp",), 1),
+                                          DevicePool("acc", ("fpga:k",), 1)])
+    r_avail = simulate(g, sys, policy="availability")
+    r_eft = simulate(g, sys, policy="eft")
+    # availability puts one task on the SMP (slot free at t=0) -> 30s tail
+    assert r_avail.makespan == pytest.approx(30.0)
+    # EFT keeps all four on the accelerator -> 4s
+    assert r_eft.makespan == pytest.approx(4.0)
+
+
+def test_shared_resource_serialises():
+    g = TaskGraph()
+    for i in range(4):
+        g.add_task(Task(uid=g.new_uid(), name=f"x{i}", devices=("dma_out",),
+                        costs={"dma_out": 1.0}, creation_index=i),
+                   infer_deps=False)
+    sys = SystemConfig(name="s", pools=[DevicePool("smp", ("smp",), 2)],
+                       shared=[SharedResource("dma_out", 1)])
+    r = simulate(g, sys)
+    assert r.makespan == pytest.approx(4.0)
+
+
+def test_conditional_task_zero_cost_when_parent_on_smp():
+    g = TaskGraph()
+    t = Task(uid=g.new_uid(), name="k", devices=("smp",),
+             costs={"smp": 1.0}, creation_index=0, meta={"role": "compute"})
+    g.add_task(t, infer_deps=False)
+    x = Task(uid=g.new_uid(), name="xfer_out:k", devices=("dma_out",),
+             costs={"dma_out": 5.0}, creation_index=0,
+             meta={"role": "xfer_out", "conditional_on": t.uid,
+                   "active_kinds": ("fpga:k",)})
+    g.add_task(x, infer_deps=False)
+    g.add_edge(t.uid, x.uid)
+    sys = SystemConfig(name="s", pools=[DevicePool("smp", ("smp",), 1)],
+                       shared=[SharedResource("dma_out", 1)])
+    r = simulate(g, sys)
+    assert r.makespan == pytest.approx(1.0)   # transfer skipped
+
+
+def test_deadlock_detection():
+    g = TaskGraph()
+    a = Task(uid=g.new_uid(), name="a", costs={"smp": 1.0}, creation_index=0)
+    b = Task(uid=g.new_uid(), name="b", costs={"smp": 1.0}, creation_index=1)
+    g.add_task(a, infer_deps=False); g.add_task(b, infer_deps=False)
+    g.add_edge(a.uid, b.uid); g.add_edge(b.uid, a.uid)
+    with pytest.raises(RuntimeError, match="deadlock"):
+        simulate(g, sys_smp(1))
+
+
+# ---------------------------------------------------------------------------
+# Properties on random DAGs
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 25))
+    g = TaskGraph()
+    uids = []
+    for i in range(n):
+        cost = draw(st.floats(0.1, 5.0, allow_nan=False))
+        t = Task(uid=g.new_uid(), name=f"t{i}", costs={"smp": cost},
+                 creation_index=i)
+        g.add_task(t, infer_deps=False)
+        uids.append(t.uid)
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()) and draw(st.booleans()):
+                g.add_edge(uids[i], uids[j])
+    return g
+
+
+@hypothesis.given(random_dag(), st.integers(1, 4))
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_makespan_bounds(g, cores):
+    r = simulate(g, sys_smp(cores))
+    lower = max(g.critical_path(), g.total_work() / cores)
+    assert r.makespan >= lower - 1e-9
+    assert r.makespan <= g.total_work() + 1e-9
+
+
+@hypothesis.given(random_dag())
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_deterministic(g):
+    r1 = simulate(g, sys_smp(2))
+    r2 = simulate(g, sys_smp(2))
+    assert r1.makespan == r2.makespan
+    assert [(s.uid, s.start, s.end) for s in r1.schedule] == \
+           [(s.uid, s.start, s.end) for s in r2.schedule]
+
+
+@hypothesis.given(st.lists(st.floats(0.1, 5.0, allow_nan=False),
+                           min_size=1, max_size=30),
+                  st.integers(1, 3))
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_more_cores_never_hurt_independent_tasks(costs, cores):
+    """For independent tasks (no edges), greedy FIFO list scheduling is
+    monotone in the number of identical cores.  (With dependences, Graham's
+    scheduling anomalies make this false for *any* list scheduler — the
+    estimator exposes exactly those effects, it does not hide them.)"""
+    g = TaskGraph()
+    for i, c in enumerate(costs):
+        g.add_task(Task(uid=g.new_uid(), name=f"t{i}", costs={"smp": c},
+                        creation_index=i), infer_deps=False)
+    r1 = simulate(g, sys_smp(cores))
+    r2 = simulate(g, sys_smp(cores + 1))
+    assert r2.makespan <= r1.makespan + 1e-9
+
+
+@hypothesis.given(random_dag())
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_busy_time_equals_total_work(g):
+    r = simulate(g, sys_smp(3))
+    assert sum(r.busy.values()) == pytest.approx(g.total_work())

@@ -1,0 +1,131 @@
+"""Unit + property tests for OmpSs-style dependence inference and the graph."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.regions import Access, Direction, Region
+from repro.core.taskgraph import Task, TaskGraph
+
+
+def mk(g, name, reads=(), writes=(), inouts=(), costs=None, devices=("smp",)):
+    acc = tuple([Access(Region(r, 64), Direction.IN) for r in reads] +
+                [Access(Region(r, 64), Direction.OUT) for r in writes] +
+                [Access(Region(r, 64), Direction.INOUT) for r in inouts])
+    t = Task(uid=g.new_uid(), name=name, accesses=acc, devices=devices,
+             costs=costs or {"smp": 1.0}, creation_index=len(g.tasks))
+    return g.add_task(t)
+
+
+def test_raw_dependence():
+    g = TaskGraph()
+    w = mk(g, "w", writes=("x",))
+    r = mk(g, "r", reads=("x",))
+    assert r.uid in g.succ[w.uid]
+
+
+def test_war_dependence():
+    g = TaskGraph()
+    r = mk(g, "r", reads=("x",))
+    w = mk(g, "w", writes=("x",))
+    assert w.uid in g.succ[r.uid]
+
+
+def test_waw_dependence():
+    g = TaskGraph()
+    w1 = mk(g, "w1", writes=("x",))
+    w2 = mk(g, "w2", writes=("x",))
+    assert w2.uid in g.succ[w1.uid]
+
+
+def test_independent_readers_parallel():
+    g = TaskGraph()
+    w = mk(g, "w", writes=("x",))
+    r1 = mk(g, "r1", reads=("x",))
+    r2 = mk(g, "r2", reads=("x",))
+    assert r2.uid not in g.succ[r1.uid] and r1.uid not in g.succ[r2.uid]
+
+
+def test_inout_chain_serialises():
+    g = TaskGraph()
+    a = mk(g, "a", inouts=("c",))
+    b = mk(g, "b", inouts=("c",))
+    c = mk(g, "c", inouts=("c",))
+    assert b.uid in g.succ[a.uid] and c.uid in g.succ[b.uid]
+
+
+def test_no_false_dependence_between_regions():
+    g = TaskGraph()
+    a = mk(g, "a", writes=("x",))
+    b = mk(g, "b", writes=("y",))
+    assert b.uid not in g.succ[a.uid]
+
+
+def test_topological_order_and_critical_path():
+    g = TaskGraph()
+    a = mk(g, "a", writes=("x",))
+    b = mk(g, "b", reads=("x",), writes=("y",))
+    c = mk(g, "c", reads=("x",), writes=("z",))
+    d = mk(g, "d", reads=("y", "z"))
+    order = g.topological_order()
+    assert order.index(a.uid) < order.index(b.uid) < order.index(d.uid)
+    assert g.critical_path() == pytest.approx(3.0)   # a -> b|c -> d
+    assert g.total_work() == pytest.approx(4.0)
+
+
+def test_cycle_detection():
+    g = TaskGraph()
+    a = mk(g, "a")
+    b = mk(g, "b")
+    g.add_edge(a.uid, b.uid)
+    g.add_edge(b.uid, a.uid)
+    with pytest.raises(ValueError):
+        g.topological_order()
+
+
+# ---------------------------------------------------------------------------
+# Property: inferred edges always respect sequential-consistency semantics
+# ---------------------------------------------------------------------------
+
+_access_st = st.lists(
+    st.tuples(st.sampled_from("abcd"), st.sampled_from(["in", "out", "inout"])),
+    min_size=1, max_size=4, unique_by=lambda t: t[0])
+
+
+@hypothesis.given(st.lists(_access_st, min_size=1, max_size=24))
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_sequential_replay_is_a_linear_extension(task_accs):
+    """Any graph built by inference must admit its own creation order as a
+    valid topological order (the sequential run is always a legal schedule),
+    and conflicting accesses to the same region must always be ordered."""
+    g = TaskGraph()
+    tasks = []
+    for i, accs in enumerate(task_accs):
+        acc = tuple(Access(Region(k, 8), Direction(d)) for k, d in accs)
+        t = Task(uid=g.new_uid(), name=f"t{i}", accesses=acc,
+                 costs={"smp": 1.0}, creation_index=i)
+        g.add_task(t)
+        tasks.append(t)
+    # creation order is a linear extension: every edge goes forward
+    for src, dsts in g.succ.items():
+        for dst in dsts:
+            assert src < dst
+    # conflict serialisation: for any two tasks touching the same region
+    # where at least one writes, there must be a path between them
+    reach = _reachability(g)
+    for i in range(len(tasks)):
+        for j in range(i + 1, len(tasks)):
+            for ai in tasks[i].accesses:
+                for aj in tasks[j].accesses:
+                    if ai.region.key == aj.region.key and (ai.writes or aj.writes):
+                        assert tasks[j].uid in reach[tasks[i].uid], \
+                            f"unordered conflict on {ai.region.key} between t{i},t{j}"
+
+
+def _reachability(g):
+    order = g.topological_order()
+    reach = {u: set() for u in g.tasks}
+    for u in reversed(order):
+        for v in g.succ.get(u, ()):
+            reach[u].add(v)
+            reach[u] |= reach[v]
+    return reach

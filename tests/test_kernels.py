@@ -1,0 +1,232 @@
+"""Per-kernel allclose validation against the pure-jnp oracles (interpret
+mode), with hypothesis sweeps over shapes/dtypes."""
+import functools
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul ---
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384),
+                                   (64, 64, 64), (100, 70, 50)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(m, k, n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a, b = rand(k1, (m, k), dtype), rand(k2, (k, n), dtype)
+    got = ops.matmul(a, b, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * k)
+
+
+@hypothesis.given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3),
+                  st.sampled_from([16, 32]))
+@hypothesis.settings(deadline=None, max_examples=12)
+def test_matmul_block_shape_sweep(mi, ki, ni, blk):
+    m, k, n = mi * blk, ki * blk, ni * blk
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * 31 + n))
+    a, b = rand(k1, (m, k)), rand(k2, (k, n))
+    got = ops.matmul(a, b, block_m=blk, block_n=blk, block_k=blk,
+                     interpret=True)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-4)
+
+
+# ------------------------------------------------------------- attention ---
+
+@pytest.mark.parametrize("bh,bkv,t,s,d", [(4, 4, 128, 128, 64),
+                                          (8, 2, 128, 128, 64),   # GQA 4:1
+                                          (2, 2, 96, 96, 32)])    # padded
+def test_attention_causal_matches_ref(bh, bkv, t, s, d):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (bh, t, d))
+    k = rand(ks[1], (bkv, s, d))
+    v = rand(ks[2], (bkv, s, d))
+    got = ops.attention(q, k, v, causal=True, block_q=64, block_k=64,
+                        interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (2, 128, 64))
+    k = rand(ks[1], (2, 128, 64))
+    v = rand(ks[2], (2, 128, 64))
+    got = ops.attention(q, k, v, causal=True, window=window,
+                        block_q=64, block_k=64, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (2, 64, 32), scale=3.0)
+    k = rand(ks[1], (2, 64, 32), scale=3.0)
+    v = rand(ks[2], (2, 64, 32))
+    got = ops.attention(q, k, v, causal=True, softcap=30.0,
+                        block_q=32, block_k=32, interpret=True)
+    want = ref.attention(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(st.sampled_from([1, 2, 4]), st.sampled_from([64, 96, 128]),
+                  st.sampled_from([32, 64]), st.booleans())
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_attention_shape_sweep(group, t, d, windowed):
+    bkv = 2
+    ks = jax.random.split(jax.random.PRNGKey(t * d + group), 3)
+    q = rand(ks[0], (bkv * group, t, d))
+    k = rand(ks[1], (bkv, t, d))
+    v = rand(ks[2], (bkv, t, d))
+    window = 48 if windowed else 0
+    got = ops.attention(q, k, v, causal=True, window=window,
+                        block_q=32, block_k=32, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = rand(ks[0], (2, 64, 64), jnp.bfloat16)
+    k = rand(ks[1], (2, 64, 64), jnp.bfloat16)
+    v = rand(ks[2], (2, 64, 64), jnp.bfloat16)
+    got = ops.attention(q, k, v, causal=True, block_q=32, block_k=32,
+                        interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ----------------------------------------------------------- linear attn ---
+
+def _lin_inputs(key, bh, h, t, dk, dv, decay_strength=1.0):
+    ks = jax.random.split(key, 5)
+    r = rand(ks[0], (bh, t, dk), scale=0.5)
+    k = rand(ks[1], (bh, t, dk), scale=0.5)
+    v = rand(ks[2], (bh, t, dv), scale=0.5)
+    # RWKV6-style data-dependent decay in (~e^-7, 1)
+    w = jnp.exp(-jnp.exp(rand(ks[3], (bh, t, dk)) * decay_strength))
+    u = rand(ks[4], (h, dk), scale=0.3)
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("t,chunk", [(64, 16), (96, 32), (70, 32)])
+def test_linear_attn_matches_recurrence(t, chunk):
+    r, k, v, w, u = _lin_inputs(jax.random.PRNGKey(5), 4, 2, t, 32, 32)
+    got = ops.linear_attn(r, k, v, w, u, chunk=chunk, interpret=True)
+    want = ref.linear_attention(r, k, v, w, u)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_linear_attn_strong_decay_stability():
+    """w down to e^-20 per step must not overflow the chunked form."""
+    r, k, v, w, u = _lin_inputs(jax.random.PRNGKey(6), 2, 2, 64, 16, 16,
+                                decay_strength=3.0)
+    w = jnp.minimum(w, 1e-6)
+    got = ops.linear_attn(r, k, v, w, u, chunk=32, interpret=True)
+    want = ref.linear_attention(r, k, v, w, u)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_linear_attn_scalar_decay_mamba_mode():
+    """Scalar per-head decay (Mamba2/SSD) = same kernel, w broadcast."""
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5)
+    bh, t, dk, dv = 2, 64, 16, 32
+    r = rand(ks[0], (bh, t, dk), scale=0.5)
+    k = rand(ks[1], (bh, t, dk), scale=0.5)
+    v = rand(ks[2], (bh, t, dv), scale=0.5)
+    a_t = jax.nn.sigmoid(rand(ks[3], (bh, t, 1)))         # scalar decay
+    w = jnp.broadcast_to(a_t, (bh, t, dk))
+    u = jnp.zeros((1, dk))                                # no bonus
+    got = ops.linear_attn(r, k, v, w, u, chunk=16, interpret=True)
+    want = ref.linear_attention(r, k, v, w, u)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@hypothesis.given(st.sampled_from([16, 48, 80]), st.sampled_from([16, 32]),
+                  st.sampled_from([8, 16]))
+@hypothesis.settings(deadline=None, max_examples=8)
+def test_linear_attn_shape_sweep(t, chunk, dk):
+    r, k, v, w, u = _lin_inputs(jax.random.PRNGKey(t + dk), 2, 1, t, dk, dk)
+    got = ops.linear_attn(r, k, v, w, u, chunk=chunk, interpret=True)
+    want = ref.linear_attention(r, k, v, w, u)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+# -------------------------------------------------------- cholesky tiles ---
+
+@pytest.mark.parametrize("bs", [32, 64])
+def test_syrk_tile(bs):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+    a = rand(k1, (bs, bs))
+    c = rand(k2, (bs, bs))
+    np.testing.assert_allclose(ops.syrk(a, c, interpret=True),
+                               ref.syrk(a, c), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("bs,panel", [(32, 8), (64, 16), (64, 64)])
+def test_trsm_tile(bs, panel):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+    m = rand(k1, (bs, bs))
+    a = jnp.triu(m @ m.T + bs * jnp.eye(bs))          # well-conditioned upper
+    a = jnp.linalg.cholesky(m @ m.T + bs * jnp.eye(bs)).T
+    b = rand(k2, (bs, bs))
+    got = ops.trsm(a, b, panel=panel, interpret=True)
+    want = ref.trsm(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_gemm_update_tile():
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    a, b, c = (rand(k, (64, 64)) for k in ks)
+    got = ops.gemm_update(a, b, c, interpret=True)
+    want = c - b.T @ a
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_blocked_cholesky_via_tiles():
+    """End-to-end: the Fig. 4 algorithm with Pallas tiles factorises SPD."""
+    n, bs = 128, 32
+    rng = np.random.default_rng(0)
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    a_full = m @ m.T + n * np.eye(n, dtype=np.float32)
+    nb = n // bs
+    blocks = {(j, kk): jnp.asarray(a_full[j*bs:(j+1)*bs, kk*bs:(kk+1)*bs])
+              for j in range(nb) for kk in range(nb)}
+    for kk in range(nb):
+        for j in range(kk):
+            blocks[(kk, kk)] = ops.syrk(blocks[(j, kk)], blocks[(kk, kk)],
+                                        interpret=True)
+        blocks[(kk, kk)] = jnp.linalg.cholesky(blocks[(kk, kk)]).T  # dpotrf
+        for i in range(kk + 1, nb):
+            for j in range(kk):
+                blocks[(kk, i)] = ops.gemm_update(
+                    blocks[(j, i)], blocks[(j, kk)], blocks[(kk, i)],
+                    interpret=True)
+        for i in range(kk + 1, nb):
+            blocks[(kk, i)] = ops.trsm(blocks[(kk, kk)], blocks[(kk, i)],
+                                       panel=8, interpret=True)
+    u = np.zeros((n, n), np.float32)
+    for j in range(nb):
+        for kk in range(j, nb):
+            u[j*bs:(j+1)*bs, kk*bs:(kk+1)*bs] = blocks[(j, kk)]
+    np.testing.assert_allclose(u.T @ u, a_full, rtol=2e-3, atol=2e-1)

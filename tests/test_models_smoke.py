@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+configs, one forward/train step on CPU, output shapes + no NaNs.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+from repro.train import optimizer as opt_mod
+from repro.train import step as step_mod
+
+ARCHS = sorted(configs.arch_ids())
+
+
+@pytest.fixture(scope="module")
+def states():
+    return {}
+
+
+def _setup(aid):
+    cfg = configs.get_smoke(aid)
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    batch = configs.smoke_batch(cfg, batch=2, seq=32)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("aid", ARCHS)
+def test_forward_shapes_and_finite(aid):
+    cfg, params, batch = _setup(aid)
+    logits, aux = T.forward(cfg, params, batch)
+    t_text = batch["tokens"].shape[1]
+    assert logits.shape == (2, t_text, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("aid", ARCHS)
+def test_train_step_finite_and_updates(aid):
+    cfg, params, batch = _setup(aid)
+    tcfg = step_mod.TrainConfig(opt=opt_mod.OptConfig(lr=1e-3))
+    train_step = jax.jit(step_mod.make_train_step(cfg, tcfg))
+    opt_state = opt_mod.init(tcfg.opt, params)
+    new_params, new_opt, metrics = train_step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_opt.step) == 1
+    # at least the embedding table must have moved
+    delta = np.abs(np.asarray(new_params["embed"]["table"], np.float32)
+                   - np.asarray(params["embed"]["table"], np.float32)).max()
+    assert delta > 0
+
+
+@pytest.mark.parametrize("aid", ARCHS)
+def test_full_config_exact_numbers(aid):
+    """The registry must carry the exact published configuration."""
+    cfg = configs.get_config(aid)
+    expected = {
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151_936),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151_936),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256_000),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151_936),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32_768),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202_048),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65_536),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32_000),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131_072),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51_865),
+    }[aid]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected
+
+
+def test_moe_top2_and_softcap_features():
+    mx = configs.get_config("mixtral-8x22b")
+    assert mx.n_experts == 8 and mx.top_k == 2
+    assert mx.pattern[0].window == 4096
+    g2 = configs.get_config("gemma2-2b")
+    assert g2.attn_softcap == 50.0 and g2.final_softcap == 30.0
+    assert g2.pattern[0].window == 4096 and g2.pattern[1].window == 0
+    l4 = configs.get_config("llama4-maverick-400b-a17b")
+    assert l4.n_experts == 128 and l4.top_k == 1 and l4.shared_expert
+    z2 = configs.get_config("zamba2-1.2b")
+    assert z2.shared_every == 6 and z2.n_shared_sites == 6
+
+
+def test_param_counts_match_published_sizes():
+    sizes = {"qwen3-4b": 4.0e9, "qwen3-0.6b": 0.6e9, "gemma2-2b": 2.6e9,
+             "qwen1.5-4b": 4.0e9, "mixtral-8x22b": 141e9,
+             "llama4-maverick-400b-a17b": 400e9, "rwkv6-1.6b": 1.6e9,
+             "zamba2-1.2b": 1.2e9, "pixtral-12b": 12e9,
+             "whisper-tiny": 39e6}
+    for aid, expect in sizes.items():
+        n = configs.get_config(aid).param_count()
+        assert 0.7 * expect < n < 1.35 * expect, (aid, n, expect)

@@ -1,0 +1,93 @@
+"""Roofline analysis unit tests: HLO collective parser, probe
+extrapolation, analytic traffic floor, and cell scoring."""
+import numpy as np
+import pytest
+
+from repro.launch.dryrun import collective_bytes, probe_unit
+from repro.roofline.model import (V5E, analyze_record, extrapolate_terms,
+                                  model_flops)
+
+HLO = """
+ENTRY %main {
+  %p0 = f32[16,512]{1,0} parameter(0)
+  %all-reduce.1 = f32[16,512]{1,0} all-reduce(%fusion.1), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[256,1024]{1,0} all-gather(%shard), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[4,128]{1,0} reduce-scatter(%big), channel_id=3, replica_groups=[64,4]<=[256], to_apply=%add
+  %cp = bf16[8,8]{1,0} collective-permute(%x), channel_id=4, source_target_pairs={{0,1},{1,0}}
+  %not-a-collective = f32[2,2]{1,0} add(%a, %b)
+}
+"""
+
+
+def test_collective_parser_operand_and_wire_bytes():
+    out = collective_bytes(HLO)
+    # all-reduce: operand = result = 16·512·4
+    assert out["per_op_bytes"]["all-reduce"] == 16 * 512 * 4
+    # all-gather: operand = result / group = 256·1024·2 / 16
+    assert out["per_op_bytes"]["all-gather"] == 256 * 1024 * 2 // 16
+    # reduce-scatter: operand = result × group = 4·128·4·4
+    assert out["per_op_bytes"]["reduce-scatter"] == 4 * 128 * 4 * 4
+    assert out["per_op_counts"]["collective-permute"] == 1
+    # ring wire: AR 2·o·(g-1)/g; AG o·(g-1)
+    ar_o = 16 * 512 * 4
+    assert out["per_op_wire_bytes"]["all-reduce"] == int(2 * ar_o * 15 / 16)
+    ag_o = 256 * 1024 * 2 // 16
+    assert out["per_op_wire_bytes"]["all-gather"] == ag_o * 15
+
+
+def _rec(flops, bts, wire, n_layers, kind="train", arch="qwen3-0.6b",
+         full=None, gb=256, seq=4096):
+    return {
+        "arch": arch, "shape": "train_4k", "mesh": "data=16×model=16",
+        "kind": kind, "n_devices": 256, "tag": "",
+        "n_layers": n_layers, "full_n_layers": full or n_layers,
+        "seq_len": seq, "global_batch": gb,
+        "params": 596_049_920, "active_params": 596_049_920,
+        "cost_analysis": {"flops": flops, "bytes accessed": bts},
+        "collectives": {"wire_bytes": wire},
+        "memory": {"peak_memory_in_bytes": 2_000_000_000},
+    }
+
+
+def test_extrapolation_linear():
+    p1 = _rec(10.0, 100.0, 5.0, 1)
+    p2 = _rec(16.0, 160.0, 8.0, 2)
+    t = extrapolate_terms(p1, p2, 28)
+    assert t["flops"] == pytest.approx(10 + 6 * 27)      # O=4, B=6
+    assert t["bytes"] == pytest.approx(100 + 60 * 27)
+    assert t["wire"] == pytest.approx(5 + 3 * 27)
+
+
+def test_extrapolation_negative_slope_fallback():
+    p1 = _rec(10.0, 100.0, 50.0, 1)   # wire SHRINKS with depth: strategy flip
+    p2 = _rec(16.0, 160.0, 30.0, 2)
+    t = extrapolate_terms(p1, p2, 28)
+    assert t["wire"] == pytest.approx(30.0 / 2 * 28)     # proportional
+    assert t["flops"] == pytest.approx(10 + 6 * 27)      # others unaffected
+
+
+def test_model_flops_kinds():
+    r = _rec(1, 1, 1, 28)
+    assert model_flops(r) == 6.0 * r["params"] * 256 * 4096
+    r["kind"] = "prefill"
+    assert model_flops(r) == 2.0 * r["params"] * 256 * 4096
+    r["kind"] = "decode"
+    assert model_flops(r) == 2.0 * r["params"] * 256
+
+
+def test_analyze_record_fraction_in_unit_range():
+    rec = _rec(1e13, 1e12, 1e9, 28)
+    cell = analyze_record(rec)
+    assert 0 < cell.roofline_fraction <= 1.0
+    assert cell.dominant in ("compute", "memory", "collective")
+    assert cell.fits is True
+    # ideal must be at least the analytic memory floor
+    assert cell.ideal_s >= cell.memory_s - 1e-12
+
+
+def test_probe_units_per_family():
+    from repro import configs
+    assert probe_unit(configs.get_config("qwen3-4b")) == 1
+    assert probe_unit(configs.get_config("gemma2-2b")) == 2      # local+global
+    assert probe_unit(configs.get_config("llama4-maverick-400b-a17b")) == 2
+    assert probe_unit(configs.get_config("zamba2-1.2b")) == 6    # shared site

@@ -1,0 +1,68 @@
+"""Framework-level step estimator: graph construction, overlap semantics,
+bounds vs the closed-form roofline, and the pod co-design sweep."""
+import pytest
+
+from repro.core.steptask import (LayerCosts, build_step_graph, codesign_sweep,
+                                 estimate_step, pod_chip_system)
+from repro.core.simulator import simulate
+
+
+def _probe(l, flops, bts, wire):
+    return {"n_layers": l,
+            "cost_analysis": {"flops": flops, "bytes accessed": bts},
+            "collectives": {"wire_bytes": wire}}
+
+
+P1 = _probe(1, 2e12, 1e11, 5e9)
+P2 = _probe(2, 3e12, 1.5e11, 7.5e9)   # slope: 1e12 flops, 2.5e9 wire /layer
+
+
+def test_layer_costs_from_probes():
+    c = LayerCosts.from_probes(P1, P2, 32)
+    assert c.n_layers == 32
+    assert c.layer_compute == pytest.approx(1e12 / 197e12)
+    assert c.layer_collective == pytest.approx(2.5e9 / 50e9)
+    assert c.head_compute == pytest.approx(1e12 / 197e12)   # intercept
+    assert c.dci_collective == 0.0
+
+
+def test_blocking_vs_overlap_makespan():
+    c = LayerCosts.from_probes(P1, P2, 32)
+    block = simulate(build_step_graph(c, overlap=False), pod_chip_system(),
+                     policy="eft").makespan
+    ovl = simulate(build_step_graph(c, overlap=True), pod_chip_system(),
+                   policy="eft").makespan
+    assert ovl <= block
+    # blocking serializes compute+collective per layer
+    serial = 32 * (c.layer_compute + c.layer_collective)
+    assert block >= serial * 0.99
+    # overlap hides the smaller term per layer
+    hidden = 32 * max(c.layer_compute, c.layer_collective)
+    assert ovl <= serial
+    assert ovl >= hidden * 0.99
+
+
+def test_makespan_at_least_max_term():
+    """Simulated step ≥ every single-resource total (roofline bound)."""
+    c = LayerCosts.from_probes(P1, P2, 16)
+    est = estimate_step("a", "s", P1, P2, 16, overlap=True)
+    tpu_total = 16 * c.layer_compute + c.head_compute
+    ici_total = 16 * c.layer_collective + c.head_collective
+    assert est.makespan_s >= max(tpu_total, ici_total) - 1e-12
+
+
+def test_multipod_adds_dci_hop():
+    one = estimate_step("a", "s", P1, P2, 16, pods=1, params=4_000_000_000)
+    two = estimate_step("a", "s", P1, P2, 16, pods=2, params=4_000_000_000)
+    assert two.costs.dci_collective > 0
+    assert two.makespan_s >= one.makespan_s
+
+
+def test_codesign_sweep_ranks():
+    cands = {
+        "shallow": (P1, P2, 8),
+        "deep": (P1, P2, 64),
+    }
+    ranked = codesign_sweep(cands, "a", "s")
+    assert [e.variant for e in ranked] == ["shallow", "deep"]
+    assert ranked[0].makespan_s < ranked[1].makespan_s
