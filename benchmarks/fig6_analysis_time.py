@@ -25,7 +25,7 @@ import jax
 import numpy as np
 
 from repro.apps import matmul as mm
-from repro.core import a9_smp_seconds, explore
+from repro.core import Explorer, a9_smp_seconds, explore
 from repro.kernels.block_matmul import block_matmul
 
 
@@ -64,17 +64,62 @@ def run(n: int = 256) -> List[Tuple[str, float, str]]:
     rows: List[Tuple[str, float, str]] = []
 
     # --- estimator toolchain: trace once per granularity + simulate all ----
+    # The exploration engine (graph/sim memoization + worker pool) is the
+    # production path; the seed's serial uncached loop is kept as the
+    # baseline so the engine's own speedup is measured per run.
     t0 = time.perf_counter()
     traces = {bs: mm.trace_matmul(n=n, bs=bs, verify=False) for bs in (64, 128)}
     reports = mm.report_map()
     a9 = a9_smp_seconds("float32")
-    n_cands = 0
-    for bs, clist in mm.candidates().items():
-        res = explore(traces[bs], clist, reports, smp_seconds_fn=a9)
-        n_cands += len(res.table)
-    est_s = time.perf_counter() - t0
+    trace_s = time.perf_counter() - t0
+
+    # untimed warmup so neither flow pays first-call numpy/allocator costs
+    explore(traces[128], mm.candidates()[128], reports, smp_seconds_fn=a9,
+            max_workers=1, cache=False)
+
+    reps = 5   # average repeated passes: single sweeps are noise-dominated
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        serial = {bs: explore(traces[bs], clist, reports, smp_seconds_fn=a9,
+                              max_workers=1, cache=False)
+                  for bs, clist in mm.candidates().items()}
+    serial_s = (time.perf_counter() - t0) / reps
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        explorers = {bs: Explorer(traces[bs], reports, smp_seconds_fn=a9)
+                     for bs in traces}
+        engine = {}
+        n_cands = 0
+        for bs, clist in mm.candidates().items():
+            engine[bs] = explorers[bs].explore(clist)
+            n_cands += len(engine[bs].table)
+    engine_s = (time.perf_counter() - t0) / reps
+
+    # the co-design loop is iterative: the same candidates are re-ranked as
+    # the programmer refines the sweep — a refinement pass hits the caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for bs, clist in mm.candidates().items():
+            engine[bs] = explorers[bs].explore(clist)
+    rerank_s = (time.perf_counter() - t0) / reps
+
+    for bs in engine:
+        assert ([o.name for o in engine[bs].ranked]
+                == [o.name for o in serial[bs].ranked]), \
+            "engine must reproduce the serial ranking"
+    est_s = trace_s + engine_s
     rows.append(("fig6/estimator_toolchain", est_s * 1e6,
                  f"candidates={n_cands},seconds={est_s:.3f}"))
+    rows.append(("fig6/explore_serial_uncached", serial_s * 1e6,
+                 f"candidates={n_cands},seconds={serial_s:.3f}"))
+    rows.append(("fig6/explore_engine", engine_s * 1e6,
+                 f"candidates={n_cands},seconds={engine_s:.3f},"
+                 f"fresh_speedup={serial_s / engine_s:.1f}x,"
+                 f"throughput={n_cands / engine_s:.0f}cand_per_s"))
+    rows.append(("fig6/explore_engine_rerank", rerank_s * 1e6,
+                 f"candidates={n_cands},seconds={rerank_s:.4f},"
+                 f"cached_speedup={serial_s / rerank_s:.0f}x"))
 
     # --- traditional flow: build+run per candidate --------------------------
     trad_s = 0.0

@@ -9,10 +9,16 @@ terms, and prints before→after — one hypothesis→change→measure→validat
 iteration per candidate.  Results land as tagged artifacts next to the
 baselines, so EXPERIMENTS.md §Perf can cite exact numbers.
 
+Candidate enumeration and local search go through the exploration engine
+(``repro.core.explore``): grids are ``DesignSpace`` points, and the Zynq
+sweep is a cached ``Explorer.hillclimb`` — every re-visited neighbour is a
+dictionary lookup, not a re-simulation.
+
 Usage:
   python -m benchmarks.hillclimb gemma2-prefill     # hillclimb A
   python -m benchmarks.hillclimb llama4-train       # hillclimb B
   python -m benchmarks.hillclimb qwen3-codesign     # hillclimb C
+  python -m benchmarks.hillclimb zynq-codesign      # hillclimb D (paper §VI)
 """
 import json
 import sys
@@ -163,22 +169,30 @@ def qwen3_codesign():
     show("mesh 64x4 + remat=dots", c3)
 
     # feed every variant through the paper-style estimator (ms each) in
-    # both overlap modes; the decision table is the deliverable.
+    # both overlap modes; the decision table is the deliverable.  The
+    # (variant × overlap) grid is a DesignSpace, evaluated through the
+    # same order-preserving pool the Zynq explorer uses.
+    from repro.core.explore import DesignSpace, parallel_map
+
     probes_base = sorted(
         (r for r in records if r["arch"] == arch and r["shape"] == shape
          and r.get("tag", "").startswith("probe")),
         key=lambda r: r["n_layers"])
     full = next(r for r in records if r["arch"] == arch
                 and r["shape"] == shape and not r.get("tag"))
-    table = {}
-    for name in variants:
-        pr = probes_base if variants[name] is None else variants[name]
-        for overlap in (False, True):
-            est = estimate_step(arch, shape, pr[0], pr[1],
-                                full["full_n_layers"], overlap=overlap,
-                                params=full["params"],
-                                variant=f"{name}/{'ovl' if overlap else 'blk'}")
-            table[est.variant] = est.makespan_s
+    space = DesignSpace({"variant": tuple(variants),
+                         "overlap": (False, True)})
+
+    def _estimate(point):
+        pr = (probes_base if variants[point["variant"]] is None
+              else variants[point["variant"]])
+        tag = f"{point['variant']}/{'ovl' if point['overlap'] else 'blk'}"
+        return estimate_step(arch, shape, pr[0], pr[1],
+                             full["full_n_layers"], overlap=point["overlap"],
+                             params=full["params"], variant=tag)
+
+    table = {est.variant: est.makespan_s
+             for est in parallel_map(_estimate, list(space.points()))}
     print("  co-design table (predicted step seconds):")
     for k, v in sorted(table.items(), key=lambda kv: kv[1]):
         print(f"    {k:12s} {v:.4f}")
@@ -186,6 +200,47 @@ def qwen3_codesign():
     print(f"  chosen: {best} — one full-scale compile instead of "
           f"{len(table)}")
     return cells
+
+
+def zynq_codesign():
+    """Hillclimb D — the paper's own §VI space, searched instead of swept.
+
+    Axes: mxm granularity implied by the trace (bs=64), #accelerator slots
+    and ±SMP heterogeneous execution.  The Explorer caches graphs across
+    the walk (slot-count moves share one augmented graph), so each step is
+    a simulate — and each *revisit* is free.
+    """
+    from repro.apps import matmul as mm
+    from repro.core import (DesignSpace, Eligibility, Explorer,
+                            a9_smp_seconds, zynq_system)
+
+    print("=== hillclimb D: Zynq mxm co-design (explore engine) ===")
+    trace = mm.trace_matmul(n=256, bs=64, verify=False)
+    reports = mm.report_map()
+    reps = mm.hls_reports()
+    explorer = Explorer(trace, reports,
+                        smp_seconds_fn=a9_smp_seconds("float32"))
+    space = DesignSpace({"n_acc": (1, 2, 3, 4), "smp": (False, True)})
+
+    def build(point):
+        kind = "fpga:mxm64"
+        name = f"{point['n_acc']}acc64" + ("+smp" if point["smp"] else "")
+        kinds = (kind, "smp") if point["smp"] else (kind,)
+        return mm.Candidate(
+            name=name, system=zynq_system(name, {kind: point["n_acc"]}),
+            eligibility=Eligibility({"mxm_block": kinds}),
+            fabric=[(reps[64], point["n_acc"])])
+
+    best, best_s, history = explorer.hillclimb(
+        space, build, start={"n_acc": 1, "smp": True})
+    for point, s in history:
+        label = f"{point['n_acc']}acc64" + ("+smp" if point["smp"] else "")
+        t = "infeasible" if s == float("inf") else f"{s * 1e3:8.3f} ms"
+        print(f"  {label:12s} {t}")
+    print(f"  chosen: {best['n_acc']}acc64{'+smp' if best['smp'] else ''} "
+          f"= {best_s * 1e3:.3f} ms after {len(history)} evals "
+          f"(cache {explorer.stats.as_dict()})")
+    return best, best_s
 
 
 def main() -> int:
@@ -196,6 +251,8 @@ def main() -> int:
         llama4_train()
     if which in ("qwen3-codesign", "all"):
         qwen3_codesign()
+    if which in ("zynq-codesign", "all"):
+        zynq_codesign()
     return 0
 
 

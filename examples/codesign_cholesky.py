@@ -2,14 +2,14 @@
 
 Which kernels (dgemm/dsyrk/dtrsm; dpotrf is SMP-only as in Fig. 4) deserve
 the FPGA slots?  Full-resource single-accelerator variants vs two-kernel
-combinations — estimated AND reference-executed, with trend agreement.
+combinations — estimated through the exploration engine AND
+reference-executed, with trend agreement.
 
 Run: PYTHONPATH=src python examples/codesign_cholesky.py
 """
 from repro.apps import cholesky as ch
-from repro.core import (a9_smp_seconds, estimate, reference_run,
-                        same_best, spearman_rank_correlation,
-                        speedup_table)
+from repro.core import (Explorer, a9_smp_seconds, reference_run, same_best,
+                        spearman_rank_correlation, speedup_table)
 
 trace = ch.trace_cholesky(n=512, bs=64)
 reports = ch.report_map(bs=64)
@@ -17,21 +17,19 @@ a9 = a9_smp_seconds("float64")
 print(f"trace: {len(trace)} tasks "
       f"(complex interleaved dependency graph, paper Fig. 8)")
 
-est, ref = [], []
-for cand in ch.candidates(bs=64):
-    e = estimate(trace, cand.system, reports, cand.eligibility,
-                 smp_seconds_fn=a9)
-    r = reference_run(trace, cand.system, reports, cand.eligibility,
-                      smp_seconds_fn=a9)
-    est.append(e)
-    ref.append(r)
-    print(f"  {cand.name:22s} est {e.makespan_s * 1e3:8.2f} ms | "
-          f"ref {r.makespan_s * 1e3:8.2f} ms")
+candidates = ch.candidates(bs=64)
+explorer = Explorer(trace, reports, smp_seconds_fn=a9)
+res = explorer.explore(candidates, top_k=3)
+print("\n".join(res.report_lines()))
 
-s_est, s_ref = speedup_table(est), speedup_table(ref)
+ref = [reference_run(trace, cand.system, reports, cand.eligibility,
+                     smp_seconds_fn=a9)
+       for cand in candidates if cand.name in res.estimates]
+
+s_est, s_ref = res.speedups(), speedup_table(ref)
 rho = spearman_rank_correlation(s_est, s_ref)
 print(f"\ntrend agreement: Spearman ρ = {rho:.3f}, "
       f"same best config = {same_best(s_est, s_ref)}")
-best = max(s_est, key=lambda k: s_est[k])
 print(f"decision after minutes (not a day and a half of bitstreams): "
-      f"{best}")
+      f"{res.best_name}")
+print(f"top-3: {[o.name for o in res.top(3)]}")

@@ -13,6 +13,7 @@ Run after the dry-run sweep:
 import sys
 import time
 
+from repro.core.explore import DesignSpace, parallel_map
 from repro.core.steptask import estimate_step
 from repro.core.paraver import ascii_gantt
 from repro.roofline.model import load_artifacts
@@ -32,17 +33,25 @@ assert len(probes) >= 2, "run the probe sweep first"
 print(f"cell: {arch} × {shape} ({full['params'] / 1e9:.2f}B params, "
       f"{full['full_n_layers']} layers)")
 
+# the same generator+pool machinery as the Zynq sweep, over step-task
+# candidates: a 2×2 grid of (overlap schedule × pod count)
+space = DesignSpace({"overlap": (False, True), "pods": (1, 2)})
+
+
+def _evaluate(point):
+    name = f"{'overlap' if point['overlap'] else 'blocking'}-{point['pods']}pod"
+    return estimate_step(arch, shape, probes[0], probes[1],
+                         full["full_n_layers"], overlap=point["overlap"],
+                         pods=point["pods"], params=full["params"],
+                         variant=name)
+
+
 t0 = time.perf_counter()
-candidates = {}
-for overlap in (False, True):
-    for pods in (1, 2):
-        name = f"{'overlap' if overlap else 'blocking'}-{pods}pod"
-        candidates[name] = estimate_step(
-            arch, shape, probes[0], probes[1], full["full_n_layers"],
-            overlap=overlap, pods=pods, params=full["params"], variant=name)
+estimates = parallel_map(_evaluate, list(space.points()))
+candidates = {e.variant: e for e in estimates}
 dt = time.perf_counter() - t0
 
-print(f"\n4 candidates simulated in {dt * 1e3:.1f} ms "
+print(f"\n{space.size} candidates simulated in {dt * 1e3:.1f} ms "
       f"(vs ~minutes per 512-chip re-compile, hours per pod retune):")
 for name, est in sorted(candidates.items(), key=lambda kv: kv[1].makespan_s):
     u = est.sim.utilization()

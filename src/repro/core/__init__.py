@@ -14,7 +14,9 @@ from .simulator import ScheduledTask, SimResult, Simulator, simulate
 from .estimator import (PerfEstimate, contention_time_model, estimate,
                         reference_run, same_best, spearman_rank_correlation,
                         speedup_table)
-from .codesign import Candidate, ExplorationResult, explore
+from .explore import (Axis, CacheStats, Candidate, CandidateOutcome,
+                      DesignSpace, ExplorationResult, Explorer, explore,
+                      hillclimb, lower_bound_seconds, parallel_map)
 from .paraver import ascii_gantt, write_prv
 
 __all__ = [
@@ -29,6 +31,8 @@ __all__ = [
     "ScheduledTask", "SimResult", "Simulator", "simulate",
     "PerfEstimate", "contention_time_model", "estimate", "reference_run",
     "same_best", "spearman_rank_correlation", "speedup_table",
-    "Candidate", "ExplorationResult", "explore",
+    "Axis", "CacheStats", "Candidate", "CandidateOutcome", "DesignSpace",
+    "ExplorationResult", "Explorer", "explore", "hillclimb",
+    "lower_bound_seconds", "parallel_map",
     "ascii_gantt", "write_prv",
 ]

@@ -4,83 +4,20 @@ A :class:`Candidate` bundles what the paper's programmer varies per
 configuration: the hardware system (how many accelerator slots of which
 kernel/granularity) and the task eligibility map (which kernels may run
 where, i.e. the ``target device(...)`` annotations).  ``explore()`` runs the
-estimator over every candidate — seconds in total — checks FPGA resource
-feasibility exactly like the paper discards "2 × 128×128 mxm" (it does not
-fit the fabric), and returns a ranked table plus the best pick.
+estimator over every candidate, checks FPGA resource feasibility exactly
+like the paper discards "2 × 128×128 mxm" (it does not fit the fabric), and
+returns a ranked table plus the best pick.
+
+The engine itself lives in :mod:`repro.core.explore` (candidate generators,
+graph/simulation memoization, parallel evaluation, lower-bound pruning);
+this module is the stable import surface the apps and older callers use.
 """
-from __future__ import annotations
+from .explore import (Axis, Candidate, CandidateOutcome, CacheStats,
+                      DesignSpace, ExplorationResult, Explorer, explore,
+                      hillclimb, lower_bound_seconds, parallel_map)
 
-import dataclasses
-import time
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
-
-from .augment import Eligibility
-from .devices import SystemConfig
-from .estimator import PerfEstimate, estimate
-from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
-from .trace import Trace
-
-
-@dataclasses.dataclass
-class Candidate:
-    """One hardware/software co-design point."""
-
-    name: str
-    system: SystemConfig
-    eligibility: Eligibility
-    # (report, count) pairs describing what is instantiated in the fabric —
-    # used for the feasibility check before any simulation.
-    fabric: Sequence[Tuple[KernelReport, int]] = ()
-
-    def feasible(self, budget: Mapping[str, float] = ZYNQ_7045_BUDGET) -> bool:
-        return fits(list(self.fabric), budget)
-
-
-@dataclasses.dataclass
-class ExplorationResult:
-    table: List[PerfEstimate]                  # feasible candidates, ranked
-    infeasible: List[str]                      # rejected by the fabric budget
-    best: Optional[PerfEstimate]
-    wall_seconds: float
-
-    def speedups(self, baseline: Optional[str] = None) -> Dict[str, float]:
-        from .estimator import speedup_table
-        return speedup_table(self.table, baseline)
-
-    def report_lines(self) -> List[str]:
-        lines = [f"{'candidate':38s} {'est. time':>12s} {'speedup':>8s} "
-                 f"{'bottleneck':>12s}"]
-        if not self.table:
-            return lines + ["  (no feasible candidate)"]
-        worst = max(r.makespan_s for r in self.table)
-        for r in sorted(self.table, key=lambda r: r.makespan_s):
-            lines.append(f"{r.candidate:38s} {r.makespan_s * 1e3:10.3f}ms"
-                         f" {worst / r.makespan_s:8.2f} {r.sim.bottleneck():>12s}")
-        for name in self.infeasible:
-            lines.append(f"{name:38s} {'—':>12s} {'—':>8s} {'infeasible':>12s}")
-        lines.append(f"total analysis time: {self.wall_seconds:.3f}s")
-        return lines
-
-
-def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
-            policy: str = "availability", smp_scale: float = 1.0,
-            smp_seconds_fn=None,
-            budget: Mapping[str, float] = ZYNQ_7045_BUDGET) -> ExplorationResult:
-    """Estimate every feasible candidate; rank; pick the best.
-
-    This is the "coffee-break" loop: its wall time replaces one bitstream
-    generation *per candidate* in the traditional flow.
-    """
-    t0 = time.perf_counter()
-    table: List[PerfEstimate] = []
-    infeasible: List[str] = []
-    for cand in candidates:
-        if cand.fabric and not cand.feasible(budget):
-            infeasible.append(cand.name)
-            continue
-        table.append(estimate(trace, cand.system, reports, cand.eligibility,
-                              policy=policy, smp_scale=smp_scale,
-                              smp_seconds_fn=smp_seconds_fn))
-    best = min(table, key=lambda r: r.makespan_s) if table else None
-    return ExplorationResult(table=table, infeasible=infeasible, best=best,
-                             wall_seconds=time.perf_counter() - t0)
+__all__ = [
+    "Axis", "Candidate", "CandidateOutcome", "CacheStats", "DesignSpace",
+    "ExplorationResult", "Explorer", "explore", "hillclimb",
+    "lower_bound_seconds", "parallel_map",
+]

@@ -1,0 +1,641 @@
+"""Design-space exploration engine — the paper's §VI loop, industrialised.
+
+The seed ``explore()`` was a serial for-loop: build one augmented task graph
+per candidate, simulate, rank.  At co-design scale (the ROADMAP's "more
+scenarios, faster") the loop shape matters more than any single estimate:
+CEDR-style sweeps run thousands of scheduler×accelerator points and
+hardware-HEFT ranks whole candidate batches.  This module turns the loop
+into a subsystem:
+
+* **Candidate generators** — :class:`DesignSpace` enumerates grid points,
+  random samples, and hill-climb neighbourhoods over named design axes
+  (block size, #accelerator slots, ±SMP, overlap mode...).  One generator
+  API serves the Zynq fabric sweep, the pod-level step-task sweep and the
+  ``benchmarks/hillclimb.py`` searches.
+* **Memoization** — augmentation dominates repeat cost, and candidates that
+  differ only in *slot counts* (1acc vs 2acc) share the same augmented
+  graph.  :class:`Explorer` caches graphs per (eligibility × cost-relevant
+  system knobs) and whole simulations per (graph × pool layout × policy),
+  with hit/miss counters (:class:`CacheStats`).
+* **Parallel evaluation** — a worker pool evaluates candidates in
+  deterministic chunks; results are ordered by submission index, so any
+  worker count produces bit-identical tables.  (Default is serial: the
+  coarse simulator is GIL-bound pure Python — threads are for evaluators
+  that do native work.)
+* **Early pruning** — fabric-infeasible candidates are rejected before any
+  graph is built (the paper's "2×128 mxm does not fit" check), and an
+  optional lower-bound cut skips simulating candidates whose critical path
+  already exceeds the current best: the bound is exact (conditional DMA
+  tasks are zero-costed), so the true optimum is never discarded.
+* **Structured results** — :class:`ExplorationResult` v2 records one
+  :class:`CandidateOutcome` per candidate (status, makespan, lower bound,
+  per-candidate analysis time, cache provenance), a ranked top-k table, and
+  JSON round-trip serialisation for storing sweeps as artifacts.
+
+``explore()`` keeps the seed signature as a thin front-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import random
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Any, Callable, Dict, Iterator, List, Mapping,
+                    Optional, Sequence, Tuple)
+
+from .augment import Eligibility, build_graph
+from .devices import SystemConfig
+from .estimator import PerfEstimate
+from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
+from .simulator import SimResult, simulate
+from .taskgraph import TaskGraph
+from .trace import Trace
+
+
+# ---------------------------------------------------------------------------
+# Candidates
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One hardware/software co-design point."""
+
+    name: str
+    system: SystemConfig
+    eligibility: Eligibility
+    # (report, count) pairs describing what is instantiated in the fabric —
+    # used for the feasibility check before any graph is built.
+    fabric: Sequence[Tuple[KernelReport, int]] = ()
+
+    def feasible(self, budget: Mapping[str, float] = ZYNQ_7045_BUDGET) -> bool:
+        return fits(list(self.fabric), budget)
+
+
+# ---------------------------------------------------------------------------
+# Candidate generators: grid / random / hill-climb neighbourhoods
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Axis:
+    """One named design dimension and its discrete, ordered values."""
+
+    name: str
+    values: Tuple[Any, ...]
+
+    def __post_init__(self) -> None:
+        if not self.values:
+            raise ValueError(f"axis {self.name!r} has no values")
+
+
+class DesignSpace:
+    """Cartesian product of :class:`Axis` — the candidate generator.
+
+    Construct from a mapping (ordered) or a sequence of axes::
+
+        space = DesignSpace({"n_acc": (1, 2, 3), "smp": (False, True)})
+        for point in space.points(): ...          # grid, deterministic order
+        space.sample(8, seed=0)                   # distinct random points
+        space.neighbors({"n_acc": 2, "smp": False})   # ±1 step per axis
+    """
+
+    def __init__(self, axes: Mapping[str, Sequence[Any]] | Sequence[Axis]):
+        if isinstance(axes, Mapping):
+            self.axes: Tuple[Axis, ...] = tuple(
+                Axis(k, tuple(v)) for k, v in axes.items())
+        else:
+            self.axes = tuple(axes)
+        if not self.axes:
+            raise ValueError("empty design space")
+        names = [a.name for a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names: {names}")
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for a in self.axes:
+            n *= len(a.values)
+        return n
+
+    def points(self) -> Iterator[Dict[str, Any]]:
+        """Full grid in row-major axis order (deterministic)."""
+        for combo in itertools.product(*(a.values for a in self.axes)):
+            yield {a.name: v for a, v in zip(self.axes, combo)}
+
+    def point_at(self, flat_index: int) -> Dict[str, Any]:
+        if not 0 <= flat_index < self.size:
+            raise IndexError(flat_index)
+        out: Dict[str, Any] = {}
+        for a in reversed(self.axes):
+            flat_index, i = divmod(flat_index, len(a.values))
+            out[a.name] = a.values[i]
+        return {a.name: out[a.name] for a in self.axes}
+
+    def sample(self, n: int, seed: int = 0) -> List[Dict[str, Any]]:
+        """``n`` distinct grid points, deterministic in ``seed``."""
+        n = min(n, self.size)
+        rng = random.Random(seed)
+        idx = rng.sample(range(self.size), n)
+        return [self.point_at(i) for i in idx]
+
+    def neighbors(self, point: Mapping[str, Any]) -> List[Dict[str, Any]]:
+        """All points one value-step away along a single axis."""
+        out: List[Dict[str, Any]] = []
+        for a in self.axes:
+            i = a.values.index(point[a.name])
+            for j in (i - 1, i + 1):
+                if 0 <= j < len(a.values):
+                    nb = dict(point)
+                    nb[a.name] = a.values[j]
+                    out.append(nb)
+        return out
+
+
+def hillclimb(space: DesignSpace, score: Callable[[Mapping[str, Any]], float],
+              start: Optional[Mapping[str, Any]] = None, max_evals: int = 200,
+              seed: int = 0) -> Tuple[Dict[str, Any], float,
+                                      List[Tuple[Dict[str, Any], float]]]:
+    """Deterministic best-improvement local search (lower score is better).
+
+    ``score`` may return ``inf`` for infeasible points.  Revisited points are
+    memoised here, and when ``score`` goes through an :class:`Explorer` the
+    underlying graphs/simulations are cached too — re-scoring a neighbour
+    costs a dictionary lookup, which is what makes the paper's
+    "hypothesis → change → measure" iteration interactive.
+    """
+    def key(p: Mapping[str, Any]) -> Tuple:
+        return tuple(p[a.name] for a in space.axes)
+
+    seen: Dict[Tuple, float] = {}
+    history: List[Tuple[Dict[str, Any], float]] = []
+
+    def eval_point(p: Mapping[str, Any]) -> float:
+        k = key(p)
+        if k not in seen:
+            seen[k] = float(score(p))
+            history.append((dict(p), seen[k]))
+        return seen[k]
+
+    cur = dict(start) if start is not None else space.sample(1, seed)[0]
+    cur_s = eval_point(cur)
+    while len(history) < max_evals:
+        best_nb, best_s = None, cur_s
+        for nb in space.neighbors(cur):
+            s = eval_point(nb)
+            if s < best_s:
+                best_nb, best_s = nb, s
+            if len(history) >= max_evals:
+                break
+        if best_nb is None:
+            break
+        cur, cur_s = dict(best_nb), best_s
+    return cur, cur_s, history
+
+
+def parallel_map(fn: Callable[[Any], Any], items: Sequence[Any],
+                 max_workers: Optional[int] = None) -> List[Any]:
+    """Order-preserving map over a thread pool (serial when ≤1 worker)."""
+    items = list(items)
+    w = _resolve_workers(max_workers, len(items))
+    if w <= 1 or len(items) <= 1:
+        return [fn(x) for x in items]
+    with ThreadPoolExecutor(max_workers=w) as ex:
+        return list(ex.map(fn, items))
+
+
+def _resolve_workers(max_workers: Optional[int], n_items: int) -> int:
+    """Default is serial: the coarse simulator is pure Python (GIL-bound),
+    so threads only pay off when the evaluation releases the GIL (jax/numpy
+    -backed cost models, reference runs).  Callers opt in per sweep; result
+    ordering is deterministic for every worker count either way."""
+    if max_workers is None:
+        return 1
+    return max(1, min(max_workers, n_items))
+
+
+# ---------------------------------------------------------------------------
+# Lower bound (used by the pruning cut; exact w.r.t. conditional tasks)
+# ---------------------------------------------------------------------------
+
+
+def lower_bound_seconds(graph: TaskGraph) -> float:
+    """A true lower bound on any schedule's makespan for ``graph``.
+
+    Critical path with each task at its cheapest eligible device, and
+    *conditional* augmentation tasks (DMA submits/transfers that vanish when
+    the compute task lands on the SMP) at zero — the simulator may zero-cost
+    them, so counting them would overestimate and make pruning unsafe.
+    """
+    def cost(t) -> float:  # noqa: ANN001 — Task
+        if t.meta.get("conditional_on") is not None:
+            return 0.0
+        return min(t.costs.values()) if t.costs else 0.0
+
+    return graph.critical_path(cost)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CacheStats:
+    graph_hits: int = 0
+    graph_misses: int = 0
+    eval_hits: int = 0
+    eval_misses: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def _eligibility_signature(elig: Eligibility) -> Tuple:
+    return (tuple(sorted((k, tuple(v))
+                         for k, v in elig.kinds_by_kernel.items())),
+            tuple(elig.default))
+
+
+def _graph_key(system: SystemConfig, elig: Eligibility) -> Tuple:
+    """Everything the augmented graph depends on besides the fixed trace /
+    reports / SMP model held by the :class:`Explorer`.
+
+    Pool *counts* deliberately do not appear: a 1-slot and a 2-slot fabric
+    of the same kernel build the same graph — the big reuse win.
+    """
+    avail = frozenset(system.all_kinds()) | {r.name for r in system.shared}
+    return (avail, system.task_creation_cost, system.dma_submit_cost,
+            system.overlap_inputs, system.overlap_outputs,
+            _eligibility_signature(elig))
+
+
+def _sim_key(graph_key: Tuple, system: SystemConfig, policy: str) -> Tuple:
+    pools = tuple((p.name, tuple(p.kinds), p.count) for p in system.pools)
+    shared = tuple((r.name, r.count) for r in system.shared)
+    return (graph_key, pools, shared, policy)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CandidateOutcome:
+    """Per-candidate record — serialisable, rich enough to re-rank offline."""
+
+    name: str
+    status: str                            # "ok" | "infeasible" | "pruned"
+    makespan_s: Optional[float] = None
+    critical_path_s: Optional[float] = None
+    lower_bound_s: Optional[float] = None
+    analysis_seconds: float = 0.0
+    cached_graph: bool = False
+    cached_eval: bool = False
+    bottleneck: str = ""
+    rank: Optional[int] = None             # 0 = best; None if not ranked
+
+
+@dataclasses.dataclass
+class ExplorationResult:
+    """v2 exploration result: outcomes + ranked table + cache accounting.
+
+    Keeps the seed API (``table`` / ``infeasible`` / ``best`` /
+    ``wall_seconds`` / ``speedups`` / ``report_lines``) as properties so
+    existing callers keep working.
+    """
+
+    outcomes: List[CandidateOutcome]
+    wall_seconds: float
+    policy: str = "availability"
+    n_workers: int = 1
+    top_k: Optional[int] = None
+    cache: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # live estimates by candidate name; empty after JSON deserialisation
+    estimates: Dict[str, PerfEstimate] = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------- ranking
+    @property
+    def ranked(self) -> List[CandidateOutcome]:
+        ok = [o for o in self.outcomes if o.status == "ok"]
+        return sorted(ok, key=lambda o: o.makespan_s)   # stable: input order ties
+
+    @property
+    def table(self) -> List[PerfEstimate]:
+        return [self.estimates[o.name] for o in self.ranked
+                if o.name in self.estimates]
+
+    @property
+    def infeasible(self) -> List[str]:
+        return [o.name for o in self.outcomes if o.status == "infeasible"]
+
+    @property
+    def pruned(self) -> List[str]:
+        return [o.name for o in self.outcomes if o.status == "pruned"]
+
+    @property
+    def best(self) -> Optional[PerfEstimate]:
+        t = self.table
+        return t[0] if t else None
+
+    @property
+    def best_name(self) -> Optional[str]:
+        r = self.ranked
+        return r[0].name if r else None
+
+    def top(self, k: Optional[int] = None) -> List[CandidateOutcome]:
+        k = k if k is not None else (self.top_k or len(self.outcomes))
+        return self.ranked[:k]
+
+    def speedups(self, baseline: Optional[str] = None) -> Dict[str, float]:
+        # computed from outcomes (not live PerfEstimates) so it also works
+        # on a from_json-restored result; same semantics as speedup_table
+        times = {o.name: o.makespan_s for o in self.ranked}
+        if not times:
+            return {}
+        ref = times[baseline] if baseline else max(times.values())
+        return {name: ref / t for name, t in times.items()}
+
+    # ------------------------------------------------------------ reporting
+    def report_lines(self) -> List[str]:
+        lines = [f"{'candidate':38s} {'est. time':>12s} {'speedup':>8s} "
+                 f"{'bottleneck':>12s}"]
+        ranked = self.ranked
+        if not ranked:
+            lines.append("  (no feasible candidate)")
+        else:
+            worst = max(o.makespan_s for o in ranked)
+            for o in ranked:
+                lines.append(f"{o.name:38s} {o.makespan_s * 1e3:10.3f}ms"
+                             f" {worst / o.makespan_s:8.2f} {o.bottleneck:>12s}")
+        for o in self.outcomes:
+            if o.status == "ok":
+                continue
+            note = o.status if o.status != "pruned" else \
+                f"pruned(lb {o.lower_bound_s * 1e3:.2f}ms)"
+            lines.append(f"{o.name:38s} {'—':>12s} {'—':>8s} {note:>12s}")
+        c = self.cache
+        if c:
+            lines.append(f"cache: graph {c.get('graph_hits', 0)}h/"
+                         f"{c.get('graph_misses', 0)}m, eval "
+                         f"{c.get('eval_hits', 0)}h/{c.get('eval_misses', 0)}m"
+                         f" · workers={self.n_workers}")
+        lines.append(f"total analysis time: {self.wall_seconds:.3f}s")
+        return lines
+
+    # ----------------------------------------------------------------- JSON
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": 2,
+            "wall_seconds": self.wall_seconds,
+            "policy": self.policy,
+            "n_workers": self.n_workers,
+            "top_k": self.top_k,
+            "cache": dict(self.cache),
+            "outcomes": [dataclasses.asdict(o) for o in self.outcomes],
+        })
+
+    @staticmethod
+    def from_json(text: str) -> "ExplorationResult":
+        d = json.loads(text)
+        if d.get("version") != 2:
+            raise ValueError(f"unsupported ExplorationResult version: "
+                             f"{d.get('version')!r}")
+        return ExplorationResult(
+            outcomes=[CandidateOutcome(**o) for o in d["outcomes"]],
+            wall_seconds=d["wall_seconds"], policy=d["policy"],
+            n_workers=d["n_workers"], top_k=d["top_k"],
+            cache=dict(d["cache"]))
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class Explorer:
+    """Cached, parallel candidate evaluator bound to one trace.
+
+    One instance per (trace × reports × SMP cost model × policy); evaluate
+    as many candidate batches, hill-climbs or random sweeps against it as
+    you like — graphs and simulations are shared across all of them.
+    """
+
+    def __init__(self, trace: Trace, reports: ReportMap, *,
+                 policy: str = "availability", smp_scale: float = 1.0,
+                 smp_seconds_fn: Optional[Callable] = None,
+                 budget: Mapping[str, float] = ZYNQ_7045_BUDGET,
+                 max_workers: Optional[int] = None, cache: bool = True):
+        self.trace = trace
+        self.reports = reports
+        self.policy = policy
+        self.smp_scale = smp_scale
+        self.smp_seconds_fn = smp_seconds_fn
+        self.budget = budget
+        self.max_workers = max_workers
+        self.cache_enabled = cache
+        self.stats = CacheStats()
+        # graph_key -> (graph, graph_stats, critical_path_s, lower_bound_s)
+        self._graphs: Dict[Tuple, Tuple[TaskGraph, Dict[str, object],
+                                        float, float]] = {}
+        self._sims: Dict[Tuple, SimResult] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _graph_for(self, cand: Candidate) -> Tuple[TaskGraph, Dict[str, object],
+                                                   float, float, bool]:
+        key = _graph_key(cand.system, cand.eligibility)
+        with self._lock:
+            hit = self.cache_enabled and key in self._graphs
+            if hit:
+                self.stats.graph_hits += 1
+                return (*self._graphs[key], True)
+            self.stats.graph_misses += 1
+        g = build_graph(self.trace, cand.system, self.reports,
+                        cand.eligibility, smp_scale=self.smp_scale,
+                        smp_cost="mean", smp_seconds_fn=self.smp_seconds_fn)
+        entry = (g, g.subgraph_stats(), g.critical_path(),
+                 lower_bound_seconds(g))
+        if self.cache_enabled:
+            with self._lock:
+                self._graphs[key] = entry
+        return (*entry, False)
+
+    # ------------------------------------------------------------------
+    def evaluate(self, cand: Candidate) -> PerfEstimate:
+        """One candidate through the cached pipeline (no pruning)."""
+        est, _ = self._evaluate_outcome(cand)
+        if est is None:
+            raise ValueError(f"candidate {cand.name!r} does not fit the "
+                             f"fabric budget")
+        return est
+
+    def _infeasible_outcome(self, cand: Candidate,
+                            t0: float) -> Optional[CandidateOutcome]:
+        if cand.fabric and not cand.feasible(self.budget):
+            return CandidateOutcome(
+                name=cand.name, status="infeasible",
+                analysis_seconds=time.perf_counter() - t0)
+        return None
+
+    def _evaluate_outcome(self, cand: Candidate) \
+            -> Tuple[Optional[PerfEstimate], CandidateOutcome]:
+        t0 = time.perf_counter()
+        infeasible = self._infeasible_outcome(cand, t0)
+        if infeasible is not None:
+            return None, infeasible
+        graph, stats, crit, lb, ghit = self._graph_for(cand)
+        sim, ehit = self._simulate(graph, cand)
+        dt = time.perf_counter() - t0
+        est = PerfEstimate(candidate=cand.name, makespan_s=sim.makespan,
+                           sim=sim, graph_stats=stats, critical_path_s=crit,
+                           analysis_seconds=dt)
+        return est, CandidateOutcome(
+            name=cand.name, status="ok", makespan_s=sim.makespan,
+            critical_path_s=crit, lower_bound_s=lb, analysis_seconds=dt,
+            cached_graph=ghit, cached_eval=ehit,
+            bottleneck=sim.bottleneck())
+
+    def _simulate(self, graph: TaskGraph,
+                  cand: Candidate) -> Tuple[SimResult, bool]:
+        key = _sim_key(_graph_key(cand.system, cand.eligibility),
+                       cand.system, self.policy)
+        with self._lock:
+            if self.cache_enabled and key in self._sims:
+                self.stats.eval_hits += 1
+                return self._sims[key], True
+            self.stats.eval_misses += 1
+        sim = simulate(graph, cand.system, policy=self.policy)
+        if self.cache_enabled:
+            with self._lock:
+                self._sims[key] = sim
+        return sim, False
+
+    # ------------------------------------------------------------------
+    def explore(self, candidates: Sequence[Candidate], *,
+                top_k: Optional[int] = None,
+                prune: bool = False) -> ExplorationResult:
+        """Evaluate a candidate batch → ranked :class:`ExplorationResult`.
+
+        ``prune=True`` enables the lower-bound cut: a candidate whose
+        critical-path bound is already *strictly worse* than the current
+        k-th best makespan (k = ``top_k`` or 1) is recorded as ``pruned``
+        without simulating.  The bound is exact, so the optimum (and the
+        full top-k set) is never discarded; only the tail of the ranking
+        loses its exact makespans.  Pruning decisions are taken between
+        deterministic chunks, so results do not depend on worker timing.
+        """
+        t0 = time.perf_counter()
+        stats_before = self.stats.as_dict()
+        cands = list(candidates)
+        n_workers = _resolve_workers(self.max_workers, len(cands))
+        outcomes: List[Optional[CandidateOutcome]] = [None] * len(cands)
+        estimates: Dict[str, PerfEstimate] = {}
+        ok_makespans: List[float] = []
+        kk = max(1, top_k) if top_k is not None else 1
+
+        def threshold() -> Optional[float]:
+            if not prune or len(ok_makespans) < kk:
+                return None
+            return sorted(ok_makespans)[kk - 1]
+
+        pool = ThreadPoolExecutor(max_workers=n_workers) \
+            if n_workers > 1 else None
+        try:
+            chunk = max(1, n_workers)
+            for base in range(0, len(cands), chunk):
+                batch: List[Tuple[int, Candidate]] = []
+                for i in range(base, min(base + chunk, len(cands))):
+                    cand = cands[i]
+                    tc = time.perf_counter()
+                    infeasible = self._infeasible_outcome(cand, tc)
+                    if infeasible is not None:
+                        outcomes[i] = infeasible
+                        continue
+                    cut = threshold()
+                    if cut is not None:
+                        # the graph (hence the bound) is cached work anyway
+                        _, _, crit, lb, ghit = self._graph_for(cand)
+                        if lb > cut:
+                            outcomes[i] = CandidateOutcome(
+                                name=cand.name, status="pruned",
+                                critical_path_s=crit, lower_bound_s=lb,
+                                cached_graph=ghit,
+                                analysis_seconds=time.perf_counter() - tc)
+                            continue
+                    batch.append((i, cand))
+                if pool is not None:
+                    results = list(pool.map(
+                        lambda ic: self._evaluate_outcome(ic[1]), batch))
+                else:
+                    results = [self._evaluate_outcome(c) for _, c in batch]
+                for (i, cand), (est, out) in zip(batch, results):
+                    outcomes[i] = out
+                    if est is not None:
+                        estimates[cand.name] = est
+                        ok_makespans.append(est.makespan_s)
+        finally:
+            if pool is not None:
+                pool.shutdown()
+
+        done = [o for o in outcomes if o is not None]
+        assert len(done) == len(cands)
+        # per-call delta, not the Explorer's lifetime totals — a stored
+        # sweep must account for its own batch only
+        cache = {k: v - stats_before[k]
+                 for k, v in self.stats.as_dict().items()}
+        result = ExplorationResult(
+            outcomes=done, wall_seconds=time.perf_counter() - t0,
+            policy=self.policy, n_workers=n_workers, top_k=top_k,
+            cache=cache, estimates=estimates)
+        for rank, o in enumerate(result.ranked):
+            o.rank = rank
+        return result
+
+    # ------------------------------------------------------------------
+    def hillclimb(self, space: DesignSpace,
+                  build: Callable[[Mapping[str, Any]], Candidate],
+                  start: Optional[Mapping[str, Any]] = None,
+                  max_evals: int = 200, seed: int = 0):
+        """Local search over ``space``; infeasible fabrics score ``inf``.
+
+        Returns ``(best_point, best_makespan_s, history)``.
+        """
+        def score(point: Mapping[str, Any]) -> float:
+            cand = build(point)
+            if cand.fabric and not cand.feasible(self.budget):
+                return float("inf")
+            return self._evaluate_outcome(cand)[0].makespan_s
+
+        return hillclimb(space, score, start=start, max_evals=max_evals,
+                         seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Seed-compatible front-end
+# ---------------------------------------------------------------------------
+
+
+def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
+            policy: str = "availability", smp_scale: float = 1.0,
+            smp_seconds_fn=None,
+            budget: Mapping[str, float] = ZYNQ_7045_BUDGET, *,
+            max_workers: Optional[int] = None, cache: bool = True,
+            prune: bool = False,
+            top_k: Optional[int] = None) -> ExplorationResult:
+    """Estimate every feasible candidate; rank; pick the best.
+
+    This is the "coffee-break" loop: its wall time replaces one bitstream
+    generation *per candidate* in the traditional flow.  The seed signature
+    is unchanged; the keyword-only knobs expose the engine (worker count,
+    caching, lower-bound pruning, top-k ranking).
+    """
+    ex = Explorer(trace, reports, policy=policy, smp_scale=smp_scale,
+                  smp_seconds_fn=smp_seconds_fn, budget=budget,
+                  max_workers=max_workers, cache=cache)
+    return ex.explore(candidates, top_k=top_k, prune=prune)

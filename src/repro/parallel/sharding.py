@@ -63,6 +63,21 @@ def plan_for(cfg: ModelConfig) -> ParallelPlan:
 # --------------------------------------------------------------------------
 
 
+def abstract_mesh(axis_sizes: Sequence[int],
+                  axis_names: Sequence[str]):
+    """Version-tolerant ``jax.sharding.AbstractMesh`` constructor.
+
+    jax ≤ 0.4.37 takes one ``((name, size), ...)`` shape tuple; newer jax
+    takes ``(axis_sizes, axis_names)``.  Sharding rules only consume
+    ``axis_names`` / ``shape``, which both layouts expose identically.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -1,0 +1,6 @@
+# Test-support utilities that ship with the package (no external deps):
+# a deterministic fallback implementation of the hypothesis API surface the
+# test suite uses, installed by tests/conftest.py when hypothesis is absent.
+from . import minihypothesis
+
+__all__ = ["minihypothesis"]

@@ -1,0 +1,251 @@
+"""A deterministic, dependency-free fallback for the ``hypothesis`` API.
+
+The test suite uses property-based tests for the simulator/graph/kernel
+invariants.  Hermetic build containers do not always ship ``hypothesis``,
+and tier-1 must collect and *run* everywhere — so this module implements
+exactly the API surface the suite uses:
+
+``given``, ``settings``, ``assume``, ``HealthCheck`` and the strategies
+``integers``, ``floats``, ``booleans``, ``sampled_from``, ``tuples``,
+``lists`` and ``composite``.
+
+It is NOT hypothesis: there is no shrinking, no example database, no
+coverage-guided generation.  Examples are drawn from a PRNG seeded from the
+test's qualified name, so a given test sees the same example sequence on
+every run and under every pytest worker — determinism the exploration-engine
+tests rely on.  When the real ``hypothesis`` is installed it always wins
+(see ``install()``); falsifying examples are printed before the failure is
+re-raised so they can be pinned as regression cases.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)`` — the example is skipped, not failed."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:
+    """Stub of hypothesis.HealthCheck (accepted, ignored)."""
+
+    all = classmethod(lambda cls: [])
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+
+class SearchStrategy:
+    """A value generator: ``draw_from(rng) -> value``."""
+
+    def __init__(self, draw_fn: Callable[[random.Random], Any], label: str):
+        self._draw = draw_fn
+        self._label = label
+
+    def draw_from(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:
+        return self._label
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, *, allow_nan: bool = False,
+           allow_infinity: bool = False, **_: Any) -> SearchStrategy:
+    # bounds imply finite values; the flags are accepted for API parity
+    del allow_nan, allow_infinity
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from: empty sequence")
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))],
+                          f"sampled_from({pool!r})")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.draw_from(rng) for s in strategies),
+        f"tuples({', '.join(map(repr, strategies))})")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10,
+          unique_by: Optional[Callable[[Any], Any]] = None,
+          unique: bool = False) -> SearchStrategy:
+    if unique and unique_by is None:
+        unique_by = lambda x: x  # noqa: E731
+
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        out: List[Any] = []
+        seen = set()
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            attempts += 1
+            v = elements.draw_from(rng)
+            if unique_by is not None:
+                k = unique_by(v)
+                if k in seen:
+                    continue
+                seen.add(k)
+            out.append(v)
+        if len(out) < min_size:
+            raise UnsatisfiedAssumption(
+                f"could not draw {min_size} unique elements")
+        return out
+
+    return SearchStrategy(draw, f"lists({elements!r})")
+
+
+def composite(fn: Callable[..., Any]) -> Callable[..., SearchStrategy]:
+    """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    def factory(*args: Any, **kwargs: Any) -> SearchStrategy:
+        def draw_value(rng: random.Random) -> Any:
+            def draw(strategy: SearchStrategy) -> Any:
+                return strategy.draw_from(rng)
+            return fn(draw, *args, **kwargs)
+        return SearchStrategy(draw_value, f"{fn.__name__}(...)")
+
+    factory.__name__ = fn.__name__
+    return factory
+
+
+just = lambda v: SearchStrategy(lambda rng: v, f"just({v!r})")  # noqa: E731
+none = lambda: just(None)  # noqa: E731
+
+
+# ---------------------------------------------------------------------------
+# given / settings
+# ---------------------------------------------------------------------------
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def settings(max_examples: Optional[int] = None, deadline: Any = None,
+             suppress_health_check: Any = None, **_: Any):
+    """Decorator recording run parameters on the (given-wrapped) test."""
+    del deadline, suppress_health_check  # accepted for API parity
+
+    def deco(fn: Callable) -> Callable:
+        cfg = dict(getattr(fn, "_mh_settings", {}))
+        if max_examples is not None:
+            cfg["max_examples"] = max_examples
+        fn._mh_settings = cfg  # type: ignore[attr-defined]
+        return fn
+
+    return deco
+
+
+def given(*strategies: SearchStrategy) -> Callable[[Callable], Callable]:
+    """Run the test once per drawn example, deterministically.
+
+    The PRNG seed derives from the test's qualified name, so every run (and
+    every worker count) sees the same sequence.  The covered parameters are
+    stripped from the wrapper's signature so pytest does not mistake them
+    for fixtures.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+        def wrapper(*args: Any, **kwargs: Any) -> None:
+            cfg = getattr(wrapper, "_mh_settings", {})
+            max_examples = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < max_examples and attempts < 10 * max_examples + 100:
+                attempts += 1
+                try:
+                    example = [s.draw_from(rng) for s in strategies]
+                except UnsatisfiedAssumption:
+                    continue
+                try:
+                    fn(*args, *example, **kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except BaseException:
+                    print(f"\nFalsifying example ({fn.__qualname__}, "
+                          f"example #{ran}): {example!r}",
+                          file=sys.stderr)
+                    raise
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = inspect.Signature()  # params are not fixtures
+        wrapper._mh_settings = dict(getattr(fn, "_mh_settings", {}))
+        wrapper.hypothesis_inner = fn  # escape hatch for debugging
+        return wrapper
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# installation as the `hypothesis` import
+# ---------------------------------------------------------------------------
+
+
+def install(force: bool = False) -> bool:
+    """Register this module as ``hypothesis``/``hypothesis.strategies``.
+
+    No-op (returns False) when the real hypothesis is importable, unless
+    ``force``.  Returns True when the fallback was installed.
+    """
+    if not force:
+        try:
+            import hypothesis  # noqa: F401
+            return False
+        except ImportError:
+            pass
+
+    this = sys.modules[__name__]
+    hyp = types.ModuleType("hypothesis")
+    hyp.__doc__ = "minihypothesis fallback (see repro.testing.minihypothesis)"
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.UnsatisfiedAssumption = UnsatisfiedAssumption
+    hyp.__minihypothesis__ = True
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "tuples",
+                 "lists", "composite", "just", "none", "SearchStrategy"):
+        setattr(st, name, getattr(this, name))
+    st.__minihypothesis__ = True
+
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+    return True

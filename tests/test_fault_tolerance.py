@@ -17,6 +17,8 @@ from repro.train.data import DataConfig, Prefetcher, SyntheticLM
 from repro.train.supervisor import (FailureInjector, StragglerWatch,
                                     Supervisor)
 
+pytestmark = pytest.mark.slow  # heavy jax tests: run with `pytest -m slow`
+
 
 def _tiny():
     cfg = configs.get_smoke("qwen3-0.6b")

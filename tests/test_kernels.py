@@ -11,6 +11,9 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # heavy jax tests: run with `pytest -m slow`
+
+
 jax.config.update("jax_enable_x64", False)
 
 

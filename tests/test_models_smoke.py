@@ -12,6 +12,9 @@ from repro.models import transformer as T
 from repro.train import optimizer as opt_mod
 from repro.train import step as step_mod
 
+pytestmark = pytest.mark.slow  # heavy jax tests: run with `pytest -m slow`
+
+
 ARCHS = sorted(configs.arch_ids())
 
 

@@ -4,15 +4,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.models import transformer as T
 from repro.parallel import collectives, compression, sharding as sh
 from repro.parallel.pipeline import PPConfig, evaluate_pp, stage_slices
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+pytestmark = pytest.mark.slow  # heavy jax tests: run with `pytest -m slow`
+
+MESH_1POD = sh.abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = sh.abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 ARCHS = sorted(configs.arch_ids())
 
 

@@ -13,10 +13,13 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models import attention as attn
 from repro.models import linear_blocks as lb
 from repro.models import moe as moe_mod
+
+pytestmark = pytest.mark.slow  # heavy jax tests: run with `pytest -m slow`
 
 
 @hypothesis.given(st.sampled_from([8, 16, 24]), st.sampled_from([4, 8, 16]),

@@ -11,6 +11,9 @@ from repro import configs
 from repro.models import transformer as T
 from repro.serve import engine
 
+pytestmark = pytest.mark.slow  # heavy jax tests: run with `pytest -m slow`
+
+
 ARCHS = sorted(configs.arch_ids())
 
 
