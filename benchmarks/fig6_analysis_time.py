@@ -18,15 +18,24 @@ quoted for context in EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import List, Tuple
+from pathlib import Path
+from typing import Dict, List, Tuple
 
 import jax
 import numpy as np
 
 from repro.apps import matmul as mm
-from repro.core import Explorer, a9_smp_seconds, explore
+from repro.core import (Eligibility, Explorer, a9_smp_seconds, explore,
+                        zynq_system)
 from repro.kernels.block_matmul import block_matmul
+
+# Last run's machine-readable numbers — benchmarks/run.py --json serialises
+# this into the BENCH_simulator.json perf-trajectory artifact.
+METRICS: Dict[str, object] = {}
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
 
 def _traditional_candidate(n: int, bs: int, heterogeneous: bool) -> float:
@@ -60,8 +69,107 @@ def _traditional_candidate(n: int, bs: int, heterogeneous: bool) -> float:
     return time.perf_counter() - t0
 
 
-def run(n: int = 256) -> List[Tuple[str, float, str]]:
+def _sweep_candidates(trace_bs: int, count: int) -> List[mm.Candidate]:
+    """``count`` slot/heterogeneity variants over one granularity — the
+    CEDR-style batch shape.  No fabric payload: this sweep benchmarks the
+    evaluation engines, not the feasibility filter."""
+    kind = f"fpga:mxm{trace_bs}"
+    out: List[mm.Candidate] = []
+    for n_acc in range(1, count // 2 + 1):
+        for smp in (False, True):
+            name = f"{n_acc}acc{trace_bs}" + ("+smp" if smp else "")
+            kinds = (kind, "smp") if smp else (kind,)
+            out.append(mm.Candidate(
+                name=name, system=zynq_system(name, {kind: n_acc}),
+                eligibility=Eligibility({"mxm_block": kinds})))
+    return out
+
+
+def _sweep_rows(trace, reports, a9, count: int,
+                smoke: bool) -> List[Tuple[str, float, str]]:
+    """Tentpole measurement: the array-compiled engine vs the PR-1 cached
+    path (object-graph simulator, in-memory caches) on one big batch.
+
+    Four engines over the same candidates, each fresh-Explorer (so the
+    in-memory caches start cold), best-of-``reps`` to tame this box's
+    scheduler jitter:
+
+    * ``pr1``   — PR-1 path: reference object simulator, full schedules.
+    * ``fast``  — array-compiled, schedule-free, serial.
+    * ``procs`` — same over a 2-worker ProcessPoolExecutor.
+    * ``disk``  — repeat-sweep: warm on-disk store (the iterative co-design
+      workflow the disk cache exists for; the PR-1 path has no equivalent —
+      its caches die with the process).
+
+    The headline ``sweep_speedup`` is pr1 over the best new-engine path.
+    """
     rows: List[Tuple[str, float, str]] = []
+    cands = _sweep_candidates(trace.meta.get("bs", 64), count)
+    mk = lambda **kw: Explorer(trace, reports, smp_seconds_fn=a9, **kw)
+    cache_dir = str(ARTIFACTS / "fig6_sweepcache")
+    mk(cache_dir=cache_dir).explore(cands)            # warm (idempotent)
+
+    def best_of(reps, **kw):
+        t_best, res = float("inf"), None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = mk(**kw).explore(cands)
+            t_best = min(t_best, time.perf_counter() - t0)
+        return t_best, res
+
+    reps = 1 if smoke else 2
+    pr1_s, pr1 = best_of(reps, fast=False)
+    fast_s, fast = best_of(reps)
+    procs_s, procs = best_of(reps, processes=2)
+    disk_s, disk = best_of(reps, cache_dir=cache_dir)
+
+    key = lambda r: [(o.name, o.makespan_s) for o in r.ranked]
+    assert key(pr1) == key(fast) == key(procs) == key(disk), \
+        "every engine must produce the bit-identical ranking"
+
+    sweep_speedup = pr1_s / min(fast_s, procs_s, disk_s)
+    nc = len(cands)
+    rows.append(("fig6/sweep_pr1_cached", pr1_s * 1e6,
+                 f"candidates={nc},seconds={pr1_s:.3f},"
+                 f"throughput={nc / pr1_s:.0f}cand_per_s"))
+    rows.append(("fig6/sweep_fast_serial", fast_s * 1e6,
+                 f"candidates={nc},seconds={fast_s:.3f},"
+                 f"speedup={pr1_s / fast_s:.1f}x"))
+    rows.append(("fig6/sweep_fast_procs", procs_s * 1e6,
+                 f"candidates={nc},seconds={procs_s:.3f},"
+                 f"speedup={pr1_s / procs_s:.1f}x,workers=2"))
+    rows.append(("fig6/sweep_disk_rerank", disk_s * 1e6,
+                 f"candidates={nc},seconds={disk_s:.4f},"
+                 f"speedup={pr1_s / disk_s:.1f}x,"
+                 f"disk_hits={disk.cache['disk_hits']}"))
+    rows.append(("fig6/sweep_speedup", 0.0,
+                 f"candidates={nc},best_speedup={sweep_speedup:.1f}x "
+                 f"(pr1 vs best of fast/procs/disk-rerank)"))
+    METRICS.update({
+        "sweep_candidates": nc,
+        "sweep_pr1_cached_seconds": pr1_s,
+        "sweep_fast_serial_seconds": fast_s,
+        "sweep_fast_procs_seconds": procs_s,
+        "sweep_disk_rerank_seconds": disk_s,
+        "sweep_speedup": sweep_speedup,
+        "sweep_fast_serial_speedup": pr1_s / fast_s,
+        "sweep_disk_rerank_speedup": pr1_s / disk_s,
+        "candidates_per_sec_pr1": nc / pr1_s,
+        "candidates_per_sec_fast": nc / min(fast_s, procs_s),
+        "sweep_cache_fast": dict(fast.cache),
+        "sweep_cache_disk_rerank": dict(disk.cache),
+    })
+    if not smoke:
+        assert sweep_speedup >= 5.0, \
+            f"array-compiled sweep must be ≥5× the PR-1 cached path " \
+            f"(got {sweep_speedup:.1f}x)"
+    return rows
+
+
+def run(n: int = 256, sweep: int = 200,
+        smoke: bool = False) -> List[Tuple[str, float, str]]:
+    rows: List[Tuple[str, float, str]] = []
+    METRICS.clear()
 
     # --- estimator toolchain: trace once per granularity + simulate all ----
     # The exploration engine (graph/sim memoization + worker pool) is the
@@ -77,7 +185,7 @@ def run(n: int = 256) -> List[Tuple[str, float, str]]:
     explore(traces[128], mm.candidates()[128], reports, smp_seconds_fn=a9,
             max_workers=1, cache=False)
 
-    reps = 5   # average repeated passes: single sweeps are noise-dominated
+    reps = 1 if smoke else 5   # averaged: single sweeps are noise-dominated
     t0 = time.perf_counter()
     for _ in range(reps):
         serial = {bs: explore(traces[bs], clist, reports, smp_seconds_fn=a9,
@@ -120,8 +228,21 @@ def run(n: int = 256) -> List[Tuple[str, float, str]]:
     rows.append(("fig6/explore_engine_rerank", rerank_s * 1e6,
                  f"candidates={n_cands},seconds={rerank_s:.4f},"
                  f"cached_speedup={serial_s / rerank_s:.0f}x"))
+    METRICS.update({
+        "estimator_toolchain_seconds": est_s,
+        "explore_serial_uncached_seconds": serial_s,
+        "explore_engine_seconds": engine_s,
+        "explore_engine_rerank_seconds": rerank_s,
+        "engine_fresh_speedup": serial_s / engine_s,
+        "engine_rerank_speedup": serial_s / rerank_s,
+    })
+
+    # --- tentpole: array-compiled batch sweep vs the PR-1 cached path ------
+    rows += _sweep_rows(traces[64], reports, a9, sweep, smoke)
 
     # --- traditional flow: build+run per candidate --------------------------
+    if smoke:
+        return rows
     trad_s = 0.0
     for bs in (64, 128):
         for het in (False, True):
@@ -134,10 +255,23 @@ def run(n: int = 256) -> List[Tuple[str, float, str]]:
     rows.append(("fig6/speedup_methodology", 0.0,
                  f"ratio={ratio:.1f}x (paper board-scale: >10h vs <5min "
                  f"= >120x; >2 orders of magnitude for cholesky)"))
+    METRICS.update({"traditional_seconds": trad_s,
+                    "methodology_speedup": ratio})
     assert ratio > 5.0, "estimator must be much faster than build-and-run"
     return rows
 
 
 if __name__ == "__main__":
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=256, help="matrix size")
+    ap.add_argument("--sweep", type=int, default=200,
+                    help="candidate count for the batch-sweep section")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast pass (CI): 1 rep, small sweep, no "
+                         "traditional build-and-run, no speedup asserts")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n, args.sweep = min(args.n, 128), min(args.sweep, 24)
+    for name, us, derived in run(n=args.n, sweep=args.sweep,
+                                 smoke=args.smoke):
         print(f"{name},{us:.1f},{derived}")

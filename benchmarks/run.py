@@ -4,37 +4,90 @@ One module per paper table/figure (fig3/fig5/fig6/fig9), plus the
 framework-level benches (roofline table + step estimator) that read the
 dry-run artifacts.  Output: ``name,us_per_call,derived`` CSV rows, teed by
 the top-level driver into bench_output.txt.
+
+``--json [PATH]`` additionally writes a machine-readable perf-trajectory
+artifact (default ``BENCH_simulator.json`` at the repo root): every CSV row
+plus the fig6 sweep metrics — candidates/sec for each engine, cache hit
+rates, fast-vs-reference and disk-rerank speedups — so future PRs can diff
+the numbers instead of eyeballing logs.  ``--only fig6`` (etc.) restricts
+the run; CI uses ``--only fig6 --smoke`` as the smoke invocation.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
+import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
-def main() -> int:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const=str(REPO_ROOT / "BENCH_simulator.json"),
+                    default=None, metavar="PATH",
+                    help="write the BENCH_simulator.json perf artifact")
+    ap.add_argument("--only", nargs="+", default=None,
+                    choices=["fig3", "fig5", "fig6", "fig9", "step",
+                             "roofline"],
+                    metavar="NAME", help="run only these modules "
+                    "(fig3 fig5 fig6 fig9 step roofline)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="pass smoke mode to modules that support it")
+    args = ap.parse_args(argv)
+
     from benchmarks import (fig3_dma_overlap, fig5_matmul,
                             fig6_analysis_time, fig9_cholesky,
                             step_estimator)
 
+    modules = {
+        "fig3": fig3_dma_overlap, "fig5": fig5_matmul,
+        "fig6": fig6_analysis_time, "fig9": fig9_cholesky,
+        "step": step_estimator,
+    }
+    selected = args.only if args.only else list(modules) + ["roofline"]
+
     failures = 0
-    for mod in (fig3_dma_overlap, fig5_matmul, fig6_analysis_time,
-                fig9_cholesky, step_estimator):
+    rows = []
+    for key in selected:
+        if key == "roofline":
+            continue
+        mod = modules[key]
         print(f"# --- {mod.__name__} ---", flush=True)
         try:
-            for name, us, derived in mod.run():
+            kwargs = {}
+            if args.smoke and mod is fig6_analysis_time:
+                kwargs = {"n": 128, "sweep": 24, "smoke": True}
+            for name, us, derived in mod.run(**kwargs):
+                rows.append([name, us, derived])
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception:  # noqa: BLE001
             failures += 1
             traceback.print_exc()
 
-    print("# --- roofline table (benchmarks/artifacts/roofline.md) ---",
-          flush=True)
-    try:
-        from benchmarks import roofline_table
-        roofline_table.main()
-    except Exception:  # noqa: BLE001
-        failures += 1
-        traceback.print_exc()
+    if "roofline" in selected:
+        print("# --- roofline table (benchmarks/artifacts/roofline.md) ---",
+              flush=True)
+        try:
+            from benchmarks import roofline_table
+            roofline_table.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+
+    if args.json:
+        artifact = {
+            "bench": "simulator",
+            "unix_time": time.time(),
+            "smoke": bool(args.smoke),
+            "failures": failures,
+            "simulator": dict(fig6_analysis_time.METRICS),
+            "rows": rows,
+        }
+        Path(args.json).write_text(json.dumps(artifact, indent=2) + "\n")
+        print(f"# wrote {args.json}", flush=True)
     return failures
 
 

@@ -2,11 +2,16 @@
 
 Which kernels (dgemm/dsyrk/dtrsm; dpotrf is SMP-only as in Fig. 4) deserve
 the FPGA slots?  Full-resource single-accelerator variants vs two-kernel
-combinations — estimated through the exploration engine AND
-reference-executed, with trend agreement.
+combinations — estimated through the array-compiled exploration engine
+(schedule-free ranking, full records for the top-3) AND reference-executed,
+with trend agreement.  The on-disk sweep store next to this file makes the
+second invocation re-rank from disk hits instead of rebuilding graphs —
+the "refine the sweep tomorrow" loop.
 
 Run: PYTHONPATH=src python examples/codesign_cholesky.py
 """
+from pathlib import Path
+
 from repro.apps import cholesky as ch
 from repro.core import (Explorer, a9_smp_seconds, reference_run, same_best,
                         spearman_rank_correlation, speedup_table)
@@ -18,9 +23,13 @@ print(f"trace: {len(trace)} tasks "
       f"(complex interleaved dependency graph, paper Fig. 8)")
 
 candidates = ch.candidates(bs=64)
-explorer = Explorer(trace, reports, smp_seconds_fn=a9)
+explorer = Explorer(trace, reports, smp_seconds_fn=a9,
+                    cache_dir=str(Path(__file__).parent / ".sweepcache"))
 res = explorer.explore(candidates, top_k=3)
 print("\n".join(res.report_lines()))
+c = res.cache
+print(f"disk store: {c['disk_hits']} hits / {c['disk_misses']} misses "
+      f"(second run re-ranks without a single graph build)")
 
 ref = [reference_run(trace, cand.system, reports, cand.eligibility,
                      smp_seconds_fn=a9)

@@ -34,7 +34,9 @@ print(f"cell: {arch} × {shape} ({full['params'] / 1e9:.2f}B params, "
       f"{full['full_n_layers']} layers)")
 
 # the same generator+pool machinery as the Zynq sweep, over step-task
-# candidates: a 2×2 grid of (overlap schedule × pod count)
+# candidates: a 2×2 grid of (overlap schedule × pod count).  estimate_step
+# routes each point through the array-compiled simulator (fastsim) — the
+# deep per-layer chain is exactly the shape where flattened dispatch wins.
 space = DesignSpace({"overlap": (False, True), "pods": (1, 2)})
 
 

@@ -11,6 +11,8 @@ from .hlsreport import (HLSSynthesisModel, KernelReport, TPUConstants, TPU_V5E,
                         smp_time_scale)
 from .augment import Eligibility, build_graph
 from .simulator import ScheduledTask, SimResult, Simulator, simulate
+from .fastsim import FrozenGraph, freeze_graph, simulate_batch, simulate_fast
+from .diskcache import DiskCache, trace_fingerprint
 from .estimator import (PerfEstimate, contention_time_model, estimate,
                         reference_run, same_best, spearman_rank_correlation,
                         speedup_table)
@@ -29,6 +31,8 @@ __all__ = [
     "smp_time_scale",
     "Eligibility", "build_graph",
     "ScheduledTask", "SimResult", "Simulator", "simulate",
+    "FrozenGraph", "freeze_graph", "simulate_batch", "simulate_fast",
+    "DiskCache", "trace_fingerprint",
     "PerfEstimate", "contention_time_model", "estimate", "reference_run",
     "same_best", "spearman_rank_correlation", "speedup_table",
     "Axis", "CacheStats", "Candidate", "CandidateOutcome", "DesignSpace",

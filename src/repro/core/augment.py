@@ -184,6 +184,20 @@ def build_graph(trace: Trace,
     return g
 
 
+def lower_bound_cost(task: Task) -> float:
+    """Per-task cost for the exact makespan lower bound.
+
+    Conditional augmentation tasks (DMA submits/transfers that vanish when
+    the compute task lands on the SMP) count zero — the simulator may
+    zero-cost them, so charging them would overestimate and make pruning
+    unsafe.  The single source of truth for both the reference engine's
+    ``lower_bound_seconds`` and ``FrozenGraph.freeze``.
+    """
+    if task.meta.get("conditional_on") is not None:
+        return 0.0
+    return min(task.costs.values()) if task.costs else 0.0
+
+
 def _first_report(reports: ReportMap, kernel: str,
                   kinds: Sequence[str]) -> KernelReport:
     for k in kinds:

@@ -1,0 +1,122 @@
+"""Persistent on-disk sweep store — graphs and simulations across runs.
+
+The exploration engine's in-memory caches die with the process; co-design
+is iterative across *sessions* (re-run the sweep tomorrow with one more
+axis), so the expensive artifacts — frozen augmented graphs and schedule-free
+simulation results — are also persisted to a content-addressed directory.
+
+Keys are plain strings built from *content*, never identity: the trace
+fingerprint (sha256 over the serialised events), the eligibility/system
+signature the in-memory graph cache already uses, and the pool layout +
+policy for simulations.  Entries are self-verifying:
+
+    <64 hex chars: sha256 of payload>\\n<pickled {"key": ..., "value": ...}>
+
+A read re-hashes the payload and compares the stored key text, so truncated
+files, bit flips, and hash collisions (a *stale* entry written under another
+key) all degrade to a cache miss — the caller recomputes and overwrites;
+nothing crashes.  Writes are atomic (temp file + rename) so a killed sweep
+never leaves a half-written entry behind.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
+from typing import Any, Iterable, Optional
+
+
+def sha256_text(text: str) -> str:
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+def trace_fingerprint(trace, include_times: bool = True) -> str:
+    # noqa: ANN001 — Trace (import would cycle)
+    """Content hash of the *graph-determining* trace content.
+
+    Region keys are raw addresses (``id()`` / data pointers) that change
+    every process — but dependence inference only uses key *equality*, so
+    keys are canonically relabelled by first occurrence: two traces of the
+    same program share a fingerprint across runs.  ``include_times=False``
+    drops the measured per-event times — correct whenever costs come from
+    an ``smp_seconds_fn`` (which the Explorer fingerprints separately);
+    with it the re-traced measurement noise would defeat cross-run reuse.
+    """
+    h = hashlib.sha256()
+    canon: dict = {}
+    for e in trace.events:
+        acc = []
+        for key, dirn, nbytes in e.accesses:
+            cid = canon.setdefault(key, len(canon))
+            acc.append((cid, dirn, nbytes))
+        rec = (e.index, e.name, tuple(acc), tuple(e.devices), e.flops,
+               e.elapsed_smp if include_times else None)
+        h.update(repr(rec).encode("utf-8"))
+        h.update(b"\n")
+    return h.hexdigest()
+
+
+class DiskCache:
+    """Content-addressed pickle store with integrity-checked reads."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key_text: str) -> str:
+        return os.path.join(self.root, sha256_text(key_text) + ".pkl")
+
+    # ------------------------------------------------------------------
+    def get(self, key_text: str) -> Optional[Any]:
+        """Stored value, or ``None`` on miss / corruption / stale key."""
+        try:
+            with open(self._path(key_text), "rb") as f:
+                blob = f.read()
+        except OSError:
+            return None
+        try:
+            if len(blob) < 65 or blob[64:65] != b"\n":
+                return None
+            payload = blob[65:]
+            if hashlib.sha256(payload).hexdigest().encode("ascii") != blob[:64]:
+                return None                       # truncated / corrupted
+            wrapper = pickle.loads(payload)
+            if wrapper.get("key") != key_text:
+                return None                       # stale entry / collision
+            return wrapper["value"]
+        except Exception:                         # noqa: BLE001 — any decode
+            return None                           # failure is just a miss
+
+    def put(self, key_text: str, value: Any) -> None:
+        payload = pickle.dumps({"key": key_text, "value": value},
+                               protocol=pickle.HIGHEST_PROTOCOL)
+        digest = hashlib.sha256(payload).hexdigest().encode("ascii")
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(digest + b"\n" + payload)
+            os.replace(tmp, self._path(key_text))
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------------
+    def __contains__(self, key_text: str) -> bool:
+        return self.get(key_text) is not None
+
+    def entries(self) -> Iterable[str]:
+        """Filenames of stored entries (diagnostics / tests)."""
+        return sorted(f for f in os.listdir(self.root) if f.endswith(".pkl"))
+
+    def clear(self) -> int:
+        n = 0
+        for f in list(self.entries()):
+            try:
+                os.unlink(os.path.join(self.root, f))
+                n += 1
+            except OSError:
+                pass
+        return n

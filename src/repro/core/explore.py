@@ -16,12 +16,21 @@ into a subsystem:
   differ only in *slot counts* (1acc vs 2acc) share the same augmented
   graph.  :class:`Explorer` caches graphs per (eligibility × cost-relevant
   system knobs) and whole simulations per (graph × pool layout × policy),
-  with hit/miss counters (:class:`CacheStats`).
-* **Parallel evaluation** — a worker pool evaluates candidates in
-  deterministic chunks; results are ordered by submission index, so any
-  worker count produces bit-identical tables.  (Default is serial: the
-  coarse simulator is GIL-bound pure Python — threads are for evaluators
-  that do native work.)
+  with hit/miss counters (:class:`CacheStats`).  With ``cache_dir`` set,
+  both layers persist to an on-disk content-addressed store keyed by trace
+  fingerprint + eligibility/system signature, so *repeated sweeps across
+  processes and runs* skip straight to re-ranking.
+* **Compiled evaluation** — by default candidates run through the
+  array-compiled engine (:mod:`repro.core.fastsim`): one picklable
+  :class:`FrozenGraph` per eligibility shared across all slot-count
+  variants, simulated schedule-free (makespan + busy only), with full
+  :class:`ScheduledTask` records materialised only for the top-k winners.
+* **Parallel evaluation** — ``processes=N`` fans candidate chunks out to a
+  ``ProcessPoolExecutor`` over the pickled FrozenGraph payloads (the GIL
+  never sees the hot loop); ``max_workers`` keeps the legacy thread pool
+  for evaluators that do native work.  Either way submission is chunked and
+  results are ordered by submission index, so any worker count produces
+  bit-identical tables.
 * **Early pruning** — fabric-infeasible candidates are rejected before any
   graph is built (the paper's "2×128 mxm does not fit" check), and an
   optional lower-bound cut skips simulating candidates whose critical path
@@ -42,13 +51,15 @@ import json
 import random
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import (Any, Callable, Dict, Iterator, List, Mapping,
                     Optional, Sequence, Tuple)
 
-from .augment import Eligibility, build_graph
+from .augment import Eligibility, build_graph, lower_bound_cost
 from .devices import SystemConfig
+from .diskcache import DiskCache, sha256_text, trace_fingerprint
 from .estimator import PerfEstimate
+from .fastsim import FrozenGraph, simulate_fast
 from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
 from .simulator import SimResult, simulate
 from .taskgraph import TaskGraph
@@ -226,17 +237,12 @@ def _resolve_workers(max_workers: Optional[int], n_items: int) -> int:
 def lower_bound_seconds(graph: TaskGraph) -> float:
     """A true lower bound on any schedule's makespan for ``graph``.
 
-    Critical path with each task at its cheapest eligible device, and
-    *conditional* augmentation tasks (DMA submits/transfers that vanish when
-    the compute task lands on the SMP) at zero — the simulator may zero-cost
-    them, so counting them would overestimate and make pruning unsafe.
+    Critical path with each task at its cheapest eligible device and
+    conditional augmentation tasks at zero (``augment.lower_bound_cost`` —
+    shared with ``FrozenGraph.freeze`` so fast- and reference-mode pruning
+    can never diverge).
     """
-    def cost(t) -> float:  # noqa: ANN001 — Task
-        if t.meta.get("conditional_on") is not None:
-            return 0.0
-        return min(t.costs.values()) if t.costs else 0.0
-
-    return graph.critical_path(cost)
+    return graph.critical_path(lower_bound_cost)
 
 
 # ---------------------------------------------------------------------------
@@ -246,10 +252,19 @@ def lower_bound_seconds(graph: TaskGraph) -> float:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Hit/miss accounting across the cache hierarchy.
+
+    ``graph_*`` / ``eval_*`` count the in-memory layers; ``disk_*`` count
+    consultations of the persistent store (only reached on an in-memory
+    miss, so a cross-run warm sweep shows ``eval_misses == disk_hits``).
+    """
+
     graph_hits: int = 0
     graph_misses: int = 0
     eval_hits: int = 0
     eval_misses: int = 0
+    disk_hits: int = 0
+    disk_misses: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -418,6 +433,15 @@ class ExplorationResult:
 # ---------------------------------------------------------------------------
 
 
+def _process_eval_chunk(fg: FrozenGraph,
+                        items: Sequence[Tuple[int, SystemConfig, str]]
+                        ) -> List[Tuple[int, SimResult]]:
+    """Worker-side unit: one pickled FrozenGraph amortised over a chunk of
+    (index, system, policy) variants.  Must stay module-level picklable."""
+    return [(i, simulate_fast(fg, system, policy))
+            for i, system, policy in items]
+
+
 class Explorer:
     """Cached, parallel candidate evaluator bound to one trace.
 
@@ -430,7 +454,15 @@ class Explorer:
                  policy: str = "availability", smp_scale: float = 1.0,
                  smp_seconds_fn: Optional[Callable] = None,
                  budget: Mapping[str, float] = ZYNQ_7045_BUDGET,
-                 max_workers: Optional[int] = None, cache: bool = True):
+                 max_workers: Optional[int] = None, cache: bool = True,
+                 fast: bool = True, processes: int = 0,
+                 cache_dir: Optional[str] = None):
+        """``fast`` routes evaluation through the array-compiled engine
+        (FrozenGraph + simulate_fast, bit-identical to the reference).
+        ``processes`` > 0 fans chunks out to that many worker processes
+        (fast mode only).  ``cache_dir`` persists frozen graphs and
+        schedule-free sims to disk, keyed by trace content hash +
+        eligibility/system signature (fast mode only)."""
         self.trace = trace
         self.reports = reports
         self.policy = policy
@@ -439,15 +471,91 @@ class Explorer:
         self.budget = budget
         self.max_workers = max_workers
         self.cache_enabled = cache
+        self.fast = fast
+        self.processes = int(processes or 0)
+        if not fast:
+            if self.processes:
+                raise ValueError("processes>0 requires the fast engine "
+                                 "(picklable FrozenGraph payloads)")
+            if cache_dir is not None:
+                raise ValueError("cache_dir requires the fast engine "
+                                 "(FrozenGraph is the on-disk payload)")
+        self._disk = DiskCache(cache_dir) if cache_dir is not None else None
         self.stats = CacheStats()
-        # graph_key -> (graph, graph_stats, critical_path_s, lower_bound_s)
-        self._graphs: Dict[Tuple, Tuple[TaskGraph, Dict[str, object],
+        # graph_key -> (payload, graph_stats, critical_path_s, lower_bound_s)
+        # where payload is a FrozenGraph (fast) or a TaskGraph (reference)
+        self._graphs: Dict[Tuple, Tuple[object, Dict[str, object],
                                         float, float]] = {}
         self._sims: Dict[Tuple, SimResult] = {}
         self._lock = threading.Lock()
+        self._trace_fp: Optional[str] = None
+        self._smp_tok: Optional[str] = None
+        self._rep_tok: Optional[str] = None
+        self._disk_texts: Dict[Tuple, str] = {}
+
+    # --------------------------------------------------------- disk keys
+    def _trace_fingerprint(self) -> str:
+        # measured per-event times only shape graph costs when no
+        # smp_seconds_fn overrides them (the fn's own outputs are
+        # fingerprinted by _smp_fn_token) — excluding them lets a re-traced
+        # run of the same program hit yesterday's entries
+        if self._trace_fp is None:
+            self._trace_fp = trace_fingerprint(
+                self.trace, include_times=self.smp_seconds_fn is None)
+        return self._trace_fp
+
+    def _smp_fn_token(self) -> Optional[str]:
+        """Content token for ``smp_seconds_fn``: the per-event costs it
+        yields on this trace.  Two differently-coded functions with the same
+        output share entries; a retuned model gets fresh ones."""
+        if self.smp_seconds_fn is None:
+            return None
+        if self._smp_tok is None:
+            vals = []
+            for e in self.trace.events:
+                try:
+                    vals.append(repr(float(self.smp_seconds_fn(e))))
+                except Exception:           # noqa: BLE001 — fn may reject
+                    vals.append("!err")     # events outside its domain
+            self._smp_tok = sha256_text(",".join(vals))
+        return self._smp_tok
+
+    def _reports_token(self) -> str:
+        """Content token for the ReportMap: every cost field that shapes
+        graph costs (folded_cost = dma_in + compute; dma_out feeds the
+        xfer_out tasks).  A retuned HLS model must not reuse yesterday's
+        on-disk graphs."""
+        if self._rep_tok is None:
+            items = sorted(
+                (kernel, kind, r.compute_s, r.dma_in_s, r.dma_out_s)
+                for (kernel, kind), r in self.reports.items())
+            self._rep_tok = sha256_text(repr(items))
+        return self._rep_tok
+
+    def _graph_disk_text(self, graph_key: Tuple) -> str:
+        # note: the eligibility element of graph_key is already the
+        # canonical (sorted) _eligibility_signature tuple, so repr is
+        # insertion-order insensitive
+        cached = self._disk_texts.get(graph_key)
+        if cached is not None:
+            return cached
+        avail, tcc, dsc, oi, oo, elig = graph_key
+        text = json.dumps(
+            ["graph", 1, self._trace_fingerprint(), sorted(avail), tcc, dsc,
+             oi, oo, repr(elig), self.smp_scale, self._smp_fn_token(),
+             self._reports_token()])
+        self._disk_texts[graph_key] = text
+        return text
+
+    def _sim_disk_text(self, graph_key: Tuple, system: SystemConfig) -> str:
+        pools = [[p.name, list(p.kinds), p.count] for p in system.pools]
+        shared = [[r.name, r.count] for r in system.shared]
+        return json.dumps(
+            ["sim", 1, sha256_text(self._graph_disk_text(graph_key)),
+             pools, shared, self.policy])
 
     # ------------------------------------------------------------------
-    def _graph_for(self, cand: Candidate) -> Tuple[TaskGraph, Dict[str, object],
+    def _graph_for(self, cand: Candidate) -> Tuple[object, Dict[str, object],
                                                    float, float, bool]:
         key = _graph_key(cand.system, cand.eligibility)
         with self._lock:
@@ -456,11 +564,30 @@ class Explorer:
                 self.stats.graph_hits += 1
                 return (*self._graphs[key], True)
             self.stats.graph_misses += 1
+        text = None
+        if self._disk is not None:
+            text = self._graph_disk_text(key)
+            fg = self._disk.get(text)
+            if isinstance(fg, FrozenGraph):
+                entry = (fg, fg.stats, fg.critical_path_s, fg.lower_bound_s)
+                with self._lock:
+                    self.stats.disk_hits += 1
+                    if self.cache_enabled:
+                        self._graphs[key] = entry
+                return (*entry, True)
+            with self._lock:
+                self.stats.disk_misses += 1
         g = build_graph(self.trace, cand.system, self.reports,
                         cand.eligibility, smp_scale=self.smp_scale,
                         smp_cost="mean", smp_seconds_fn=self.smp_seconds_fn)
-        entry = (g, g.subgraph_stats(), g.critical_path(),
-                 lower_bound_seconds(g))
+        if self.fast:
+            fg = FrozenGraph.freeze(g)
+            entry = (fg, fg.stats, fg.critical_path_s, fg.lower_bound_s)
+        else:
+            entry = (g, g.subgraph_stats(), g.critical_path(),
+                     lower_bound_seconds(g))
+        if text is not None:
+            self._disk.put(text, entry[0])
         if self.cache_enabled:
             with self._lock:
                 self._graphs[key] = entry
@@ -468,12 +595,25 @@ class Explorer:
 
     # ------------------------------------------------------------------
     def evaluate(self, cand: Candidate) -> PerfEstimate:
-        """One candidate through the cached pipeline (no pruning)."""
+        """One candidate through the cached pipeline (no pruning).
+
+        Unlike batch exploration (schedule-free, top-k records only), the
+        single-candidate API always returns a full schedule — callers feed
+        it straight to ``ascii_gantt`` / ``write_prv``."""
         est, _ = self._evaluate_outcome(cand)
         if est is None:
             raise ValueError(f"candidate {cand.name!r} does not fit the "
                              f"fabric budget")
+        if self.fast and not est.sim.schedule:
+            est.sim = self._full_schedule_sim(cand)
         return est
+
+    def _full_schedule_sim(self, cand: Candidate) -> SimResult:
+        """Re-simulate one candidate with ScheduledTask records (fast mode)."""
+        entry = self._graphs.get(_graph_key(cand.system, cand.eligibility))
+        payload = entry[0] if entry is not None else self._graph_for(cand)[0]
+        return simulate_fast(payload, cand.system, self.policy,
+                             with_schedule=True)
 
     def _infeasible_outcome(self, cand: Candidate,
                             t0: float) -> Optional[CandidateOutcome]:
@@ -489,9 +629,16 @@ class Explorer:
         infeasible = self._infeasible_outcome(cand, t0)
         if infeasible is not None:
             return None, infeasible
-        graph, stats, crit, lb, ghit = self._graph_for(cand)
-        sim, ehit = self._simulate(graph, cand)
+        payload, stats, crit, lb, ghit = self._graph_for(cand)
+        sim, ehit = self._simulate(payload, cand)
         dt = time.perf_counter() - t0
+        return self._outcome_from_sim(cand, stats, crit, lb, ghit, ehit,
+                                      sim, dt)
+
+    def _outcome_from_sim(self, cand: Candidate, stats: Dict[str, object],
+                          crit: float, lb: float, ghit: bool, ehit: bool,
+                          sim: SimResult, dt: float) \
+            -> Tuple[PerfEstimate, CandidateOutcome]:
         est = PerfEstimate(candidate=cand.name, makespan_s=sim.makespan,
                            sim=sim, graph_stats=stats, critical_path_s=crit,
                            analysis_seconds=dt)
@@ -501,19 +648,52 @@ class Explorer:
             cached_graph=ghit, cached_eval=ehit,
             bottleneck=sim.bottleneck())
 
-    def _simulate(self, graph: TaskGraph,
-                  cand: Candidate) -> Tuple[SimResult, bool]:
-        key = _sim_key(_graph_key(cand.system, cand.eligibility),
-                       cand.system, self.policy)
+    def _sim_lookup(self, cand: Candidate) \
+            -> Tuple[Tuple, Optional[str], Optional[SimResult]]:
+        """Consult the in-memory then on-disk sim caches (no compute).
+
+        Returns ``(mem_key, disk_text, hit-or-None)`` and does all the
+        hit/miss accounting for the lookup."""
+        gkey = _graph_key(cand.system, cand.eligibility)
+        key = _sim_key(gkey, cand.system, self.policy)
         with self._lock:
             if self.cache_enabled and key in self._sims:
                 self.stats.eval_hits += 1
-                return self._sims[key], True
+                return key, None, self._sims[key]
             self.stats.eval_misses += 1
-        sim = simulate(graph, cand.system, policy=self.policy)
+        if self._disk is None:
+            return key, None, None
+        text = self._sim_disk_text(gkey, cand.system)
+        hit = self._disk.get(text)
+        with self._lock:
+            if isinstance(hit, SimResult):
+                self.stats.disk_hits += 1
+            else:
+                self.stats.disk_misses += 1
+                hit = None
+        if hit is not None and self.cache_enabled:
+            with self._lock:
+                self._sims[key] = hit
+        return key, text, hit
+
+    def _sim_store(self, key: Tuple, text: Optional[str],
+                   sim: SimResult) -> None:
+        if text is not None:
+            self._disk.put(text, sim)
         if self.cache_enabled:
             with self._lock:
                 self._sims[key] = sim
+
+    def _simulate(self, payload: object,
+                  cand: Candidate) -> Tuple[SimResult, bool]:
+        key, text, hit = self._sim_lookup(cand)
+        if hit is not None:
+            return hit, True
+        if self.fast:
+            sim = simulate_fast(payload, cand.system, self.policy)
+        else:
+            sim = simulate(payload, cand.system, policy=self.policy)
+        self._sim_store(key, text, sim)
         return sim, False
 
     # ------------------------------------------------------------------
@@ -533,7 +713,9 @@ class Explorer:
         t0 = time.perf_counter()
         stats_before = self.stats.as_dict()
         cands = list(candidates)
-        n_workers = _resolve_workers(self.max_workers, len(cands))
+        procs = self.processes if self.fast else 0
+        n_workers = procs if procs > 0 \
+            else _resolve_workers(self.max_workers, len(cands))
         outcomes: List[Optional[CandidateOutcome]] = [None] * len(cands)
         estimates: Dict[str, PerfEstimate] = {}
         ok_makespans: List[float] = []
@@ -544,10 +726,15 @@ class Explorer:
                 return None
             return sorted(ok_makespans)[kk - 1]
 
+        ppool = ProcessPoolExecutor(max_workers=procs) \
+            if procs > 0 and len(cands) > 1 else None
         pool = ThreadPoolExecutor(max_workers=n_workers) \
-            if n_workers > 1 else None
+            if ppool is None and n_workers > 1 else None
         try:
-            chunk = max(1, n_workers)
+            # processes amortise pickling + round-trip latency over larger
+            # chunks; pruning decisions still land on the deterministic
+            # chunk boundaries
+            chunk = procs * 32 if ppool is not None else max(1, n_workers)
             for base in range(0, len(cands), chunk):
                 batch: List[Tuple[int, Candidate]] = []
                 for i in range(base, min(base + chunk, len(cands))):
@@ -569,7 +756,9 @@ class Explorer:
                                 analysis_seconds=time.perf_counter() - tc)
                             continue
                     batch.append((i, cand))
-                if pool is not None:
+                if ppool is not None:
+                    results = self._evaluate_batch_processes(ppool, batch)
+                elif pool is not None:
                     results = list(pool.map(
                         lambda ic: self._evaluate_outcome(ic[1]), batch))
                 else:
@@ -582,6 +771,8 @@ class Explorer:
         finally:
             if pool is not None:
                 pool.shutdown()
+            if ppool is not None:
+                ppool.shutdown()
 
         done = [o for o in outcomes if o is not None]
         assert len(done) == len(cands)
@@ -595,7 +786,76 @@ class Explorer:
             cache=cache, estimates=estimates)
         for rank, o in enumerate(result.ranked):
             o.rank = rank
+        self._materialise_schedules(result, cands, estimates, kk)
         return result
+
+    def _evaluate_batch_processes(self, ppool: ProcessPoolExecutor,
+                                  batch: Sequence[Tuple[int, Candidate]]) \
+            -> List[Tuple[Optional[PerfEstimate], CandidateOutcome]]:
+        """One deterministic chunk through the worker processes.
+
+        Graphs are built (or fetched) in the parent so every slot-count
+        variant of an eligibility ships a single FrozenGraph pickle; cache
+        hits never leave the parent; results are reassembled by batch
+        position, so the outcome is bit-identical to the serial path."""
+        results: List = [None] * len(batch)
+        # graph_key -> [(pos, cand, mem_key, disk_text, ghit)]
+        pending: Dict[Tuple, List[Tuple]] = {}
+        graph_info: Dict[Tuple, Tuple] = {}
+        for pos, (_, cand) in enumerate(batch):
+            tc = time.perf_counter()
+            payload, stats, crit, lb, ghit = self._graph_for(cand)
+            key, text, hit = self._sim_lookup(cand)
+            if hit is not None:
+                results[pos] = self._outcome_from_sim(
+                    cand, stats, crit, lb, ghit, True, hit,
+                    time.perf_counter() - tc)
+                continue
+            gkey = _graph_key(cand.system, cand.eligibility)
+            graph_info[gkey] = (payload, stats, crit, lb)
+            pending.setdefault(gkey, []).append((pos, cand, key, text, ghit))
+        futures = []
+        n_groups = max(len(pending), 1)
+        for gkey, items in pending.items():
+            payload = graph_info[gkey][0]
+            # a single-eligibility sweep must still use every worker: split
+            # each graph key's items across the pool (deterministic slices,
+            # reassembled by position)
+            n_slices = max(1, min(self.processes // n_groups or 1,
+                                  len(items)))
+            step = -(-len(items) // n_slices)
+            for lo in range(0, len(items), step):
+                part = items[lo:lo + step]
+                work = [(pos, cand.system, self.policy)
+                        for pos, cand, _, _, _ in part]
+                futures.append((gkey, part, time.perf_counter(),
+                                ppool.submit(_process_eval_chunk,
+                                             payload, work)))
+        for gkey, items, t_submit, fut in futures:
+            sims = dict(fut.result())
+            share = (time.perf_counter() - t_submit) / max(len(items), 1)
+            _, stats, crit, lb = graph_info[gkey]
+            for pos, cand, key, text, ghit in items:
+                sim = sims[pos]
+                self._sim_store(key, text, sim)
+                results[pos] = self._outcome_from_sim(
+                    cand, stats, crit, lb, ghit, False, sim, share)
+        return results
+
+    def _materialise_schedules(self, result: ExplorationResult,
+                               cands: Sequence[Candidate],
+                               estimates: Dict[str, PerfEstimate],
+                               kk: int) -> None:
+        """Fast mode ranks on schedule-free sims; rebuild the full
+        ScheduledTask records for the top-k winners only."""
+        if not self.fast or not estimates:
+            return
+        by_name = {c.name: c for c in cands}
+        for o in result.ranked[:kk]:
+            est = estimates.get(o.name)
+            if est is None or est.sim.schedule:
+                continue
+            est.sim = self._full_schedule_sim(by_name[o.name])
 
     # ------------------------------------------------------------------
     def hillclimb(self, space: DesignSpace,
@@ -626,16 +886,19 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
             smp_seconds_fn=None,
             budget: Mapping[str, float] = ZYNQ_7045_BUDGET, *,
             max_workers: Optional[int] = None, cache: bool = True,
-            prune: bool = False,
-            top_k: Optional[int] = None) -> ExplorationResult:
+            prune: bool = False, top_k: Optional[int] = None,
+            fast: bool = True, processes: int = 0,
+            cache_dir: Optional[str] = None) -> ExplorationResult:
     """Estimate every feasible candidate; rank; pick the best.
 
     This is the "coffee-break" loop: its wall time replaces one bitstream
     generation *per candidate* in the traditional flow.  The seed signature
-    is unchanged; the keyword-only knobs expose the engine (worker count,
-    caching, lower-bound pruning, top-k ranking).
+    is unchanged; the keyword-only knobs expose the engine (worker/process
+    count, in-memory + on-disk caching, lower-bound pruning, top-k
+    ranking, compiled vs reference simulation engine).
     """
     ex = Explorer(trace, reports, policy=policy, smp_scale=smp_scale,
                   smp_seconds_fn=smp_seconds_fn, budget=budget,
-                  max_workers=max_workers, cache=cache)
+                  max_workers=max_workers, cache=cache, fast=fast,
+                  processes=processes, cache_dir=cache_dir)
     return ex.explore(candidates, top_k=top_k, prune=prune)

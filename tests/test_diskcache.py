@@ -1,0 +1,212 @@
+"""Persistent sweep store: integrity, staleness, and cross-run cache hits.
+
+The contract under test: a second Explorer over the same trace (fresh
+process semantics — fresh instance, same ``cache_dir``) re-ranks from disk;
+corrupted or stale entries degrade to recomputation, never to a crash or a
+wrong result.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core import Candidate, Eligibility, Explorer, zynq_system
+from repro.core.diskcache import DiskCache, sha256_text, trace_fingerprint
+from repro.core.hlsreport import KernelReport
+from repro.core.trace import Trace, TraceEvent
+
+
+def synth_trace(n, cost=1e-3):
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=cost * (1 + (i % 3)),
+                         accesses=[((i % 4,), "inout", 1024)],
+                         devices=("fpga", "smp"))
+              for i in range(n)]
+    return Trace(events=events, wall_seconds=n * cost)
+
+
+def synth_candidates(rep, accs=(1, 2)):
+    out = []
+    for n_acc in accs:
+        for smp in (False, True):
+            name = f"{n_acc}acc" + ("+smp" if smp else "")
+            kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
+            out.append(Candidate(
+                name=name, system=zynq_system(name, {"fpga:k": n_acc}),
+                eligibility=Eligibility({"k": kinds}), fabric=[(rep, n_acc)]))
+    return out
+
+
+@pytest.fixture()
+def fixture_world():
+    rep = KernelReport(kernel="k", device_kind="fpga:k", compute_s=1e-4,
+                       dma_in_s=1e-5, dma_out_s=2e-5,
+                       resources={"dsp": 100.0, "bram_kb": 10.0,
+                                  "lut": 1000.0})
+    return synth_trace(40), {("k", "fpga:k"): rep}, rep
+
+
+# ---------------------------------------------------------------------------
+# DiskCache primitive
+# ---------------------------------------------------------------------------
+
+
+def test_diskcache_roundtrip_and_miss(tmp_path):
+    dc = DiskCache(tmp_path)
+    assert dc.get("nope") is None
+    dc.put("key-a", {"x": [1, 2, 3]})
+    assert dc.get("key-a") == {"x": [1, 2, 3]}
+    assert "key-a" in dc
+    dc.put("key-a", "overwritten")
+    assert dc.get("key-a") == "overwritten"
+    assert len(list(dc.entries())) == 1
+    assert dc.clear() == 1
+    assert dc.get("key-a") is None
+
+
+def test_diskcache_detects_corruption(tmp_path):
+    dc = DiskCache(tmp_path)
+    dc.put("key-a", list(range(100)))
+    path = os.path.join(str(tmp_path), sha256_text("key-a") + ".pkl")
+    blob = open(path, "rb").read()
+    # flip one payload byte → digest mismatch → miss, not crash
+    open(path, "wb").write(blob[:80] + bytes([blob[80] ^ 0xFF]) + blob[81:])
+    assert dc.get("key-a") is None
+    # truncation → miss
+    open(path, "wb").write(blob[:40])
+    assert dc.get("key-a") is None
+    # garbage that is not even a header → miss
+    open(path, "wb").write(b"not a cache entry")
+    assert dc.get("key-a") is None
+
+
+def test_diskcache_detects_stale_key(tmp_path):
+    """An entry whose *content* was written under a different key (hash
+    collision / manual tampering) must read as a miss for the real key."""
+    dc = DiskCache(tmp_path)
+    dc.put("key-a", "value-a")
+    real = os.path.join(str(tmp_path), sha256_text("key-a") + ".pkl")
+    # re-home an internally-consistent entry for key-b at key-a's address
+    dc.put("key-b", "value-b")
+    os.replace(os.path.join(str(tmp_path), sha256_text("key-b") + ".pkl"),
+               real)
+    assert dc.get("key-a") is None        # stale: hash valid, key mismatch
+    assert dc.get("key-b") is None        # its file moved away
+
+
+def test_trace_fingerprint_tracks_content(fixture_world):
+    trace, reports, rep = fixture_world
+    assert trace_fingerprint(trace) == trace_fingerprint(synth_trace(40))
+    assert trace_fingerprint(trace) != trace_fingerprint(synth_trace(41))
+    bumped = synth_trace(40, cost=2e-3)
+    assert trace_fingerprint(trace) != trace_fingerprint(bumped)
+
+
+# ---------------------------------------------------------------------------
+# Explorer integration
+# ---------------------------------------------------------------------------
+
+
+def test_second_explorer_run_reports_disk_hits(tmp_path, fixture_world):
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep)
+    r1 = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    assert r1.cache["disk_hits"] == 0 and r1.cache["disk_misses"] > 0
+
+    ex2 = Explorer(trace, reports, cache_dir=str(tmp_path))
+    r2 = ex2.explore(cands)
+    # 2 graphs + 4 sims served from disk, nothing recomputed
+    assert r2.cache["disk_hits"] == 6 and r2.cache["disk_misses"] == 0
+    assert ex2.stats.disk_hits == 6
+    assert [(o.name, o.makespan_s) for o in r2.ranked] == \
+        [(o.name, o.makespan_s) for o in r1.ranked]
+
+
+def test_corrupted_cache_files_recompute_not_crash(tmp_path, fixture_world):
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep)
+    r1 = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    files = sorted(os.listdir(str(tmp_path)))
+    assert files
+    for f in files:
+        p = os.path.join(str(tmp_path), f)
+        blob = open(p, "rb").read()
+        open(p, "wb").write(blob[:70] + b"\xde\xad" + blob[72:])
+    ex = Explorer(trace, reports, cache_dir=str(tmp_path))
+    r = ex.explore(cands)
+    assert r.cache["disk_hits"] == 0 and r.cache["disk_misses"] > 0
+    assert [(o.name, o.makespan_s) for o in r.ranked] == \
+        [(o.name, o.makespan_s) for o in r1.ranked]
+    # the rewritten entries are healthy again
+    r3 = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    assert r3.cache["disk_hits"] == 6
+
+
+def test_stale_entries_keyed_by_trace_content(tmp_path, fixture_world):
+    """Same axes, different trace → different fingerprints → no false
+    sharing; the old trace's entries still serve the old trace."""
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep, accs=(1,))
+    r1 = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    other = synth_trace(40, cost=5e-3)
+    ro = Explorer(other, reports, cache_dir=str(tmp_path)).explore(cands)
+    assert ro.cache["disk_hits"] == 0        # nothing reused across traces
+    assert [o.makespan_s for o in ro.ranked] != \
+        [o.makespan_s for o in r1.ranked]
+    back = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    assert back.cache["disk_hits"] > 0
+    assert [(o.name, o.makespan_s) for o in back.ranked] == \
+        [(o.name, o.makespan_s) for o in r1.ranked]
+
+
+def test_policy_and_smp_model_isolate_sim_entries(tmp_path, fixture_world):
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep, accs=(1,))
+    Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    eft = Explorer(trace, reports, policy="eft",
+                   cache_dir=str(tmp_path)).explore(cands)
+    # graphs are policy-independent (shared); sims are not
+    assert eft.cache["disk_hits"] == 2 and eft.cache["disk_misses"] == 2
+
+    scaled = Explorer(trace, reports, smp_scale=3.0,
+                      cache_dir=str(tmp_path)).explore(cands)
+    assert scaled.cache["disk_hits"] == 0    # different graph content
+
+    def fn(event):
+        return 2e-3
+
+    with_fn = Explorer(trace, reports, smp_seconds_fn=fn,
+                       cache_dir=str(tmp_path)).explore(cands)
+    assert with_fn.cache["disk_hits"] == 0   # smp model fingerprinted
+
+
+def test_changed_reports_invalidate_disk_entries(tmp_path, fixture_world):
+    """A retuned HLS cost model must not be served yesterday's graphs: the
+    ReportMap's cost fields are part of the on-disk key."""
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep, accs=(1,))
+    r1 = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    import dataclasses as dc
+    slow = dc.replace(rep, compute_s=rep.compute_s * 100)
+    slow_reports = {("k", "fpga:k"): slow}
+    r2 = Explorer(trace, slow_reports,
+                  cache_dir=str(tmp_path)).explore(cands)
+    assert r2.cache["disk_hits"] == 0
+    assert [o.makespan_s for o in r2.ranked] != \
+        [o.makespan_s for o in r1.ranked]
+    # and the original reports still hit their own entries
+    r3 = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    assert r3.cache["disk_hits"] > 0
+    assert [(o.name, o.makespan_s) for o in r3.ranked] == \
+        [(o.name, o.makespan_s) for o in r1.ranked]
+
+
+def test_processes_and_disk_cache_compose(tmp_path, fixture_world):
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep, accs=(1, 2, 3))
+    warm = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    r = Explorer(trace, reports, cache_dir=str(tmp_path),
+                 processes=2).explore(cands)
+    assert r.cache["disk_hits"] > 0
+    assert [(o.name, o.makespan_s) for o in r.ranked] == \
+        [(o.name, o.makespan_s) for o in warm.ranked]

@@ -1,0 +1,311 @@
+"""Array-compiled simulator: bit-identical to the reference engine.
+
+The exploration engine ranks candidates on ``simulate_fast`` results, so
+its contract is exact equality — makespans, placements, busy sums and full
+schedule records must be ``==`` to ``Simulator.run()`` on randomized
+graphs, under both policies, with and without conditional DMA tasks.
+"""
+import pickle
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import Candidate, Eligibility, Explorer, zynq_system
+from repro.core.augment import build_graph
+from repro.core.devices import DevicePool, SharedResource, SystemConfig
+from repro.core.fastsim import FrozenGraph, simulate_batch, simulate_fast
+from repro.core.hlsreport import KernelReport
+from repro.core.simulator import Simulator
+from repro.core.taskgraph import Task, TaskGraph
+from repro.core.trace import Trace, TraceEvent
+
+
+def synth_reports(kernel: str = "k", kind: str = "fpga:k"):
+    rep = KernelReport(kernel=kernel, device_kind=kind, compute_s=1e-4,
+                       dma_in_s=1e-5, dma_out_s=2e-5,
+                       resources={"dsp": 100.0, "bram_kb": 10.0, "lut": 1000.0})
+    return {(kernel, kind): rep}, rep
+
+
+def assert_identical(ref, fast, *, schedules=True):
+    assert ref.makespan == fast.makespan
+    assert ref.placements == fast.placements
+    assert ref.busy == fast.busy
+    assert ref.pool_slots == fast.pool_slots
+    assert ref.per_kind_task_counts() == fast.per_kind_task_counts()
+    if schedules:
+        assert [(s.uid, s.name, s.pool, s.slot, s.kind, s.start, s.end, s.role)
+                for s in ref.schedule] == \
+               [(s.uid, s.name, s.pool, s.slot, s.kind, s.start, s.end, s.role)
+                for s in fast.schedule]
+
+
+# ---------------------------------------------------------------------------
+# randomized augmented graphs (conditional DMA machinery included)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_trace(draw):
+    n = draw(st.integers(4, 30))
+    n_regions = draw(st.integers(1, 5))
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=draw(st.floats(1e-4, 5e-3)),
+                         accesses=[((i % n_regions,), "inout", 512)],
+                         devices=("fpga", "smp"))
+              for i in range(n)]
+    return Trace(events=events, wall_seconds=1.0)
+
+
+@hypothesis.given(random_trace(), st.integers(1, 3), st.booleans(),
+                  st.sampled_from(["availability", "eft"]))
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_fast_identical_on_augmented_graphs(tr, n_acc, smp, policy):
+    """Both policies, with (±smp ⇒ conditional zero-costing exercised both
+    ways) and the full DMA submit/transfer machinery present."""
+    reports, rep = synth_reports()
+    kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
+    system = zynq_system("c", {"fpga:k": n_acc})
+    graph = build_graph(tr, system, reports, Eligibility({"k": kinds}),
+                        smp_cost="mean")
+    fg = FrozenGraph.freeze(graph)
+    ref = Simulator(graph, system, policy).run()
+    fast = simulate_fast(fg, system, policy, with_schedule=True)
+    assert_identical(ref, fast)
+
+
+@hypothesis.given(random_trace())
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_fast_smp_only_graphs_have_no_conditionals(tr):
+    reports, rep = synth_reports()
+    system = zynq_system("smponly", {})
+    graph = build_graph(tr, system, reports, Eligibility({"k": ("smp",)}),
+                        smp_cost="mean")
+    ref = Simulator(graph, system).run()
+    fast = simulate_fast(FrozenGraph.freeze(graph), system,
+                         with_schedule=True)
+    assert_identical(ref, fast)
+
+
+# ---------------------------------------------------------------------------
+# random bare DAGs (no augmentation, hand uids)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(2, 25))
+    g = TaskGraph()
+    uids = []
+    for i in range(n):
+        cost = draw(st.floats(0.1, 5.0, allow_nan=False))
+        t = Task(uid=g.new_uid(), name=f"t{i}", costs={"smp": cost},
+                 creation_index=i)
+        g.add_task(t, infer_deps=False)
+        uids.append(t.uid)
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()) and draw(st.booleans()):
+                g.add_edge(uids[i], uids[j])
+    return g
+
+
+@hypothesis.given(random_dag(), st.integers(1, 4))
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_fast_identical_on_bare_dags(g, cores):
+    system = SystemConfig(name="smp-only",
+                          pools=[DevicePool("smp", ("smp",), cores)])
+    ref = Simulator(g, system).run()
+    fast = simulate_fast(FrozenGraph.freeze(g), system, with_schedule=True)
+    assert_identical(ref, fast)
+
+
+def test_fast_non_dense_uids():
+    """Hand-built graphs need not have row-index uids; heap tie-breaks must
+    still follow the raw uid ordering."""
+    g = TaskGraph()
+    for uid, ci in ((90, 0), (7, 0), (41, 0)):
+        g.add_task(Task(uid=uid, name=f"t{uid}", costs={"smp": 1.0},
+                        creation_index=ci), infer_deps=False)
+    system = SystemConfig(name="s", pools=[DevicePool("smp", ("smp",), 1)])
+    ref = Simulator(g, system).run()
+    fast = simulate_fast(FrozenGraph.freeze(g), system, with_schedule=True)
+    assert_identical(ref, fast)
+    # all three tie on (ready, creation_index) — uid must break the tie
+    assert [s.uid for s in fast.schedule] == [7, 41, 90]
+
+
+def test_fast_shared_resource_and_deadlock():
+    g = TaskGraph()
+    for i in range(4):
+        g.add_task(Task(uid=g.new_uid(), name=f"x{i}", devices=("dma_out",),
+                        costs={"dma_out": 1.0}, creation_index=i),
+                   infer_deps=False)
+    system = SystemConfig(name="s", pools=[DevicePool("smp", ("smp",), 2)],
+                          shared=[SharedResource("dma_out", 1)])
+    fast = simulate_fast(FrozenGraph.freeze(g), system)
+    assert fast.makespan == pytest.approx(4.0)
+
+    g2 = TaskGraph()
+    a = Task(uid=g2.new_uid(), name="a", costs={"smp": 1.0}, creation_index=0)
+    b = Task(uid=g2.new_uid(), name="b", costs={"smp": 1.0}, creation_index=1)
+    g2.add_task(a, infer_deps=False)
+    g2.add_task(b, infer_deps=False)
+    g2.add_edge(a.uid, b.uid)
+    g2.add_edge(b.uid, a.uid)
+    with pytest.raises(RuntimeError, match="deadlock"):
+        simulate_fast(FrozenGraph.freeze(g2),
+                      SystemConfig(name="s",
+                                   pools=[DevicePool("smp", ("smp",), 1)]))
+
+
+# ---------------------------------------------------------------------------
+# schedule-free mode, pickling, batch API
+# ---------------------------------------------------------------------------
+
+
+def _demo_frozen(n_events=40):
+    reports, rep = synth_reports()
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=1e-3 * (1 + (i % 3)),
+                         accesses=[((i % 4,), "inout", 1024)],
+                         devices=("fpga", "smp"))
+              for i in range(n_events)]
+    tr = Trace(events=events, wall_seconds=1.0)
+    system = zynq_system("2acc", {"fpga:k": 2})
+    graph = build_graph(tr, system, reports,
+                        Eligibility({"k": ("fpga:k", "smp")}), smp_cost="mean")
+    return FrozenGraph.freeze(graph), graph, system
+
+
+def test_schedule_free_mode_matches_full():
+    fg, graph, system = _demo_frozen()
+    full = simulate_fast(fg, system, with_schedule=True)
+    lite = simulate_fast(fg, system)
+    assert lite.schedule == []
+    assert_identical(full, lite, schedules=False)
+    # placement counts survive without records (SimResult fallback)
+    assert lite.per_kind_task_counts() == full.per_kind_task_counts()
+    assert lite.summary()["compute_placement_counts"] == \
+        full.summary()["compute_placement_counts"]
+
+
+def test_frozen_graph_pickle_roundtrip_and_slot_sharing():
+    fg, graph, _ = _demo_frozen()
+    fg2 = pickle.loads(pickle.dumps(fg))
+    assert fg2.n == fg.n and fg2.kinds == fg.kinds
+    assert fg2.stats == fg.stats
+    assert fg2.critical_path_s == fg.critical_path_s
+    assert fg2.lower_bound_s == fg.lower_bound_s
+    # one frozen payload serves every slot-count variant
+    items = [(zynq_system(f"{n}acc", {"fpga:k": n}), "availability")
+             for n in (1, 2, 4)]
+    fast = simulate_batch(fg2, items)
+    for (system, policy), lite in zip(items, fast):
+        ref = Simulator(graph, system, policy).run()
+        assert ref.makespan == lite.makespan
+        assert ref.placements == lite.placements
+    # more slots never slower on this trace shape
+    assert fast[2].makespan <= fast[0].makespan
+
+
+def test_fast_rejects_unknown_policy_and_missing_cost():
+    fg, _, system = _demo_frozen(6)
+    with pytest.raises(ValueError):
+        simulate_fast(fg, system, policy="heft")
+    g = TaskGraph()
+    g.add_task(Task(uid=g.new_uid(), name="t", devices=("fpga:k",),
+                    costs={"smp": 1.0}, creation_index=0), infer_deps=False)
+    bad = SystemConfig(name="s", pools=[DevicePool("acc", ("fpga:k",), 1)])
+    with pytest.raises((KeyError, RuntimeError)):
+        simulate_fast(FrozenGraph.freeze(g), bad)
+
+
+# ---------------------------------------------------------------------------
+# process-parallel explorer: bit-identical, deterministic ordering
+# ---------------------------------------------------------------------------
+
+
+def _candidates(rep, accs=(1, 2, 3)):
+    out = []
+    for n_acc in accs:
+        for smp in (False, True):
+            name = f"{n_acc}acc" + ("+smp" if smp else "")
+            kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
+            out.append(Candidate(
+                name=name, system=zynq_system(name, {"fpga:k": n_acc}),
+                eligibility=Eligibility({"k": kinds}), fabric=[(rep, n_acc)]))
+    return out
+
+
+def test_process_pool_explorer_matches_serial_and_reference():
+    reports, rep = synth_reports()
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=1e-3 * (1 + (i % 3)),
+                         accesses=[((i % 4,), "inout", 1024)],
+                         devices=("fpga", "smp"))
+              for i in range(48)]
+    tr = Trace(events=events, wall_seconds=1.0)
+    cands = _candidates(rep)
+    serial = Explorer(tr, reports).explore(cands, top_k=2)
+    procs = Explorer(tr, reports, processes=2).explore(cands, top_k=2)
+    legacy = Explorer(tr, reports, fast=False).explore(cands, top_k=2)
+    rows = lambda r: [(o.name, o.makespan_s, o.rank) for o in r.ranked]
+    assert rows(serial) == rows(procs) == rows(legacy)
+    assert procs.n_workers == 2
+    # schedule records exist exactly for the top-k winners in fast mode
+    winners = {o.name for o in serial.ranked[:2]}
+    for name, est in serial.estimates.items():
+        assert bool(est.sim.schedule) == (name in winners)
+    # the legacy engine materialises everything — fast winners must agree
+    for name in winners:
+        ref_sched = legacy.estimates[name].sim.schedule
+        fast_sched = serial.estimates[name].sim.schedule
+        assert [(s.uid, s.start, s.end) for s in ref_sched] == \
+               [(s.uid, s.start, s.end) for s in fast_sched]
+
+
+def test_process_pool_single_eligibility_splits_across_workers():
+    """All slot-count variants share one graph key; the pool must still be
+    used (and stay bit-identical to serial)."""
+    reports, rep = synth_reports()
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=1e-3 * (1 + (i % 3)),
+                         accesses=[((i % 4,), "inout", 1024)],
+                         devices=("fpga", "smp"))
+              for i in range(30)]
+    tr = Trace(events=events, wall_seconds=1.0)
+    cands = _candidates(rep, accs=(1, 2, 3, 4, 5, 6))
+    only_acc = [c for c in cands if "+smp" not in c.name]   # one graph key
+    serial = Explorer(tr, reports).explore(only_acc)
+    procs = Explorer(tr, reports, processes=2).explore(only_acc)
+    assert [(o.name, o.makespan_s) for o in serial.ranked] == \
+        [(o.name, o.makespan_s) for o in procs.ranked]
+
+
+def test_evaluate_always_returns_full_schedule():
+    reports, rep = synth_reports()
+    tr = Trace(events=[TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                                  elapsed_smp=1e-3,
+                                  accesses=[((i % 2,), "inout", 64)],
+                                  devices=("fpga", "smp"))
+                       for i in range(8)],
+               wall_seconds=1.0)
+    ex = Explorer(tr, reports)
+    est = ex.evaluate(_candidates(rep, accs=(2,))[0])
+    assert est.sim.schedule, "single-candidate API must carry records"
+    assert est.sim.per_kind_task_counts()
+
+
+def test_fast_guardrails():
+    reports, rep = synth_reports()
+    tr = Trace(events=[TraceEvent(index=0, name="k", created_at=0.0,
+                                  elapsed_smp=1e-3,
+                                  accesses=[((0,), "inout", 64)],
+                                  devices=("fpga", "smp"))],
+               wall_seconds=1.0)
+    with pytest.raises(ValueError):
+        Explorer(tr, reports, fast=False, processes=2)
+    with pytest.raises(ValueError):
+        Explorer(tr, reports, fast=False, cache_dir="/tmp/nope")
