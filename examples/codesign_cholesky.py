@@ -2,11 +2,12 @@
 
 Which kernels (dgemm/dsyrk/dtrsm; dpotrf is SMP-only as in Fig. 4) deserve
 the FPGA slots?  Full-resource single-accelerator variants vs two-kernel
-combinations — estimated through the array-compiled exploration engine
-(schedule-free ranking, full records for the top-3) AND reference-executed,
-with trend agreement.  The on-disk sweep store next to this file makes the
-second invocation re-rank from disk hits instead of rebuilding graphs —
-the "refine the sweep tomorrow" loop.
+combinations — estimated through the candidate-axis batch engine (all
+variants sharing a frozen graph advance in one lockstep sweep,
+schedule-free ranking, full records replayed for the top-3) AND
+reference-executed, with trend agreement.  The on-disk sweep store next to
+this file makes the second invocation re-rank from disk hits instead of
+building a single graph — the "refine the sweep tomorrow" loop.
 
 Run: PYTHONPATH=src python examples/codesign_cholesky.py
 """
@@ -30,6 +31,14 @@ print("\n".join(res.report_lines()))
 c = res.cache
 print(f"disk store: {c['disk_hits']} hits / {c['disk_misses']} misses "
       f"(second run re-ranks without a single graph build)")
+b = explorer.batch_stats
+if b.groups:
+    print(f"batch engine: {b.lockstep_lanes} candidates in lockstep, "
+          f"{b.diverged_lanes} replayed serially after event-order "
+          f"divergence, {b.small_group_lanes} below the lockstep threshold "
+          f"({b.groups} graph-sharing groups)")
+else:
+    print("batch engine: idle — every simulation served from the store")
 
 ref = [reference_run(trace, cand.system, reports, cand.eligibility,
                      smp_seconds_fn=a9)

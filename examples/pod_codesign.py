@@ -10,11 +10,16 @@ Run after the dry-run sweep:
   PYTHONPATH=src python -m repro.launch.dryrun --all --probes
   PYTHONPATH=src python examples/pod_codesign.py [arch shape]
 """
+import dataclasses
 import sys
 import time
 
+from repro.core.batchsim import BatchStats, simulate_batch
+from repro.core.devices import SharedResource
 from repro.core.explore import DesignSpace, parallel_map
-from repro.core.steptask import estimate_step
+from repro.core.fastsim import freeze_graph
+from repro.core.steptask import (build_step_graph, estimate_step,
+                                 pod_chip_system)
 from repro.core.paraver import ascii_gantt
 from repro.roofline.model import load_artifacts
 
@@ -64,3 +69,29 @@ for name, est in sorted(candidates.items(), key=lambda kv: kv[1].makespan_s):
 best = min(candidates.values(), key=lambda e: e.makespan_s)
 print(f"\nchosen: {best.variant} — timeline (first layers):")
 print(ascii_gantt(best.sim, width=78, max_rows=6))
+
+# Slot-count what-if over the chosen schedule: ICI link-pair variants are
+# the pod-level analogue of the Zynq accelerator-count axis — one frozen
+# step graph, every link count in a single lockstep batch
+# (repro.core.batchsim), exactly how the fig6 sweep evaluates slot ramps.
+overlap = "overlap" in best.variant
+pods = int(best.variant.split("-")[1][0])
+fg = freeze_graph(build_step_graph(best.costs, overlap=overlap, pods=pods))
+base = pod_chip_system(pods=pods)
+variants = [dataclasses.replace(
+                base, name=f"ici×{n}",
+                shared=[SharedResource("ici", n)] + [s for s in base.shared
+                                                     if s.name != "ici"])
+            for n in (1, 2, 3, 4)]
+stats = BatchStats()
+t0 = time.perf_counter()
+sims = simulate_batch(fg, variants, "eft", min_lockstep=2, stats=stats)
+dt = time.perf_counter() - t0
+print(f"\nICI link-count what-if ({len(variants)} variants, one lockstep "
+      f"batch, {dt * 1e3:.1f} ms; {stats.lockstep_lanes} lockstep / "
+      f"{stats.diverged_lanes} replayed):")
+for system, sim in sorted(zip(variants, sims), key=lambda p: p[1].makespan):
+    u = sim.utilization()
+    print(f"  {system.name:6s} step={sim.makespan * 1e3:9.3f} ms  "
+          f"bottleneck={sim.bottleneck():4s} "
+          f"util={{{', '.join(f'{k}:{v:.2f}' for k, v in sorted(u.items()))}}}")

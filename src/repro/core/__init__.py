@@ -10,8 +10,10 @@ from .hlsreport import (HLSSynthesisModel, KernelReport, TPUConstants, TPU_V5E,
                         XLACostModel, ZYNQ_7045_BUDGET, a9_smp_seconds, fits,
                         smp_time_scale)
 from .augment import Eligibility, build_graph
-from .simulator import ScheduledTask, SimResult, Simulator, simulate
-from .fastsim import FrozenGraph, freeze_graph, simulate_batch, simulate_fast
+from .simulator import (ScheduledTask, SimResult, Simulator, simulate,
+                        validate_pools)
+from .fastsim import FrozenGraph, freeze_graph, simulate_each, simulate_fast
+from .batchsim import BatchStats, simulate_batch
 from .diskcache import DiskCache, trace_fingerprint
 from .estimator import (PerfEstimate, contention_time_model, estimate,
                         reference_run, same_best, spearman_rank_correlation,
@@ -30,8 +32,9 @@ __all__ = [
     "XLACostModel", "ZYNQ_7045_BUDGET", "a9_smp_seconds", "fits",
     "smp_time_scale",
     "Eligibility", "build_graph",
-    "ScheduledTask", "SimResult", "Simulator", "simulate",
-    "FrozenGraph", "freeze_graph", "simulate_batch", "simulate_fast",
+    "ScheduledTask", "SimResult", "Simulator", "simulate", "validate_pools",
+    "FrozenGraph", "freeze_graph", "simulate_each", "simulate_fast",
+    "BatchStats", "simulate_batch",
     "DiskCache", "trace_fingerprint",
     "PerfEstimate", "contention_time_model", "estimate", "reference_run",
     "same_best", "spearman_rank_correlation", "speedup_table",

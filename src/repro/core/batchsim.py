@@ -1,0 +1,451 @@
+"""Candidate-axis batched simulation engine — one graph, all candidates.
+
+:func:`repro.core.fastsim.simulate_fast` made the *per-candidate* event
+loop cheap; a co-design sweep still pays that loop once per candidate even
+though (on the fig6 grid) 198/200 candidates share a single
+:class:`~repro.core.fastsim.FrozenGraph` and differ only in pool slot
+counts.  This module evaluates **every candidate sharing one frozen graph
+in a single lockstep sweep**: per-candidate state is stacked on a
+candidate ("lane") axis — pool free-slot times ``[n_pools, max_slots,
+B]``, task ready times ``[n, B]``, placement ids ``[n, B]``; the lane axis
+sits last so each step touches contiguous vectors — and each step advances
+*all* lanes through one task row with numpy (an argmin over the slot axis
+replaces ``_Pool.earliest_slot``, per-kind cost gathers replace the
+dispatch probe).
+
+**Why this is exact.**  The reference engine pops tasks in ``(ready_t,
+creation_index, uid)`` heap order, and pool contention makes results
+order-sensitive — different slot counts *can* pop in different orders.  The
+batch engine therefore replays one **reference order** (recorded by running
+the highest-parallelism lane through the bit-identical ``simulate_fast``
+path) and validates every other lane against two facts:
+
+* the *set* of ready tasks at each step depends only on the graph and on
+  which rows already executed — identical across lanes by construction;
+* a lane's execution order equals its own heap order **iff** its popped
+  keys are strictly increasing along the replayed order (heap pops are
+  monotone, keys are distinct, so any deviation must eventually pop a
+  smaller key than its predecessor).
+
+Each step checks that one lexicographic key comparison per lane.  Lanes
+that pass to the end are bit-identical to their own ``simulate_fast`` run
+— same floats, same placements, same busy sums (pinned by randomized
+tests under both policies).  A lane that fails is *masked out of the
+batch* and re-simulated serially through ``simulate_fast`` — the check can
+fire later than the first deviation, so the lane's lockstep state is
+discarded rather than resumed; correctness never depends on how late the
+divergence is caught.  Conditional-DMA divergence (a compute task landing
+on the SMP in some lanes only) stays inside the lockstep: the skip is a
+per-lane mask, not an order change.
+
+Everything here is schedule-free by construction (``SimResult.schedule``
+is empty); full :class:`~repro.core.simulator.ScheduledTask` records for
+top-k winners are replayed through ``simulate_fast(with_schedule=True)``
+by the exploration engine, exactly as before.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .devices import SystemConfig
+from .fastsim import FrozenGraph, pool_layout, simulate_fast
+from .simulator import SimResult
+
+# Below this many lanes per group the per-step numpy dispatch overhead
+# outweighs the vectorisation win and simulate_fast per lane is faster.
+MIN_LOCKSTEP = 6
+
+# Steps between heap-key validations / makespan folds: big enough to
+# amortise the stacked checks, small enough to bound a diverged lane's
+# wasted lockstep work.
+_WINDOW = 24
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Observability for one or more :func:`simulate_batch` calls.
+
+    ``lockstep_lanes`` counts candidates fully evaluated inside a lockstep
+    sweep; ``diverged_lanes`` fell back to ``simulate_fast`` after a heap
+    -order mismatch; ``small_group_lanes`` never entered lockstep (group
+    below ``min_lockstep``); ``reference_lanes`` drove a replayed order
+    (evaluated via the bit-identical full-record path).
+    """
+
+    groups: int = 0
+    lockstep_lanes: int = 0
+    diverged_lanes: int = 0
+    small_group_lanes: int = 0
+    reference_lanes: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
+                   policy: str = "availability", *,
+                   min_lockstep: int = MIN_LOCKSTEP,
+                   stats: Optional[BatchStats] = None) -> List[SimResult]:
+    """Schedule-free :class:`SimResult` per system, in input order.
+
+    Ranking-identical to ``[simulate_fast(fg, s, policy) for s in
+    systems]`` — same makespans, placements and busy sums float-for-float
+    — at a fraction of the per-candidate cost when candidates share the
+    graph.  Systems are grouped by *pool template* (pool names/kinds and
+    the kind→pool map — slot counts are free to vary inside a group); each
+    group runs one lockstep sweep, with per-lane serial fallback on
+    event-order divergence.
+    """
+    if policy not in ("availability", "eft"):
+        raise ValueError(f"unknown policy {policy!r}")
+    results: List[Optional[SimResult]] = [None] * len(systems)
+    groups: Dict[Tuple, List[int]] = {}
+    layouts: List[Tuple[List[str], List[int], List[int]]] = []
+    for i, system in enumerate(systems):
+        names, counts, kind_pool = pool_layout(fg.kinds, system)
+        layouts.append((names, counts, kind_pool))
+        groups.setdefault((tuple(names), tuple(kind_pool)), []).append(i)
+
+    for lanes in groups.values():
+        if stats is not None:
+            stats.groups += 1
+        if len(lanes) < min_lockstep:
+            for i in lanes:
+                results[i] = simulate_fast(fg, systems[i], policy)
+            if stats is not None:
+                stats.small_group_lanes += len(lanes)
+            continue
+        for i, sim in zip(lanes, _lockstep_group(
+                fg, [systems[i] for i in lanes],
+                [layouts[i] for i in lanes], policy, stats)):
+            results[i] = sim
+    return results  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# One lockstep group: shared pool template, varying slot counts
+# ---------------------------------------------------------------------------
+
+
+def _lockstep_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
+                    layouts: Sequence[Tuple[List[str], List[int], List[int]]],
+                    policy: str,
+                    stats: Optional[BatchStats]) -> List[SimResult]:
+    n = fg.n
+    # reference lane: most parallel hardware — its saturated order is the
+    # one large-slot-count lanes overwhelmingly share (ties -> last lane,
+    # matching "later candidates are usually bigger" sweep conventions)
+    totals = [sum(lay[1]) for lay in layouts]
+    ref = max(range(len(systems)), key=lambda i: (totals[i], i))
+    order: List[int] = []
+    results: List[Optional[SimResult]] = [None] * len(systems)
+    results[ref] = simulate_fast(fg, systems[ref], policy, order_out=order)
+    if stats is not None:
+        stats.reference_lanes += 1
+    lane_ids = [i for i in range(len(systems)) if i != ref]
+    done, diverged = _run_lockstep(fg, order,
+                                   [layouts[i] for i in lane_ids], policy)
+    for pos, sim in done.items():
+        i = lane_ids[pos]
+        results[i] = dataclasses.replace(sim, system=systems[i].name)
+    for pos in diverged:
+        i = lane_ids[pos]
+        results[i] = simulate_fast(fg, systems[i], policy)
+    if stats is not None:
+        stats.diverged_lanes += len(diverged)
+        stats.lockstep_lanes += len(done)
+    return results  # type: ignore[return-value]
+
+
+def _graph_aux(fg: FrozenGraph, ci, rank, asets):
+    """Graph-only lockstep constants, memoised on the FrozenGraph (repeat
+    sweeps — hillclimbs, re-ranks — hit the same frozen payload many
+    times): the strictly-(creation_index, rank)-monotone tie-break scalar
+    per row, and the dense conditional-activation mask for vectorised
+    membership tests.  Dropped on pickling like ``_rt``.
+    """
+    aux = getattr(fg, "_batch_aux", None)
+    if aux is None:
+        n = fg.n
+        tb = [ci[i] * n + rank[i] for i in range(n)]
+        act_mask = np.zeros((n, len(fg.kinds)), dtype=bool)
+        for i in range(n):
+            for k in asets[i]:
+                act_mask[i, k] = True
+        aux = fg._batch_aux = (tb, act_mask)
+    return aux
+
+
+def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
+                  layouts: Sequence[Tuple[List[str], List[int], List[int]]],
+                  policy: str) -> Tuple[Dict[int, SimResult], List[int]]:
+    """Drive every lane through ``order``; return ``(done, diverged)``.
+
+    ``done`` maps lane position -> schedule-free SimResult (``system`` is
+    filled by the caller); ``diverged`` lists lane positions whose heap
+    keys broke monotonicity somewhere — their state is abandoned.
+
+    Validation and makespan folding are *windowed*: popped ready times and
+    task end times are buffered per step and checked/folded every
+    ``_WINDOW`` steps in a couple of stacked array ops instead of two per
+    step.  Late detection is already part of the exactness contract (a
+    diverged lane's state is discarded, never resumed), so letting a bad
+    lane run to the end of its window costs only its own wasted work.
+    """
+    eft = policy == "eft"
+    kinds = fg.kinds
+    smp_kid = kinds.index("smp") if "smp" in kinds else -1
+    (uids, ci, cond, dev_first, dev_opts, asets, costs, succs,
+     _n_pred, is_comp, rankmaps, _heap0, comp_rows) = fg._runtime()
+    n = fg.n
+    tb, act_mask = _graph_aux(fg, ci, rankmaps[0], asets)
+    cost_np = fg.cost                      # float64[n, n_kinds], NaN = absent
+
+    pool_names, _, kind_pool = layouts[0]   # template-shared
+    kind_pool_np = np.asarray(kind_pool, dtype=np.int64)
+    P = len(pool_names)
+    lane_counts = [lay[1] for lay in layouts]
+    # per-pool real slot width (beyond it every lane is inf-padded) — lets
+    # the hot single-pool dispatches scan [L, cap] instead of [L, max_slots]
+    pool_cap = [max(c[p] for c in lane_counts) for p in range(P)]
+    S = max(pool_cap)
+
+    # lane axis LAST everywhere: the per-step accesses (one task row, one
+    # pool) then touch contiguous [L] vectors instead of strided columns
+    L = len(layouts)
+    clocks = np.full((P, S, L), np.inf)
+    for li, counts in enumerate(lane_counts):
+        for p, cnt in enumerate(counts):
+            clocks[p, :cnt, li] = 0.0
+    ready = np.zeros((n, L))
+    placement = np.full((n, L), -1, dtype=np.int64)
+    busy = np.zeros((P, L))
+    seen = np.zeros((P, L), dtype=bool)
+    makespan = np.zeros(L)
+    alive = np.arange(L)                   # original lane positions
+    aL = np.arange(L)
+    diverged: List[int] = []
+    # pools committed by a full-width dispatch: every surviving lane ran the
+    # commit, so the per-lane `seen` write is hoisted out of the hot loop
+    seen_pools: set = set()
+    # conditional rows of one unit share (parent, active set) — and the
+    # parent's placement is fixed once decided — so their skip mask is
+    # computed once and reused (invalidated on lane compression)
+    cond_mask_cache: Dict[Tuple[int, frozenset], Optional[np.ndarray]] = {}
+    # windowed validation / makespan buffers (see docstring)
+    win_rts: List[np.ndarray] = [np.full(L, -np.inf)]
+    win_tb: List[int] = [-1]
+    end_buf: List[np.ndarray] = []
+
+    def choose(row: int, rt: np.ndarray) -> np.ndarray:
+        """Vectorised `_choose_kind` over all current lanes: same option
+        order, same strict-< tie-breaks as the reference — one kind id per
+        lane.  Pure (no state writes), so computing it for lanes that end
+        up skipping the row is harmless."""
+        best_k = np.full(rt.shape, -1, dtype=np.int64)
+        bv = np.zeros(rt.shape)
+        bp = np.zeros(rt.shape, dtype=np.int64)
+        for k in dev_opts[row]:
+            pi = kind_pool[k]
+            if pi < 0:
+                continue
+            base = costs[row][k]
+            if base != base:                # NaN — cost_on would KeyError
+                raise KeyError(
+                    f"task {fg.names[row]}#{uids[row]} has no cost for "
+                    f"device kind {kinds[k]!r}")
+            t = clocks[pi, :pool_cap[pi]].min(axis=0)
+            start = np.maximum(rt, t)
+            keyv = start + base if eft else start
+            pref = 1 if k == smp_kid else 0
+            better = (best_k < 0) | (keyv < bv) | ((keyv == bv) & (pref < bp))
+            bv = np.where(better, keyv, bv)
+            bp = np.where(better, pref, bp)
+            best_k = np.where(better, k, best_k)
+        if (best_k < 0).any():
+            raise RuntimeError(
+                f"task {fg.names[row]}#{uids[row]}: no compatible pool among "
+                f"kinds {tuple(kinds[k] for k in dev_opts[row])}")
+        return best_k
+
+    def flush_window() -> bool:
+        """Validate the buffered window's heap-key monotonicity, fold the
+        buffered end times into makespans, compress out diverged lanes.
+        Returns False when every lane has diverged."""
+        nonlocal ready, placement, clocks, busy, seen, makespan, alive, \
+            aL, L, win_rts, win_tb, end_buf
+        rts = np.stack(win_rts)                       # [W+1, L]
+        viol = rts[1:] < rts[:-1]
+        # ties on ready time are only legal when the static tie-break
+        # ascends (distinct rows -> tb never repeats)
+        strict = np.fromiter(
+            (win_tb[i + 1] <= win_tb[i] for i in range(len(win_tb) - 1)),
+            dtype=bool, count=len(win_tb) - 1)
+        if strict.any():
+            viol |= (rts[1:] == rts[:-1]) & strict[:, None]
+        bad = viol.any(axis=0)
+        np.maximum(makespan, np.stack(end_buf).max(axis=0), out=makespan)
+        last_rt = win_rts[-1]
+        if bad.any():
+            diverged.extend(alive[bad].tolist())
+            keep = ~bad
+            ready = ready[:, keep]
+            placement = placement[:, keep]
+            clocks = clocks[:, :, keep]
+            busy = busy[:, keep]
+            seen = seen[:, keep]
+            makespan = makespan[keep]
+            alive = alive[keep]
+            last_rt = last_rt[keep]
+            L = alive.size
+            if L == 0:
+                return False
+            aL = np.arange(L)
+            cond_mask_cache.clear()
+        win_rts = [last_rt]
+        win_tb = [win_tb[-1]]
+        end_buf = []
+        return True
+
+    _MISS = object()
+    for r in order:
+        rt = ready[r]                       # contiguous view, never mutated
+        win_rts.append(rt)
+        win_tb.append(tb[r])
+
+        # ---- conditional pass-through (per-lane mask, not order change) --
+        c = cond[r]
+        live_mask: Optional[np.ndarray] = None       # None == all lanes run
+        if c >= 0:
+            ck = (c, asets[r])
+            cached = cond_mask_cache.get(ck, _MISS)
+            if cached is not _MISS:
+                live_mask = cached
+            else:
+                pk = placement[c]
+                und = pk < 0
+                if und.any():
+                    # first unit member to wake decides compute placement
+                    pk = np.where(und, choose(c, rt), pk)
+                    placement[c] = pk
+                live_mask = act_mask[r][pk]
+                if live_mask.all():
+                    live_mask = None
+                cond_mask_cache[ck] = live_mask
+
+        # ---- dispatch + commit for the lanes that execute the row --------
+        if live_mask is None or live_mask.any():
+            if is_comp[r]:
+                k = placement[r]            # view; replaced if undecided
+                und = k < 0
+                if und.any():
+                    k = np.where(und, choose(r, rt), k)
+                    if live_mask is None:
+                        placement[r] = k
+                    else:           # skipping lanes never place this row
+                        placement[r][live_mask] = k[live_mask]
+                p = kind_pool_np[k]
+                bad = (p < 0) if live_mask is None else ((p < 0) & live_mask)
+                if bad.any():
+                    raise KeyError(kinds[int(k[np.argmax(bad)])])
+                base = cost_np[r][k]
+                bad = np.isnan(base)
+                if live_mask is not None:
+                    bad &= live_mask
+                if bad.any():
+                    raise KeyError(
+                        f"task {fg.names[r]}#{uids[r]} has no cost for device "
+                        f"kind {kinds[int(k[np.argmax(bad)])]!r}")
+                scalar_pool = False
+            else:
+                k0 = dev_first[r]
+                p0 = kind_pool[k0]
+                if p0 < 0:
+                    raise KeyError(kinds[k0])
+                base = costs[r][k0]
+                if base != base:
+                    raise KeyError(
+                        f"task {fg.names[r]}#{uids[r]} has no cost for "
+                        f"device kind {kinds[k0]!r}")
+                scalar_pool = True
+            if live_mask is None:
+                if scalar_pool:
+                    seen_pools.add(p0)
+                    if pool_cap[p0] == 1:
+                        # submit/dma_out-style serialising resources: the
+                        # single slot IS the argmin
+                        cl = clocks[p0, 0]
+                        start = np.maximum(rt, cl)
+                        end = start + base
+                        clocks[p0, 0] = end
+                    else:
+                        cl = clocks[p0, :pool_cap[p0]]  # [cap, L] view
+                        s = cl.argmin(axis=0)
+                        tmin = cl[s, aL]
+                        start = np.maximum(rt, tmin)
+                        end = start + base
+                        cl[s, aL] = end
+                    busy[p0] += end - start
+                else:
+                    cl = clocks[p, :, aL]              # [L, S] gather
+                    s = cl.argmin(axis=1)
+                    tmin = cl[aL, s]
+                    start = np.maximum(rt, tmin)
+                    end = start + base
+                    clocks[p, s, aL] = end
+                    busy[p, aL] += end - start
+                    seen[p, aL] = True
+                end_eff = end
+            else:
+                live = aL[live_mask]
+                pl = np.full(live.size, p0, dtype=np.int64) if scalar_pool \
+                    else p[live]
+                cl = clocks[pl, :, live]               # [m, S] gather
+                s = cl.argmin(axis=1)
+                m = np.arange(live.size)
+                tmin = cl[m, s]
+                start = np.maximum(rt[live], tmin)
+                end = start + (base if scalar_pool else base[live])
+                clocks[pl, s, live] = end
+                busy[pl, live] += end - start
+                seen[pl, live] = True
+                end_eff = rt.copy()
+                end_eff[live] = end
+        else:
+            end_eff = rt                   # every lane skipped this row
+        end_buf.append(end_eff)
+        for j in succs[r]:
+            np.maximum(ready[j], end_eff, out=ready[j])
+        if len(end_buf) >= _WINDOW and not flush_window():
+            return {}, diverged
+    if end_buf and not flush_window():
+        return {}, diverged
+
+    # ---- assemble per-lane schedule-free results --------------------------
+    for p in seen_pools:
+        seen[p] = True
+    comp_arr = np.asarray(comp_rows, dtype=np.int64)
+    comp_uids = [uids[i] for i in comp_rows]
+    kinds_obj = np.asarray(kinds, dtype=object)
+    comp_place = placement[comp_arr]                   # [C, L]
+    done: Dict[int, SimResult] = {}
+    for li in range(L):
+        pos = int(alive[li])
+        counts = lane_counts[pos]
+        kp = comp_place[:, li]
+        placed = kp >= 0
+        if placed.all():
+            placements = dict(zip(comp_uids, kinds_obj[kp].tolist()))
+        else:
+            placements = {u: kinds[k] for u, k, m
+                          in zip(comp_uids, kp.tolist(), placed.tolist()) if m}
+        done[pos] = SimResult(
+            makespan=float(makespan[li]), schedule=[],
+            busy={pool_names[p]: float(busy[p, li]) for p in range(P)
+                  if seen[p, li]},
+            pool_slots={pool_names[p]: counts[p] for p in range(P)},
+            placements=placements, policy=policy, system="")
+    return done, diverged

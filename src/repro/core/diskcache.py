@@ -67,11 +67,14 @@ class DiskCache:
     def _path(self, key_text: str) -> str:
         return os.path.join(self.root, sha256_text(key_text) + ".pkl")
 
-    # ------------------------------------------------------------------
-    def get(self, key_text: str) -> Optional[Any]:
-        """Stored value, or ``None`` on miss / corruption / stale key."""
+    def _read_wrapper(self, path: str) -> Optional[dict]:
+        """Integrity-checked ``{"key": ..., "value": ...}`` wrapper from an
+        entry file, or ``None``: the single place that understands the
+        ``<64-hex digest>\\n<pickle>`` wire format and degrades truncation,
+        bit flips and undecodable payloads to a miss.  Callers add their
+        own staleness check (key text vs this entry's embedded key)."""
         try:
-            with open(self._path(key_text), "rb") as f:
+            with open(path, "rb") as f:
                 blob = f.read()
         except OSError:
             return None
@@ -81,12 +84,17 @@ class DiskCache:
             payload = blob[65:]
             if hashlib.sha256(payload).hexdigest().encode("ascii") != blob[:64]:
                 return None                       # truncated / corrupted
-            wrapper = pickle.loads(payload)
-            if wrapper.get("key") != key_text:
-                return None                       # stale entry / collision
-            return wrapper["value"]
+            return pickle.loads(payload)
         except Exception:                         # noqa: BLE001 — any decode
             return None                           # failure is just a miss
+
+    # ------------------------------------------------------------------
+    def get(self, key_text: str) -> Optional[Any]:
+        """Stored value, or ``None`` on miss / corruption / stale key."""
+        wrapper = self._read_wrapper(self._path(key_text))
+        if not isinstance(wrapper, dict) or wrapper.get("key") != key_text:
+            return None                           # stale entry / collision
+        return wrapper["value"]
 
     def put(self, key_text: str, value: Any) -> None:
         payload = pickle.dumps({"key": key_text, "value": value},
@@ -102,6 +110,27 @@ class DiskCache:
                 os.unlink(tmp)
             except OSError:
                 pass
+
+    def get_hashed(self, key_hash: str) -> Optional[Any]:
+        """Stored value by the sha256 *of* its key text, or ``None``.
+
+        Entries are filed under ``sha256(key_text).pkl``, so a reader that
+        only knows the fingerprint — e.g. a process-pool worker handed a
+        64-char graph hash instead of a re-pickled FrozenGraph — can still
+        fetch and verify the entry: same integrity path as :meth:`get`,
+        with the wrapper's embedded key text re-hashed and compared against
+        ``key_hash``, so a stale or colliding entry degrades to a miss
+        exactly like the full-text path.
+        """
+        wrapper = self._read_wrapper(
+            os.path.join(self.root, key_hash + ".pkl"))
+        try:
+            if not isinstance(wrapper, dict) or \
+                    sha256_text(wrapper.get("key", "")) != key_hash:
+                return None
+            return wrapper["value"]
+        except Exception:                         # noqa: BLE001 — key type
+            return None
 
     # ------------------------------------------------------------------
     def __contains__(self, key_text: str) -> bool:

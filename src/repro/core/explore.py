@@ -21,16 +21,21 @@ into a subsystem:
   fingerprint + eligibility/system signature, so *repeated sweeps across
   processes and runs* skip straight to re-ranking.
 * **Compiled evaluation** — by default candidates run through the
-  array-compiled engine (:mod:`repro.core.fastsim`): one picklable
-  :class:`FrozenGraph` per eligibility shared across all slot-count
-  variants, simulated schedule-free (makespan + busy only), with full
+  candidate-axis batch engine (:mod:`repro.core.batchsim`): all slot-count
+  variants of one picklable :class:`FrozenGraph` advance in a single
+  lockstep sweep (schedule-free, ranking-identical to per-candidate
+  :func:`~repro.core.fastsim.simulate_fast`), with full
   :class:`ScheduledTask` records materialised only for the top-k winners.
-* **Parallel evaluation** — ``processes=N`` fans candidate chunks out to a
-  ``ProcessPoolExecutor`` over the pickled FrozenGraph payloads (the GIL
-  never sees the hot loop); ``max_workers`` keeps the legacy thread pool
-  for evaluators that do native work.  Either way submission is chunked and
-  results are ordered by submission index, so any worker count produces
-  bit-identical tables.
+  ``batch=False`` keeps the per-candidate fast loop; ``fast=False`` the
+  reference object engine.
+* **Parallel evaluation** — ``processes=N`` fans graph×candidate-slice
+  chunks out to a ``ProcessPoolExecutor`` whose workers keep a persistent
+  content-hash→FrozenGraph registry (seeded once per worker from the first
+  payload-bearing chunk, or straight from the on-disk store), so repeat
+  chunks ship a 64-char hash instead of re-pickling the graph;
+  ``max_workers`` keeps the legacy thread pool for evaluators that do
+  native work.  Either way submission is chunked and results are ordered
+  by submission index, so any worker count produces bit-identical tables.
 * **Early pruning** — fabric-infeasible candidates are rejected before any
   graph is built (the paper's "2×128 mxm does not fit" check), and an
   optional lower-bound cut skips simulating candidates whose critical path
@@ -45,17 +50,21 @@ into a subsystem:
 """
 from __future__ import annotations
 
+import atexit
+import collections
 import dataclasses
 import itertools
 import json
 import random
 import threading
 import time
+import uuid
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import (Any, Callable, Dict, Iterator, List, Mapping,
                     Optional, Sequence, Tuple)
 
 from .augment import Eligibility, build_graph, lower_bound_cost
+from .batchsim import BatchStats, simulate_batch
 from .devices import SystemConfig
 from .diskcache import DiskCache, sha256_text, trace_fingerprint
 from .estimator import PerfEstimate
@@ -433,13 +442,97 @@ class ExplorationResult:
 # ---------------------------------------------------------------------------
 
 
-def _process_eval_chunk(fg: FrozenGraph,
-                        items: Sequence[Tuple[int, SystemConfig, str]]
-                        ) -> List[Tuple[int, SimResult]]:
-    """Worker-side unit: one pickled FrozenGraph amortised over a chunk of
-    (index, system, policy) variants.  Must stay module-level picklable."""
-    return [(i, simulate_fast(fg, system, policy))
-            for i, system, policy in items]
+# Worker-persistent FrozenGraph registry.  A ``ProcessPoolExecutor`` worker
+# initialised by ``_process_worker_init`` keeps every graph it has ever been
+# handed (bounded LRU), keyed by content hash — the same sha256 fingerprint
+# the PR-2 disk store files entries under — so a graph crosses the process
+# boundary at most once per worker per sweep, and with a ``cache_dir`` it
+# usually crosses zero times (workers self-serve via ``DiskCache.get_hashed``).
+_WORKER_GRAPHS: "collections.OrderedDict[str, FrozenGraph]" = \
+    collections.OrderedDict()
+_WORKER_GRAPH_CAP = 32
+_WORKER_DISK: Optional[DiskCache] = None
+
+
+def _process_worker_init(cache_dir: Optional[str]) -> None:
+    global _WORKER_DISK
+    _WORKER_DISK = DiskCache(cache_dir) if cache_dir else None
+    _WORKER_GRAPHS.clear()
+
+
+# One long-lived executor per (worker count, disk store): spawning worker
+# processes costs ~50-100ms — more than an entire 200-candidate batched
+# sweep — so repeat sweeps must reuse the pool (and with it every worker's
+# graph registry) instead of re-forking per `explore()` call.  Explorers
+# sharing the key share the pool.  A small LRU (capacity 2, so a pattern
+# alternating between e.g. a disk-backed and a plain sweep never thrashes)
+# bounds idle workers; only the least-recently-used pool beyond that is
+# retired.  Acquisition is locked — concurrent explores may share a pool,
+# though two explores racing on *more than two distinct keys* can still
+# retire a pool the other is using (bounded, documented trade-off).
+_EXECUTORS: "collections.OrderedDict[Tuple[int, Optional[str]], " \
+            "ProcessPoolExecutor]" = collections.OrderedDict()
+_EXECUTORS_CAP = 2
+_EXECUTORS_LOCK = threading.Lock()
+
+
+def _shared_executor(procs: int,
+                     cache_dir: Optional[str]) -> ProcessPoolExecutor:
+    key = (procs, cache_dir)
+    with _EXECUTORS_LOCK:
+        ex = _EXECUTORS.get(key)
+        if ex is not None and getattr(ex, "_broken", False):
+            ex.shutdown(wait=False)
+            del _EXECUTORS[key]
+            ex = None
+        if ex is None:
+            ex = ProcessPoolExecutor(max_workers=procs,
+                                     initializer=_process_worker_init,
+                                     initargs=(cache_dir,))
+            _EXECUTORS[key] = ex
+        else:
+            _EXECUTORS.move_to_end(key)
+        while len(_EXECUTORS) > _EXECUTORS_CAP:
+            _EXECUTORS.popitem(last=False)[1].shutdown(wait=False)
+    return ex
+
+
+@atexit.register
+def _shutdown_executors() -> None:
+    with _EXECUTORS_LOCK:
+        for ex in _EXECUTORS.values():
+            ex.shutdown(wait=True)
+        _EXECUTORS.clear()
+
+
+def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
+                        items: Sequence[Tuple[int, SystemConfig]],
+                        policy: str, batch: bool
+                        ) -> Optional[List[Tuple[int, SimResult]]]:
+    """Worker-side unit: one graph (by registry hash, with the pickled
+    payload riding along only on seeding chunks) × a slice of slot-count
+    variants, evaluated in one lockstep batch (``batch=True``) or one
+    ``simulate_fast`` loop.  Returns ``None`` when the graph is known
+    neither to the registry nor the disk store — the parent re-submits the
+    chunk with the payload attached.  Must stay module-level picklable."""
+    g = _WORKER_GRAPHS.get(ghash)
+    if g is None:
+        if fg is None and _WORKER_DISK is not None:
+            got = _WORKER_DISK.get_hashed(ghash)
+            if isinstance(got, FrozenGraph):
+                fg = got
+        if fg is None:
+            return None
+        _WORKER_GRAPHS[ghash] = g = fg
+        while len(_WORKER_GRAPHS) > _WORKER_GRAPH_CAP:
+            _WORKER_GRAPHS.popitem(last=False)
+    else:
+        _WORKER_GRAPHS.move_to_end(ghash)
+    if batch:
+        sims = simulate_batch(g, [system for _, system in items], policy)
+        return [(pos, sim) for (pos, _), sim in zip(items, sims)]
+    return [(pos, simulate_fast(g, system, policy))
+            for pos, system in items]
 
 
 class Explorer:
@@ -455,14 +548,19 @@ class Explorer:
                  smp_seconds_fn: Optional[Callable] = None,
                  budget: Mapping[str, float] = ZYNQ_7045_BUDGET,
                  max_workers: Optional[int] = None, cache: bool = True,
-                 fast: bool = True, processes: int = 0,
+                 fast: bool = True, batch: Optional[bool] = None,
+                 processes: int = 0,
                  cache_dir: Optional[str] = None):
         """``fast`` routes evaluation through the array-compiled engine
         (FrozenGraph + simulate_fast, bit-identical to the reference).
-        ``processes`` > 0 fans chunks out to that many worker processes
-        (fast mode only).  ``cache_dir`` persists frozen graphs and
-        schedule-free sims to disk, keyed by trace content hash +
-        eligibility/system signature (fast mode only)."""
+        ``batch`` (default: on whenever ``fast`` is) additionally evaluates
+        all candidates sharing a graph in one lockstep sweep
+        (:mod:`repro.core.batchsim`, ranking-identical); ``batch=False``
+        keeps the per-candidate fast loop.  ``processes`` > 0 fans chunks
+        out to that many worker processes (fast mode only).  ``cache_dir``
+        persists frozen graphs and schedule-free sims to disk, keyed by
+        trace content hash + eligibility/system signature (fast mode
+        only)."""
         self.trace = trace
         self.reports = reports
         self.policy = policy
@@ -472,8 +570,12 @@ class Explorer:
         self.max_workers = max_workers
         self.cache_enabled = cache
         self.fast = fast
+        self.batch = fast if batch is None else bool(batch)
         self.processes = int(processes or 0)
         if not fast:
+            if self.batch:
+                raise ValueError("batch=True requires the fast engine "
+                                 "(batchsim runs over FrozenGraph payloads)")
             if self.processes:
                 raise ValueError("processes>0 requires the fast engine "
                                  "(picklable FrozenGraph payloads)")
@@ -482,6 +584,10 @@ class Explorer:
                                  "(FrozenGraph is the on-disk payload)")
         self._disk = DiskCache(cache_dir) if cache_dir is not None else None
         self.stats = CacheStats()
+        self.batch_stats = BatchStats()     # parent-side batchsim telemetry
+        self._ghashes: Dict[Tuple, str] = {}
+        self._mem_ns = uuid.uuid4().hex[:12]
+        self._shipped: Dict[str, int] = {}
         # graph_key -> (payload, graph_stats, critical_path_s, lower_bound_s)
         # where payload is a FrozenGraph (fast) or a TaskGraph (reference)
         self._graphs: Dict[Tuple, Tuple[object, Dict[str, object],
@@ -555,9 +661,11 @@ class Explorer:
              pools, shared, self.policy])
 
     # ------------------------------------------------------------------
-    def _graph_for(self, cand: Candidate) -> Tuple[object, Dict[str, object],
-                                                   float, float, bool]:
-        key = _graph_key(cand.system, cand.eligibility)
+    def _graph_for(self, cand: Candidate,
+                   gkey: Optional[Tuple] = None
+                   ) -> Tuple[object, Dict[str, object], float, float, bool]:
+        key = gkey if gkey is not None \
+            else _graph_key(cand.system, cand.eligibility)
         with self._lock:
             hit = self.cache_enabled and key in self._graphs
             if hit:
@@ -648,13 +756,14 @@ class Explorer:
             cached_graph=ghit, cached_eval=ehit,
             bottleneck=sim.bottleneck())
 
-    def _sim_lookup(self, cand: Candidate) \
+    def _sim_lookup(self, cand: Candidate, gkey: Optional[Tuple] = None) \
             -> Tuple[Tuple, Optional[str], Optional[SimResult]]:
         """Consult the in-memory then on-disk sim caches (no compute).
 
         Returns ``(mem_key, disk_text, hit-or-None)`` and does all the
         hit/miss accounting for the lookup."""
-        gkey = _graph_key(cand.system, cand.eligibility)
+        if gkey is None:
+            gkey = _graph_key(cand.system, cand.eligibility)
         key = _sim_key(gkey, cand.system, self.policy)
         with self._lock:
             if self.cache_enabled and key in self._sims:
@@ -726,15 +835,21 @@ class Explorer:
                 return None
             return sorted(ok_makespans)[kk - 1]
 
-        ppool = ProcessPoolExecutor(max_workers=procs) \
+        ppool = _shared_executor(
+            procs, self._disk.root if self._disk is not None else None) \
             if procs > 0 and len(cands) > 1 else None
         pool = ThreadPoolExecutor(max_workers=n_workers) \
             if ppool is None and n_workers > 1 else None
+        self._shipped = {}          # payload-seeding ledger, per executor
+        # the lockstep batch engine wants the whole graph-sharing family in
+        # one chunk; pruning wants chunk boundaries to re-test the cut —
+        # serial+prune therefore stays on the per-candidate path
+        use_batch = self.batch and ppool is None and pool is None \
+            and not prune
         try:
-            # processes amortise pickling + round-trip latency over larger
-            # chunks; pruning decisions still land on the deterministic
-            # chunk boundaries
-            chunk = procs * 32 if ppool is not None else max(1, n_workers)
+            chunk = self._chunk_size(len(cands), prune,
+                                     procs if ppool is not None else 0,
+                                     use_batch, n_workers)
             for base in range(0, len(cands), chunk):
                 batch: List[Tuple[int, Candidate]] = []
                 for i in range(base, min(base + chunk, len(cands))):
@@ -756,8 +871,8 @@ class Explorer:
                                 analysis_seconds=time.perf_counter() - tc)
                             continue
                     batch.append((i, cand))
-                if ppool is not None:
-                    results = self._evaluate_batch_processes(ppool, batch)
+                if ppool is not None or use_batch:
+                    results = self._evaluate_batch_grouped(ppool, batch)
                 elif pool is not None:
                     results = list(pool.map(
                         lambda ic: self._evaluate_outcome(ic[1]), batch))
@@ -771,8 +886,8 @@ class Explorer:
         finally:
             if pool is not None:
                 pool.shutdown()
-            if ppool is not None:
-                ppool.shutdown()
+            # ppool is the shared, worker-persistent executor — it outlives
+            # this call so repeat sweeps reuse the workers' graph registries
 
         done = [o for o in outcomes if o is not None]
         assert len(done) == len(cands)
@@ -789,35 +904,92 @@ class Explorer:
         self._materialise_schedules(result, cands, estimates, kk)
         return result
 
-    def _evaluate_batch_processes(self, ppool: ProcessPoolExecutor,
-                                  batch: Sequence[Tuple[int, Candidate]]) \
-            -> List[Tuple[Optional[PerfEstimate], CandidateOutcome]]:
-        """One deterministic chunk through the worker processes.
+    def _chunk_size(self, n_cands: int, prune: bool, procs: int,
+                    use_batch: bool, n_workers: int) -> int:
+        """Adaptive chunking (replaces the fixed ``procs * 32``).
 
-        Graphs are built (or fetched) in the parent so every slot-count
-        variant of an eligibility ships a single FrozenGraph pickle; cache
-        hits never leave the parent; results are reassembled by batch
-        position, so the outcome is bit-identical to the serial path."""
+        Without pruning there is nothing to learn between chunks, so the
+        whole candidate set goes out as one deterministic chunk — the
+        batch engine sees every graph-sharing family intact, and process
+        workers get the per-graph slices re-balanced across the whole
+        sweep instead of per-64-candidate window.  With pruning, chunk
+        boundaries are where the lower-bound cut re-tests, so aim for a
+        few chunks per worker and keep them in a sane [24, 256] band.
+        """
+        if procs > 0:
+            if prune:
+                return max(24, min(256, -(-n_cands // (procs * 4))))
+            return max(1, n_cands)
+        if use_batch:
+            return max(1, n_cands)
+        return max(1, n_workers)
+
+    def _graph_hash(self, gkey: Tuple) -> str:
+        """Registry key for a graph: the on-disk sha256 fingerprint when a
+        store is configured (workers can then self-serve the payload via
+        ``DiskCache.get_hashed``), else a process-unique token — workers
+        outlive Explorer instances, so the token must never be reused by a
+        later Explorer (uuid, not ``id(self)``)."""
+        h = self._ghashes.get(gkey)
+        if h is None:
+            if self._disk is not None:
+                h = sha256_text(self._graph_disk_text(gkey))
+            else:
+                h = f"mem-{self._mem_ns}-{len(self._ghashes)}"
+            self._ghashes[gkey] = h
+        return h
+
+    def _evaluate_batch_grouped(self, ppool: Optional[ProcessPoolExecutor],
+                                batch: Sequence[Tuple[int, Candidate]]) \
+            -> List[Tuple[Optional[PerfEstimate], CandidateOutcome]]:
+        """One deterministic chunk, grouped by shared graph.
+
+        Graphs are built (or fetched) in the parent so cache accounting
+        stays per candidate and cache hits never reach a worker; the
+        remaining misses are evaluated per graph-sharing family — locally
+        through the lockstep batch engine (``ppool is None``), or sliced
+        across worker processes that resolve the graph from their
+        persistent registry (payload pickled at most once per worker, or
+        not at all when the disk store already holds it).  Results are
+        reassembled by batch position, so the outcome is bit-identical to
+        the per-candidate serial path."""
         results: List = [None] * len(batch)
         # graph_key -> [(pos, cand, mem_key, disk_text, ghit)]
         pending: Dict[Tuple, List[Tuple]] = {}
         graph_info: Dict[Tuple, Tuple] = {}
         for pos, (_, cand) in enumerate(batch):
             tc = time.perf_counter()
-            payload, stats, crit, lb, ghit = self._graph_for(cand)
-            key, text, hit = self._sim_lookup(cand)
+            gkey = _graph_key(cand.system, cand.eligibility)
+            payload, stats, crit, lb, ghit = self._graph_for(cand, gkey)
+            key, text, hit = self._sim_lookup(cand, gkey)
             if hit is not None:
                 results[pos] = self._outcome_from_sim(
                     cand, stats, crit, lb, ghit, True, hit,
                     time.perf_counter() - tc)
                 continue
-            gkey = _graph_key(cand.system, cand.eligibility)
             graph_info[gkey] = (payload, stats, crit, lb)
             pending.setdefault(gkey, []).append((pos, cand, key, text, ghit))
+
+        if ppool is None:                      # serial lockstep evaluation
+            for gkey, items in pending.items():
+                payload, stats, crit, lb = graph_info[gkey]
+                t0 = time.perf_counter()
+                sims = simulate_batch(payload,
+                                      [cand.system for _, cand, _, _, _
+                                       in items],
+                                      self.policy, stats=self.batch_stats)
+                share = (time.perf_counter() - t0) / max(len(items), 1)
+                for (pos, cand, key, text, ghit), sim in zip(items, sims):
+                    self._sim_store(key, text, sim)
+                    results[pos] = self._outcome_from_sim(
+                        cand, stats, crit, lb, ghit, False, sim, share)
+            return results
+
         futures = []
         n_groups = max(len(pending), 1)
         for gkey, items in pending.items():
             payload = graph_info[gkey][0]
+            ghash = self._graph_hash(gkey)
             # a single-eligibility sweep must still use every worker: split
             # each graph key's items across the pool (deterministic slices,
             # reassembled by position)
@@ -826,13 +998,29 @@ class Explorer:
             step = -(-len(items) // n_slices)
             for lo in range(0, len(items), step):
                 part = items[lo:lo + step]
-                work = [(pos, cand.system, self.policy)
-                        for pos, cand, _, _, _ in part]
-                futures.append((gkey, part, time.perf_counter(),
-                                ppool.submit(_process_eval_chunk,
-                                             payload, work)))
-        for gkey, items, t_submit, fut in futures:
-            sims = dict(fut.result())
+                work = [(pos, cand.system) for pos, cand, _, _, _ in part]
+                fg_arg = None
+                if self._disk is None and \
+                        self._shipped.get(ghash, 0) < self.processes:
+                    # no disk store to self-serve from: seed the first
+                    # `processes` slices with the payload so every worker
+                    # (whichever slices it draws) is likely covered
+                    fg_arg = payload
+                    self._shipped[ghash] = self._shipped.get(ghash, 0) + 1
+                futures.append((gkey, ghash, part, time.perf_counter(),
+                                ppool.submit(_process_eval_chunk, ghash,
+                                             fg_arg, work, self.policy,
+                                             self.batch)))
+        for gkey, ghash, items, t_submit, fut in futures:
+            got = fut.result()
+            if got is None:
+                # the worker drew a hash-only chunk before any seeding
+                # chunk reached it: one re-submission with the payload
+                payload = graph_info[gkey][0]
+                work = [(pos, cand.system) for pos, cand, _, _, _ in items]
+                got = ppool.submit(_process_eval_chunk, ghash, payload,
+                                   work, self.policy, self.batch).result()
+            sims = dict(got)
             share = (time.perf_counter() - t_submit) / max(len(items), 1)
             _, stats, crit, lb = graph_info[gkey]
             for pos, cand, key, text, ghit in items:
@@ -887,7 +1075,8 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
             budget: Mapping[str, float] = ZYNQ_7045_BUDGET, *,
             max_workers: Optional[int] = None, cache: bool = True,
             prune: bool = False, top_k: Optional[int] = None,
-            fast: bool = True, processes: int = 0,
+            fast: bool = True, batch: Optional[bool] = None,
+            processes: int = 0,
             cache_dir: Optional[str] = None) -> ExplorationResult:
     """Estimate every feasible candidate; rank; pick the best.
 
@@ -900,5 +1089,5 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
     ex = Explorer(trace, reports, policy=policy, smp_scale=smp_scale,
                   smp_seconds_fn=smp_seconds_fn, budget=budget,
                   max_workers=max_workers, cache=cache, fast=fast,
-                  processes=processes, cache_dir=cache_dir)
+                  batch=batch, processes=processes, cache_dir=cache_dir)
     return ex.explore(candidates, top_k=top_k, prune=prune)

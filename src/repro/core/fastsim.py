@@ -30,6 +30,14 @@ event-driven list-scheduling semantics over flat arrays
 :class:`ScheduledTask` records entirely — makespan, per-pool busy time and
 placements only — which is what exploration ranks on; full records are
 rebuilt just for the top-k winners.
+
+Division of labour with :mod:`repro.core.batchsim`: this module is the
+*one-candidate* fast path (and the bit-identity anchor every other engine
+is pinned against); ``batchsim`` stacks *all* candidates sharing one
+``FrozenGraph`` on a dedicated candidate axis and advances them in lockstep,
+falling back to :func:`simulate_fast` per lane whenever a candidate's
+event order diverges from the batch — so ``simulate_fast`` is also the
+batch engine's reference runner and its exact escape hatch.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .devices import SystemConfig
-from .simulator import ScheduledTask, SimResult
+from .simulator import ScheduledTask, SimResult, validate_pools
 from .taskgraph import TaskGraph
 
 
@@ -137,8 +145,7 @@ class FrozenGraph:
         from .augment import lower_bound_cost
 
         try:
-            crit = graph.critical_path()
-            lb = graph.critical_path(lower_bound_cost)
+            crit, lb = graph.critical_paths([None, lower_bound_cost])
         except ValueError:
             # cyclic graph: freeze anyway — the simulator reports the
             # deadlock at run time, exactly like the reference engine
@@ -159,6 +166,7 @@ class FrozenGraph:
     def __getstate__(self):
         state = dict(self.__dict__)
         state.pop("_rt", None)          # plain-list mirror is rebuilt on use
+        state.pop("_batch_aux", None)   # batchsim constants likewise
         return state
 
     def _runtime(self):
@@ -227,9 +235,37 @@ def freeze_graph(graph: TaskGraph) -> FrozenGraph:
 # ---------------------------------------------------------------------------
 
 
+def pool_layout(kinds: Sequence[str], system: SystemConfig
+                ) -> Tuple[List[str], List[int], List[int]]:
+    """``(pool_names, pool_counts, kind_pool)`` in ``Simulator.__init__``
+    order: device pools first, shared resources after, first pool claiming
+    a kind wins.  ``kind_pool[kid]`` is the pool index serving that kind id
+    of ``kinds``, or ``-1`` when the system has no such pool.  Shared by
+    ``simulate_fast`` and the batch engine so the two can never disagree on
+    the dispatch target; runs the degenerate-candidate guard
+    (:func:`repro.core.simulator.validate_pools`) up front.
+    """
+    validate_pools(system)
+    kid_of = {k: i for i, k in enumerate(kinds)}
+    pools_spec = [(p.name, p.kinds, p.count) for p in system.pools] + \
+                 [(r.name, (r.name,), r.count) for r in system.shared]
+    pool_names: List[str] = []
+    pool_counts: List[int] = []
+    kind_pool = [-1] * len(kinds)
+    for pi, (pname, pkinds, cnt) in enumerate(pools_spec):
+        pool_names.append(pname)
+        pool_counts.append(cnt)
+        for k in pkinds:
+            j = kid_of.get(k)
+            if j is not None and kind_pool[j] < 0:
+                kind_pool[j] = pi
+    return pool_names, pool_counts, kind_pool
+
+
 def simulate_fast(fg: FrozenGraph, system: SystemConfig,
                   policy: str = "availability", *,
-                  with_schedule: bool = False) -> SimResult:
+                  with_schedule: bool = False,
+                  order_out: Optional[List[int]] = None) -> SimResult:
     """Run the reference list-scheduling semantics over a FrozenGraph.
 
     Bit-identical to ``Simulator(graph, system, policy).run()`` (no
@@ -237,29 +273,19 @@ def simulate_fast(fg: FrozenGraph, system: SystemConfig,
     reference runs keep the object engine).  ``with_schedule=False`` skips
     :class:`ScheduledTask` materialisation: ``SimResult.schedule`` is empty
     and placement counts are derived from ``placements``.
+
+    ``order_out`` — optional list the dispatch order (graph row indices,
+    heap pop order) is appended to; the batch engine records its reference
+    order this way without paying for full schedule records.
     """
     if policy not in ("availability", "eft"):
         raise ValueError(f"unknown policy {policy!r}")
     eft = policy == "eft"
     kinds = fg.kinds
-    kid_of = {k: i for i, k in enumerate(kinds)}
-    smp_kid = kid_of.get("smp", -1)
+    smp_kid = kinds.index("smp") if "smp" in kinds else -1
 
-    # pools in Simulator.__init__ order; first pool claiming a kind wins
-    pools_spec = [(p.name, p.kinds, p.count) for p in system.pools] + \
-                 [(r.name, (r.name,), r.count) for r in system.shared]
-    pool_names: List[str] = []
-    pool_counts: List[int] = []
-    clocks: List[List[float]] = []
-    kind_pool = [-1] * len(kinds)
-    for pi, (pname, pkinds, cnt) in enumerate(pools_spec):
-        pool_names.append(pname)
-        pool_counts.append(cnt)
-        clocks.append([0.0] * cnt)
-        for k in pkinds:
-            j = kid_of.get(k)
-            if j is not None and kind_pool[j] < 0:
-                kind_pool[j] = pi
+    pool_names, pool_counts, kind_pool = pool_layout(kinds, system)
+    clocks: List[List[float]] = [[0.0] * cnt for cnt in pool_counts]
 
     (uids, ci, cond, dev_first, dev_opts, asets, costs, succs,
      n_pred0, is_comp, rankmaps, heap0, comp_rows) = fg._runtime()
@@ -318,6 +344,8 @@ def simulate_fast(fg: FrozenGraph, system: SystemConfig,
     while heap:
         rt, _, r = pop(heap)
         i = row_by_rank[r]
+        if order_out is not None:
+            order_out.append(i)
         skipped = False
         c = cond[i]
         if c >= 0:
@@ -390,13 +418,17 @@ def simulate_fast(fg: FrozenGraph, system: SystemConfig,
         placements=placements, policy=policy, system=system.name)
 
 
-def simulate_batch(fg: FrozenGraph,
-                   items: Sequence[Tuple[SystemConfig, str]], *,
-                   with_schedule: bool = False) -> List[SimResult]:
-    """Evaluate many (system, policy) variants of one frozen graph.
+def simulate_each(fg: FrozenGraph,
+                  items: Sequence[Tuple[SystemConfig, str]], *,
+                  with_schedule: bool = False) -> List[SimResult]:
+    """Evaluate many (system, policy) variants of one frozen graph, one
+    independent event loop per variant.
 
-    This is the worker-side unit of the process-parallel explorer: one
-    pickled FrozenGraph amortised over a whole chunk of slot-count variants.
+    Kept as the per-candidate baseline; the production sweep path is
+    :func:`repro.core.batchsim.simulate_batch`, which runs all variants of
+    one graph in a single lockstep sweep and is what the explorer and the
+    process-pool workers dispatch (this loop is what ``batchsim`` must beat,
+    and what it degrades to lane-by-lane on event-order divergence).
     """
     return [simulate_fast(fg, system, policy, with_schedule=with_schedule)
             for system, policy in items]

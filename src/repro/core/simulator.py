@@ -27,6 +27,16 @@ base cost — the *reference executor* uses it to inject the fine-grain
 effects the coarse estimator deliberately ignores (memory/bus contention,
 cache state, measurement noise), exactly the fidelity gap the paper reports
 between its estimates and the real board.
+
+Three engines share these semantics and are pinned bit-identical by tests:
+this object engine (one estimate, full records, ``time_model`` hooks),
+:mod:`repro.core.fastsim` (flat arrays, one candidate per call — the sweep
+workhorse), and :mod:`repro.core.batchsim` (all candidates of one frozen
+graph in a lockstep batch — the sweep *throughput* engine).  Shared
+plumbing lives here: :func:`validate_pools` (the degenerate-candidate
+guard every engine runs before touching pool state) and
+:meth:`SimResult.without_schedule` (the schedule-free projection batch
+ranking stores, with full records replayed only for top-k winners).
 """
 from __future__ import annotations
 
@@ -40,6 +50,24 @@ from .taskgraph import Task, TaskGraph
 
 TimeModel = Callable[[Task, str, float, float], float]
 # (task, device kind, base cost, start time) -> actual cost
+
+
+def validate_pools(system: "SystemConfig") -> None:
+    """Reject degenerate pool layouts before any engine touches them.
+
+    A 0-slot pool used to surface deep inside the event loop as an opaque
+    ``IndexError``/``ValueError`` (empty slot-clock argmin); every engine
+    (object, fast, batch) calls this up front instead so a malformed
+    candidate fails with the pool and system named.
+    """
+    for pool in list(system.pools) + list(system.shared):
+        count = int(pool.count)
+        if count < 1:
+            raise ValueError(
+                f"pool {pool.name!r} of system {system.name!r} has "
+                f"count={count}; every device pool / shared resource needs "
+                f"at least one slot (drop the pool from the candidate "
+                f"instead of zeroing it)")
 
 
 @dataclasses.dataclass
@@ -73,6 +101,18 @@ class SimResult:
     def bottleneck(self) -> str:
         util = self.utilization()
         return max(util, key=lambda p: util[p]) if util else ""
+
+    def without_schedule(self) -> "SimResult":
+        """Schedule-free projection of this result (records dropped).
+
+        The exploration engines rank on exactly this shape; full
+        :class:`ScheduledTask` records are replayed (``simulate_fast``,
+        ``with_schedule=True``) only for top-k winners.  Everything a
+        ranking consumes — makespan, busy sums, placements, utilization —
+        is preserved, so ``without_schedule()`` of a full run compares
+        equal to a schedule-free run of the same candidate.
+        """
+        return dataclasses.replace(self, schedule=[])
 
     def per_kind_task_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = defaultdict(int)
@@ -131,6 +171,7 @@ class Simulator:
                  time_model: Optional[TimeModel] = None):
         if policy not in ("availability", "eft"):
             raise ValueError(f"unknown policy {policy!r}")
+        validate_pools(system)
         self.graph = graph
         self.system = system
         self.policy = policy

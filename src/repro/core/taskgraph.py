@@ -149,13 +149,26 @@ class TaskGraph:
         This is a *lower bound* on any schedule's makespan when ``cost_fn``
         returns the per-task minimum cost across eligible devices.
         """
-        if cost_fn is None:
-            cost_fn = lambda t: min(t.costs.values()) if t.costs else 0.0
-        dist: Dict[int, float] = {}
-        for uid in self.topological_order():
-            base = max((dist[p] for p in self.pred.get(uid, ())), default=0.0)
-            dist[uid] = base + cost_fn(self.tasks[uid])
-        return max(dist.values(), default=0.0)
+        return self.critical_paths([cost_fn])[0]
+
+    def critical_paths(self, cost_fns: Sequence[
+            Optional[Callable[[Task], float]]]) -> List[float]:
+        """Longest-path length per cost function over a *single* topological
+        pass — ``FrozenGraph.freeze`` needs both the critical path and the
+        pruning lower bound, and the sort dominates the evaluation.  A
+        ``None`` entry means the default min-over-kinds cost."""
+        order = self.topological_order()
+        out: List[float] = []
+        for cost_fn in cost_fns:
+            if cost_fn is None:
+                cost_fn = lambda t: min(t.costs.values()) if t.costs else 0.0
+            dist: Dict[int, float] = {}
+            for uid in order:
+                base = max((dist[p] for p in self.pred.get(uid, ())),
+                           default=0.0)
+                dist[uid] = base + cost_fn(self.tasks[uid])
+            out.append(max(dist.values(), default=0.0))
+        return out
 
     def total_work(self, cost_fn: Optional[Callable[[Task], float]] = None) -> float:
         if cost_fn is None:

@@ -1,0 +1,297 @@
+"""Candidate-axis batch engine: ranking-identical to ``simulate_fast``.
+
+The exploration engine ranks on ``batchsim.simulate_batch`` results, so its
+contract is exact equality with the per-candidate fast engine (itself pinned
+bit-identical to ``Simulator.run()``): makespans, placements, busy sums and
+pool layouts must be ``==`` across randomized graphs, both scheduling
+policies, conditional-DMA graphs (±smp eligibility) and heterogeneous slot
+counts — including lanes that diverge from the reference event order and
+fall back to the serial path.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import Candidate, Eligibility, Explorer, zynq_system
+from repro.core.augment import build_graph
+from repro.core.batchsim import BatchStats, simulate_batch
+from repro.core.devices import DevicePool, SharedResource, SystemConfig
+from repro.core.explore import _process_eval_chunk
+from repro.core.fastsim import FrozenGraph, simulate_fast
+from repro.core.hlsreport import KernelReport
+from repro.core.simulator import Simulator, validate_pools
+from repro.core.taskgraph import Task, TaskGraph
+from repro.core.trace import Trace, TraceEvent
+
+
+def synth_reports(kernel: str = "k", kind: str = "fpga:k"):
+    rep = KernelReport(kernel=kernel, device_kind=kind, compute_s=1e-4,
+                       dma_in_s=1e-5, dma_out_s=2e-5,
+                       resources={"dsp": 100.0, "bram_kb": 10.0, "lut": 1000.0})
+    return {(kernel, kind): rep}, rep
+
+
+def synth_trace(n, n_regions=4):
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=1e-3 * (1 + (i % 3)),
+                         accesses=[((i % n_regions,), "inout", 1024)],
+                         devices=("fpga", "smp"))
+              for i in range(n)]
+    return Trace(events=events, wall_seconds=1.0)
+
+
+def frozen_for(tr, smp: bool):
+    reports, _ = synth_reports()
+    kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
+    graph = build_graph(tr, zynq_system("g", {"fpga:k": 1}), reports,
+                        Eligibility({"k": kinds}), smp_cost="mean")
+    return FrozenGraph.freeze(graph), graph
+
+
+def assert_batch_equals_fast(fg, systems, policy, **kw):
+    batch = simulate_batch(fg, systems, policy, **kw)
+    for sim, system in zip(batch, systems):
+        ref = simulate_fast(fg, system, policy)
+        assert sim.schedule == []
+        assert sim.makespan == ref.makespan
+        assert sim.placements == ref.placements
+        assert sim.busy == ref.busy
+        assert sim.pool_slots == ref.pool_slots
+        assert sim.system == system.name and sim.policy == policy
+        assert sim.per_kind_task_counts() == ref.per_kind_task_counts()
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# randomized equivalence: policies × conditional DMA × heterogeneous slots
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_trace(draw):
+    n = draw(st.integers(4, 24))
+    n_regions = draw(st.integers(1, 5))
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=draw(st.floats(1e-4, 5e-3)),
+                         accesses=[((i % n_regions,), "inout", 512)],
+                         devices=("fpga", "smp"))
+              for i in range(n)]
+    return Trace(events=events, wall_seconds=1.0)
+
+
+@hypothesis.given(random_trace(), st.booleans(),
+                  st.sampled_from(["availability", "eft"]),
+                  st.lists(st.integers(1, 12), min_size=2, max_size=10))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_batch_identical_on_augmented_graphs(tr, smp, policy, slot_counts):
+    """±smp exercises the conditional zero-cost masking both ways; the
+    random slot lists mix saturated and contended lanes, so both the
+    lockstep path and the divergence fallback are hit."""
+    fg, _ = frozen_for(tr, smp)
+    systems = [zynq_system(f"{n}acc{i}", {"fpga:k": n})
+               for i, n in enumerate(slot_counts)]
+    assert_batch_equals_fast(fg, systems, policy, min_lockstep=2)
+
+
+@hypothesis.given(st.integers(2, 25), st.integers(1, 4), st.integers(1, 4),
+                  st.sampled_from(["availability", "eft"]))
+@hypothesis.settings(deadline=None, max_examples=25)
+def test_batch_identical_on_bare_dags_with_two_pools(n, ca, cb, policy):
+    """Hand DAGs with two device kinds and per-candidate counts varying on
+    *both* pools (heterogeneous slot counts beyond the single-accelerator
+    shape)."""
+    g = TaskGraph()
+    uids = []
+    for i in range(n):
+        kinds = ("a", "b") if i % 3 else ("b", "a")
+        t = Task(uid=g.new_uid(), name=f"t{i}", devices=kinds,
+                 costs={"a": 0.5 + (i % 5) * 0.25, "b": 1.0 + (i % 3) * 0.5},
+                 creation_index=i, meta={"role": "compute"})
+        g.add_task(t, infer_deps=False)
+        uids.append(t.uid)
+        if i >= 1 and i % 2:
+            g.add_edge(uids[i - 1], t.uid)
+    fg = FrozenGraph.freeze(g)
+    systems = [SystemConfig(name=f"s{i}-{j}",
+                            pools=[DevicePool("pa", ("a",), i),
+                                   DevicePool("pb", ("b",), j)],
+                            shared=[SharedResource("x", 1)])
+               for i in range(1, ca + 1) for j in range(1, cb + 1)]
+    assert_batch_equals_fast(fg, systems, policy, min_lockstep=2)
+
+
+def test_batch_divergent_lanes_fall_back_exactly():
+    """A wide slot-count ramp under the availability policy produces lanes
+    whose event order differs from the saturated reference — they must be
+    detected and re-simulated, and the whole batch must stay exact."""
+    fg, _ = frozen_for(synth_trace(40), smp=True)
+    systems = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in range(1, 33)]
+    stats = BatchStats()
+    assert_batch_equals_fast(fg, systems, "availability",
+                             min_lockstep=2, stats=stats)
+    assert stats.groups == 1 and stats.reference_lanes == 1
+    assert stats.diverged_lanes > 0, "ramp should force serial fallbacks"
+    assert stats.lockstep_lanes > 0, "saturated lanes should stay in lockstep"
+    assert (stats.lockstep_lanes + stats.diverged_lanes
+            + stats.reference_lanes) == len(systems)
+
+
+def test_batch_small_groups_and_mixed_templates():
+    """Pool-template grouping: systems with structurally different pools
+    (an extra pool changes the pool list, not just a slot count) never
+    share a lockstep; groups below min_lockstep take the serial path."""
+    fg, _ = frozen_for(synth_trace(12), smp=True)
+    plain = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in (1, 2)]
+    extra = []
+    for n in (1, 3):
+        sys_n = zynq_system(f"{n}acc+gpu", {"fpga:k": n})
+        sys_n.pools.append(DevicePool("gpu", ("gpu",), 1))
+        extra.append(sys_n)
+    systems = plain + extra
+    stats = BatchStats()
+    assert_batch_equals_fast(fg, systems, "availability", stats=stats)
+    assert stats.groups == 2
+    assert stats.small_group_lanes == len(systems)
+    assert simulate_batch(fg, [], "availability") == []
+
+
+def test_batch_rejects_unknown_policy():
+    fg, _ = frozen_for(synth_trace(4), smp=False)
+    with pytest.raises(ValueError, match="policy"):
+        simulate_batch(fg, [zynq_system("s", {"fpga:k": 1})], "heft")
+
+
+def test_order_out_records_pop_order():
+    fg, graph = frozen_for(synth_trace(10), smp=True)
+    system = zynq_system("s", {"fpga:k": 2})
+    order = []
+    lite = simulate_fast(fg, system, order_out=order)
+    full = simulate_fast(fg, system, with_schedule=True)
+    assert sorted(order) == list(range(fg.n))
+    row_of = {int(u): i for i, u in enumerate(fg.uid)}
+    assert order == [row_of[s.uid] for s in full.schedule]
+    assert lite.makespan == full.makespan
+
+
+# ---------------------------------------------------------------------------
+# degenerate candidates: the max_slots / 0-slot guard
+# ---------------------------------------------------------------------------
+
+
+def test_zero_slot_pool_rejected_with_clear_error_by_every_engine():
+    g = TaskGraph()
+    g.add_task(Task(uid=g.new_uid(), name="t", costs={"smp": 1.0},
+                    creation_index=0), infer_deps=False)
+    bad = SystemConfig(name="degenerate",
+                       pools=[DevicePool("smp", ("smp",), 0)])
+    fg = FrozenGraph.freeze(g)
+    for attempt in (lambda: validate_pools(bad),
+                    lambda: Simulator(g, bad),
+                    lambda: simulate_fast(fg, bad),
+                    lambda: simulate_batch(fg, [bad])):
+        with pytest.raises(ValueError, match="count=0") as ei:
+            attempt()
+        assert "smp" in str(ei.value) and "degenerate" in str(ei.value)
+    shared_bad = SystemConfig(name="s", pools=[DevicePool("smp", ("smp",), 1)],
+                              shared=[SharedResource("dma_out", -1)])
+    with pytest.raises(ValueError, match="dma_out"):
+        simulate_fast(fg, shared_bad)
+
+
+# ---------------------------------------------------------------------------
+# explorer integration: batch path, top-k replay, process workers
+# ---------------------------------------------------------------------------
+
+
+def _candidates(rep, accs):
+    out = []
+    for n_acc in accs:
+        for smp in (False, True):
+            name = f"{n_acc}acc" + ("+smp" if smp else "")
+            kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
+            out.append(Candidate(
+                name=name, system=zynq_system(name, {"fpga:k": n_acc}),
+                eligibility=Eligibility({"k": kinds}), fabric=[(rep, n_acc)]))
+    return out
+
+
+def test_explorer_batch_matches_fast_and_reference():
+    reports, rep = synth_reports()
+    tr = synth_trace(40)
+    cands = _candidates(rep, accs=range(1, 11))
+    ex = Explorer(tr, reports)
+    batch = ex.explore(cands, top_k=2)
+    fast = Explorer(tr, reports, batch=False).explore(cands, top_k=2)
+    legacy = Explorer(tr, reports, fast=False).explore(cands, top_k=2)
+    rows = lambda r: [(o.name, o.makespan_s, o.rank) for o in r.ranked]
+    assert rows(batch) == rows(fast) == rows(legacy)
+    # top-k replay bit-identity: batch ranks schedule-free, then replays the
+    # winners through the full-record path — records must equal the
+    # reference object engine's
+    winners = [o.name for o in batch.ranked[:2]]
+    for name in winners:
+        ref_sched = legacy.estimates[name].sim.schedule
+        got_sched = batch.estimates[name].sim.schedule
+        assert [(s.uid, s.pool, s.slot, s.kind, s.start, s.end, s.role)
+                for s in ref_sched] == \
+               [(s.uid, s.pool, s.slot, s.kind, s.start, s.end, s.role)
+                for s in got_sched]
+    # non-winners stay schedule-free in batch mode
+    for name, est in batch.estimates.items():
+        assert bool(est.sim.schedule) == (name in winners)
+    assert ex.batch_stats.groups >= 2   # one lockstep group per eligibility
+
+
+def test_explorer_batch_process_pool_identical():
+    reports, rep = synth_reports()
+    tr = synth_trace(36)
+    cands = _candidates(rep, accs=range(1, 9))
+    serial = Explorer(tr, reports).explore(cands)
+    procs = Explorer(tr, reports, processes=2).explore(cands)
+    procs_fast = Explorer(tr, reports, processes=2, batch=False).explore(cands)
+    rows = lambda r: [(o.name, o.makespan_s) for o in r.ranked]
+    assert rows(serial) == rows(procs) == rows(procs_fast)
+    assert procs.n_workers == 2
+
+
+def test_explorer_batch_guardrail():
+    reports, rep = synth_reports()
+    tr = synth_trace(4)
+    with pytest.raises(ValueError, match="batch"):
+        Explorer(tr, reports, fast=False, batch=True)
+    # prune stays on the per-candidate path but must agree with batch
+    cands = _candidates(rep, accs=(1, 2, 3))
+    full = Explorer(tr, reports).explore(cands)
+    pruned = Explorer(tr, reports).explore(cands, prune=True, top_k=1)
+    assert pruned.best_name == full.best_name
+
+
+def test_worker_registry_protocol():
+    """Workers signal an unknown graph instead of failing, absorb the
+    payload once, then serve hash-only chunks from the registry."""
+    fg, _ = frozen_for(synth_trace(8), smp=False)
+    system = zynq_system("s", {"fpga:k": 2})
+    items = [(0, system)]
+    assert _process_eval_chunk("h-unknown", None, items,
+                               "availability", True) is None
+    seeded = _process_eval_chunk("h-seed", fg, items, "availability", True)
+    cached = _process_eval_chunk("h-seed", None, items, "availability", False)
+    ref = simulate_fast(fg, system, "availability")
+    for got in (seeded, cached):
+        assert len(got) == 1 and got[0][0] == 0
+        assert got[0][1].makespan == ref.makespan
+
+
+def test_adaptive_chunk_size():
+    reports, _ = synth_reports()
+    ex = Explorer(synth_trace(4), reports)
+    # serial batch mode: whole sweep in one deterministic chunk
+    assert ex._chunk_size(200, False, 0, True, 1) == 200
+    # serial per-candidate path unchanged
+    assert ex._chunk_size(200, False, 0, False, 1) == 1
+    # processes without pruning: one chunk, slices balance the workers
+    assert ex._chunk_size(200, False, 2, False, 2) == 200
+    # pruning keeps a few chunks per worker inside the [24, 256] band
+    assert 24 <= ex._chunk_size(200, True, 2, False, 2) <= 256
+    assert ex._chunk_size(10_000, True, 4, False, 4) == 256
+    assert ex._chunk_size(30, True, 8, False, 8) == 24

@@ -94,6 +94,28 @@ def test_diskcache_detects_stale_key(tmp_path):
     assert dc.get("key-b") is None        # its file moved away
 
 
+def test_diskcache_get_hashed(tmp_path):
+    """Process-pool workers fetch graphs knowing only the 64-char key
+    fingerprint: same integrity guarantees as the full-text path."""
+    dc = DiskCache(tmp_path)
+    dc.put("graph-key", {"payload": 1})
+    h = sha256_text("graph-key")
+    assert dc.get_hashed(h) == {"payload": 1}
+    assert dc.get_hashed(sha256_text("other-key")) is None      # plain miss
+    # a re-homed entry (stale content at this address) reads as a miss:
+    # the wrapper's embedded key no longer hashes to the filename
+    dc.put("other-key", "other-value")
+    os.replace(os.path.join(str(tmp_path), sha256_text("other-key") + ".pkl"),
+               os.path.join(str(tmp_path), h + ".pkl"))
+    assert dc.get_hashed(h) is None
+    # corruption degrades to a miss too
+    dc.put("graph-key", {"payload": 2})
+    path = os.path.join(str(tmp_path), h + ".pkl")
+    blob = open(path, "rb").read()
+    open(path, "wb").write(blob[:70] + bytes([blob[70] ^ 0xFF]) + blob[71:])
+    assert dc.get_hashed(h) is None
+
+
 def test_trace_fingerprint_tracks_content(fixture_world):
     trace, reports, rep = fixture_world
     assert trace_fingerprint(trace) == trace_fingerprint(synth_trace(40))

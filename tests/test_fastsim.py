@@ -14,7 +14,7 @@ import pytest
 from repro.core import Candidate, Eligibility, Explorer, zynq_system
 from repro.core.augment import build_graph
 from repro.core.devices import DevicePool, SharedResource, SystemConfig
-from repro.core.fastsim import FrozenGraph, simulate_batch, simulate_fast
+from repro.core.fastsim import FrozenGraph, simulate_each, simulate_fast
 from repro.core.hlsreport import KernelReport
 from repro.core.simulator import Simulator
 from repro.core.taskgraph import Task, TaskGraph
@@ -201,7 +201,7 @@ def test_frozen_graph_pickle_roundtrip_and_slot_sharing():
     # one frozen payload serves every slot-count variant
     items = [(zynq_system(f"{n}acc", {"fpga:k": n}), "availability")
              for n in (1, 2, 4)]
-    fast = simulate_batch(fg2, items)
+    fast = simulate_each(fg2, items)
     for (system, policy), lite in zip(items, fast):
         ref = Simulator(graph, system, policy).run()
         assert ref.makespan == lite.makespan
