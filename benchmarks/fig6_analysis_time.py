@@ -97,10 +97,10 @@ PR2_FAST_SERIAL_S = 0.38248
 
 def _sweep_rows(trace, reports, a9, count: int,
                 smoke: bool) -> List[Tuple[str, float, str]]:
-    """Tentpole measurement: the candidate-axis batch engine vs the
+    """Tentpole measurement: the candidate-axis engines vs the
     per-candidate fast path vs the PR-1 cached path on one big batch.
 
-    Six engines over the same candidates, each fresh-Explorer (so the
+    Eight engines over the same candidates, each fresh-Explorer (so the
     in-memory caches start cold), best-of-``reps`` to tame this box's
     scheduler jitter:
 
@@ -108,7 +108,7 @@ def _sweep_rows(trace, reports, a9, count: int,
       schedules (also the machine-speed yardstick, see ``PR2_PR1_S``).
     * ``fast_serial`` — PR-2 path: array-compiled, schedule-free, one
       event loop per candidate.
-    * ``batch``       — candidate-axis lockstep engine (PR 3): all
+    * ``batch``       — candidate-axis numpy lockstep engine (PR 3): all
       slot-count variants of a frozen graph in one sweep.
     * ``fast_procs``  — per-candidate engine over the worker-persistent
       2-process pool (the PR-2 regression fix, measured without the batch
@@ -116,10 +116,20 @@ def _sweep_rows(trace, reports, a9, count: int,
     * ``batch_procs`` — batch engine sliced across the same pool.
     * ``disk``        — repeat-sweep: warm on-disk store (the iterative
       co-design workflow; re-ranks without building a single graph).
+    * ``jax``         — jit-compiled ``lax.scan`` candidate-axis engine
+      (PR 4, ``repro.core.jaxsim``), full-width lane chunks, warm jit
+      cache (the one-off compile is recorded separately as
+      ``jax_compile_seconds``).
+    * ``jaxc``        — same engine with 16-lane vmap-style chunking (the
+      compile-cache-friendly bucket shape for very large sweeps).
 
     ``sweep_speedup`` stays pr1-over-best; the batch target is asserted
-    against the PR-2 trajectory at equal machine speed.
+    against the PR-2 trajectory at equal machine speed; the jax rows must
+    rank identically to the batch engine under the documented rtol
+    tie-break (``repro.core.replay.rankings_equivalent``).
     """
+    from repro.core.replay import JAX_RTOL, rankings_equivalent
+
     rows: List[Tuple[str, float, str]] = []
     cands = _sweep_candidates(trace.meta.get("bs", 64), count)
     mk = lambda **kw: Explorer(trace, reports, smp_seconds_fn=a9, **kw)
@@ -128,6 +138,12 @@ def _sweep_rows(trace, reports, a9, count: int,
     # spin up the shared worker pool outside the timed rows: the executor is
     # worker-persistent across sweeps, so steady state never pays the fork
     mk(processes=2, batch=False).explore(cands[:max(4, len(cands) // 25)])
+    # warm the jax jit cache outside the timed rounds too, and record the
+    # one-off cost: first call = trace + XLA compile + the sweep itself
+    t0 = time.perf_counter()
+    mk(engine="jax").explore(cands)
+    jax_compile_s = time.perf_counter() - t0
+    mk(engine="jax", jax_chunk=16).explore(cands)
 
     # round-robin the engine configurations across measurement rounds so
     # machine-speed drift (frequency scaling, neighbours) hits every engine
@@ -139,6 +155,8 @@ def _sweep_rows(trace, reports, a9, count: int,
         "fastp": dict(batch=False, processes=2),
         "batchp": dict(processes=2),
         "disk": dict(cache_dir=cache_dir),
+        "jax": dict(engine="jax"),
+        "jaxc": dict(engine="jax", jax_chunk=16),
     }
     rounds = {name: (1 if smoke else 3) for name in cfgs}
     rounds["pr1"] = 1 if smoke else 2          # the expensive yardstick
@@ -160,14 +178,22 @@ def _sweep_rows(trace, reports, a9, count: int,
                 best[name] = dt
     pr1_s, fast_s, batch_s = best["pr1"], best["fast"], best["batch"]
     fastp_s, batchp_s, disk_s = best["fastp"], best["batchp"], best["disk"]
+    jax_s, jaxc_s = best["jax"], best["jaxc"]
     pr1, fast, batch = res["pr1"], res["fast"], res["batch"]
     fastp, batchp, disk = res["fastp"], res["batchp"], res["disk"]
-    batch_ex = exs["batch"]
+    jaxr, jaxcr = res["jax"], res["jaxc"]
+    batch_ex, jax_ex = exs["batch"], exs["jax"]
 
     key = lambda r: [(o.name, o.makespan_s) for o in r.ranked]
     assert key(pr1) == key(fast) == key(batch) == key(fastp) \
         == key(batchp) == key(disk), \
-        "every engine must produce the bit-identical ranking"
+        "every exact engine must produce the bit-identical ranking"
+    spans = {o.name: o.makespan_s for o in batch.ranked}
+    names = lambda r: [o.name for o in r.ranked]
+    for jr in (jaxr, jaxcr):
+        assert rankings_equivalent(names(jr), names(batch), spans, JAX_RTOL), \
+            "jax rows must rank identically to the batch engine under the " \
+            "documented rtol tie-break"
 
     nc = len(cands)
     batch_best = min(batch_s, batchp_s)
@@ -184,8 +210,10 @@ def _sweep_rows(trace, reports, a9, count: int,
             paired.append((PR2_FAST_SERIAL_S * p / PR2_PR1_S) / b)
     batch_vs_pr2_fast = max(paired) if paired else \
         (PR2_FAST_SERIAL_S * speed_scale) / batch_best
-    sweep_speedup = pr1_s / min(fast_s, batch_s, fastp_s, batchp_s, disk_s)
+    sweep_speedup = pr1_s / min(fast_s, batch_s, fastp_s, batchp_s, disk_s,
+                                jax_s, jaxc_s)
     bstats = batch_ex.batch_stats.as_dict()
+    jstats = jax_ex.batch_stats.as_dict()
     rows.append(("fig6/sweep_pr1_cached", pr1_s * 1e6,
                  f"candidates={nc},seconds={pr1_s:.3f},"
                  f"throughput={nc / pr1_s:.0f}cand_per_s"))
@@ -207,6 +235,17 @@ def _sweep_rows(trace, reports, a9, count: int,
                  f"candidates={nc},seconds={disk_s:.4f},"
                  f"speedup={pr1_s / disk_s:.1f}x,"
                  f"disk_hits={disk.cache['disk_hits']}"))
+    rows.append(("fig6/sweep_jax_serial", jax_s * 1e6,
+                 f"candidates={nc},seconds={jax_s:.3f},"
+                 f"speedup={pr1_s / jax_s:.1f}x,"
+                 f"lockstep={jstats['lockstep_lanes']},"
+                 f"diverged={jstats['diverged_lanes']}"))
+    rows.append(("fig6/sweep_jax_chunked", jaxc_s * 1e6,
+                 f"candidates={nc},seconds={jaxc_s:.3f},"
+                 f"speedup={pr1_s / jaxc_s:.1f}x,chunk=16"))
+    rows.append(("fig6/sweep_jax_compile", jax_compile_s * 1e6,
+                 f"candidates={nc},seconds={jax_compile_s:.3f} "
+                 f"(one-off: XLA compile + first sweep)"))
     rows.append(("fig6/sweep_batch_vs_pr2", 0.0,
                  f"candidates={nc},batch_best={batch_best:.3f}s,"
                  f"throughput={nc / batch_best:.0f}cand_per_s,"
@@ -214,7 +253,7 @@ def _sweep_rows(trace, reports, a9, count: int,
                  f"@equal_machine_speed(scale={speed_scale:.2f})"))
     rows.append(("fig6/sweep_speedup", 0.0,
                  f"candidates={nc},best_speedup={sweep_speedup:.1f}x "
-                 f"(pr1 vs best of fast/batch/procs/disk-rerank)"))
+                 f"(pr1 vs best of fast/batch/procs/disk-rerank/jax)"))
     METRICS.update({
         "sweep_candidates": nc,
         "sweep_pr1_cached_seconds": pr1_s,
@@ -223,15 +262,20 @@ def _sweep_rows(trace, reports, a9, count: int,
         "sweep_fast_procs_seconds": fastp_s,
         "sweep_batch_procs_seconds": batchp_s,
         "sweep_disk_rerank_seconds": disk_s,
+        "sweep_jax_serial_seconds": jax_s,
+        "sweep_jax_chunked_seconds": jaxc_s,
+        "jax_compile_seconds": jax_compile_s,
         "sweep_speedup": sweep_speedup,
         "sweep_fast_serial_speedup": pr1_s / fast_s,
         "sweep_disk_rerank_speedup": pr1_s / disk_s,
         "candidates_per_sec_pr1": nc / pr1_s,
         "candidates_per_sec_fast": nc / min(fast_s, fastp_s),
         "candidates_per_sec_batch": nc / batch_best,
+        "candidates_per_sec_jax": nc / min(jax_s, jaxc_s),
         "batch_vs_pr2_fast_speedup": batch_vs_pr2_fast,
         "fast_procs_vs_serial_speedup": fast_s / fastp_s,
         "sweep_batch_stats": bstats,
+        "sweep_jax_stats": jstats,
         "sweep_cache_fast": dict(fast.cache),
         "sweep_cache_disk_rerank": dict(disk.cache),
     })

@@ -14,13 +14,16 @@ from .simulator import (ScheduledTask, SimResult, Simulator, simulate,
                         validate_pools)
 from .fastsim import FrozenGraph, freeze_graph, simulate_each, simulate_fast
 from .batchsim import BatchStats, simulate_batch
+from .replay import (ENGINE_TOLERANCE, JAX_RTOL, rankings_equivalent,
+                     sims_equivalent)
+from .jaxsim import have_jax, simulate_jax
 from .diskcache import DiskCache, trace_fingerprint
 from .estimator import (PerfEstimate, contention_time_model, estimate,
                         reference_run, same_best, spearman_rank_correlation,
                         speedup_table)
 from .explore import (Axis, CacheStats, Candidate, CandidateOutcome,
-                      DesignSpace, ExplorationResult, Explorer, explore,
-                      hillclimb, lower_bound_seconds, parallel_map)
+                      DesignSpace, ENGINE_NAMES, ExplorationResult, Explorer,
+                      explore, hillclimb, lower_bound_seconds, parallel_map)
 from .paraver import ascii_gantt, write_prv
 
 __all__ = [
@@ -35,11 +38,13 @@ __all__ = [
     "ScheduledTask", "SimResult", "Simulator", "simulate", "validate_pools",
     "FrozenGraph", "freeze_graph", "simulate_each", "simulate_fast",
     "BatchStats", "simulate_batch",
+    "ENGINE_TOLERANCE", "JAX_RTOL", "rankings_equivalent", "sims_equivalent",
+    "have_jax", "simulate_jax",
     "DiskCache", "trace_fingerprint",
     "PerfEstimate", "contention_time_model", "estimate", "reference_run",
     "same_best", "spearman_rank_correlation", "speedup_table",
     "Axis", "CacheStats", "Candidate", "CandidateOutcome", "DesignSpace",
-    "ExplorationResult", "Explorer", "explore", "hillclimb",
+    "ENGINE_NAMES", "ExplorationResult", "Explorer", "explore", "hillclimb",
     "lower_bound_seconds", "parallel_map",
     "ascii_gantt", "write_prv",
 ]

@@ -7,8 +7,11 @@ though (on the fig6 grid) 198/200 candidates share a single
 counts.  This module evaluates **every candidate sharing one frozen graph
 in a single lockstep sweep**: per-candidate state is stacked on a
 candidate ("lane") axis — pool free-slot times ``[n_pools, max_slots,
-B]``, task ready times ``[n, B]``, placement ids ``[n, B]``; the lane axis
-sits last so each step touches contiguous vectors — and each step advances
+B]``, task ready times ``[n, B]``, placement ids ``[n, B]``.  The **lane
+-last axis convention** is an invariant shared with the jax backend: the
+lane axis sits last in every stacked array, so each step touches
+contiguous vectors and the backends' state layouts (and the shared
+assembly helper) stay interchangeable — and each step advances
 *all* lanes through one task row with numpy (an argmin over the slot axis
 replaces ``_Pool.earliest_slot``, per-kind cost gathers replace the
 dispatch probe).
@@ -42,47 +45,28 @@ Everything here is schedule-free by construction (``SimResult.schedule``
 is empty); full :class:`~repro.core.simulator.ScheduledTask` records for
 top-k winners are replayed through ``simulate_fast(with_schedule=True)``
 by the exploration engine, exactly as before.
+
+The grouping / reference-order / fallback protocol around the sweep is
+shared with the jax backend (:mod:`repro.core.jaxsim`) and lives in
+:mod:`repro.core.replay`; this module supplies only the numpy inner loop
+(:func:`_run_lockstep`).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .devices import SystemConfig
-from .fastsim import FrozenGraph, pool_layout, simulate_fast
+from .fastsim import FrozenGraph, simulate_fast  # noqa: F401 — re-export
+from .replay import (BatchStats, MIN_LOCKSTEP, graph_aux, lane_results,
+                     simulate_grouped)
 from .simulator import SimResult
-
-# Below this many lanes per group the per-step numpy dispatch overhead
-# outweighs the vectorisation win and simulate_fast per lane is faster.
-MIN_LOCKSTEP = 6
 
 # Steps between heap-key validations / makespan folds: big enough to
 # amortise the stacked checks, small enough to bound a diverged lane's
 # wasted lockstep work.
 _WINDOW = 24
-
-
-@dataclasses.dataclass
-class BatchStats:
-    """Observability for one or more :func:`simulate_batch` calls.
-
-    ``lockstep_lanes`` counts candidates fully evaluated inside a lockstep
-    sweep; ``diverged_lanes`` fell back to ``simulate_fast`` after a heap
-    -order mismatch; ``small_group_lanes`` never entered lockstep (group
-    below ``min_lockstep``); ``reference_lanes`` drove a replayed order
-    (evaluated via the bit-identical full-record path).
-    """
-
-    groups: int = 0
-    lockstep_lanes: int = 0
-    diverged_lanes: int = 0
-    small_group_lanes: int = 0
-    reference_lanes: int = 0
-
-    def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
 
 
 def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
@@ -99,84 +83,8 @@ def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
     group runs one lockstep sweep, with per-lane serial fallback on
     event-order divergence.
     """
-    if policy not in ("availability", "eft"):
-        raise ValueError(f"unknown policy {policy!r}")
-    results: List[Optional[SimResult]] = [None] * len(systems)
-    groups: Dict[Tuple, List[int]] = {}
-    layouts: List[Tuple[List[str], List[int], List[int]]] = []
-    for i, system in enumerate(systems):
-        names, counts, kind_pool = pool_layout(fg.kinds, system)
-        layouts.append((names, counts, kind_pool))
-        groups.setdefault((tuple(names), tuple(kind_pool)), []).append(i)
-
-    for lanes in groups.values():
-        if stats is not None:
-            stats.groups += 1
-        if len(lanes) < min_lockstep:
-            for i in lanes:
-                results[i] = simulate_fast(fg, systems[i], policy)
-            if stats is not None:
-                stats.small_group_lanes += len(lanes)
-            continue
-        for i, sim in zip(lanes, _lockstep_group(
-                fg, [systems[i] for i in lanes],
-                [layouts[i] for i in lanes], policy, stats)):
-            results[i] = sim
-    return results  # type: ignore[return-value]
-
-
-# ---------------------------------------------------------------------------
-# One lockstep group: shared pool template, varying slot counts
-# ---------------------------------------------------------------------------
-
-
-def _lockstep_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
-                    layouts: Sequence[Tuple[List[str], List[int], List[int]]],
-                    policy: str,
-                    stats: Optional[BatchStats]) -> List[SimResult]:
-    n = fg.n
-    # reference lane: most parallel hardware — its saturated order is the
-    # one large-slot-count lanes overwhelmingly share (ties -> last lane,
-    # matching "later candidates are usually bigger" sweep conventions)
-    totals = [sum(lay[1]) for lay in layouts]
-    ref = max(range(len(systems)), key=lambda i: (totals[i], i))
-    order: List[int] = []
-    results: List[Optional[SimResult]] = [None] * len(systems)
-    results[ref] = simulate_fast(fg, systems[ref], policy, order_out=order)
-    if stats is not None:
-        stats.reference_lanes += 1
-    lane_ids = [i for i in range(len(systems)) if i != ref]
-    done, diverged = _run_lockstep(fg, order,
-                                   [layouts[i] for i in lane_ids], policy)
-    for pos, sim in done.items():
-        i = lane_ids[pos]
-        results[i] = dataclasses.replace(sim, system=systems[i].name)
-    for pos in diverged:
-        i = lane_ids[pos]
-        results[i] = simulate_fast(fg, systems[i], policy)
-    if stats is not None:
-        stats.diverged_lanes += len(diverged)
-        stats.lockstep_lanes += len(done)
-    return results  # type: ignore[return-value]
-
-
-def _graph_aux(fg: FrozenGraph, ci, rank, asets):
-    """Graph-only lockstep constants, memoised on the FrozenGraph (repeat
-    sweeps — hillclimbs, re-ranks — hit the same frozen payload many
-    times): the strictly-(creation_index, rank)-monotone tie-break scalar
-    per row, and the dense conditional-activation mask for vectorised
-    membership tests.  Dropped on pickling like ``_rt``.
-    """
-    aux = getattr(fg, "_batch_aux", None)
-    if aux is None:
-        n = fg.n
-        tb = [ci[i] * n + rank[i] for i in range(n)]
-        act_mask = np.zeros((n, len(fg.kinds)), dtype=bool)
-        for i in range(n):
-            for k in asets[i]:
-                act_mask[i, k] = True
-        aux = fg._batch_aux = (tb, act_mask)
-    return aux
+    return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
+                            stats=stats, lockstep_fn=_run_lockstep)
 
 
 def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
@@ -201,7 +109,7 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
     (uids, ci, cond, dev_first, dev_opts, asets, costs, succs,
      _n_pred, is_comp, rankmaps, _heap0, comp_rows) = fg._runtime()
     n = fg.n
-    tb, act_mask = _graph_aux(fg, ci, rankmaps[0], asets)
+    tb, act_mask = graph_aux(fg, ci, rankmaps[0], asets)
     cost_np = fg.cost                      # float64[n, n_kinds], NaN = absent
 
     pool_names, _, kind_pool = layouts[0]   # template-shared
@@ -427,25 +335,6 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
     # ---- assemble per-lane schedule-free results --------------------------
     for p in seen_pools:
         seen[p] = True
-    comp_arr = np.asarray(comp_rows, dtype=np.int64)
-    comp_uids = [uids[i] for i in comp_rows]
-    kinds_obj = np.asarray(kinds, dtype=object)
-    comp_place = placement[comp_arr]                   # [C, L]
-    done: Dict[int, SimResult] = {}
-    for li in range(L):
-        pos = int(alive[li])
-        counts = lane_counts[pos]
-        kp = comp_place[:, li]
-        placed = kp >= 0
-        if placed.all():
-            placements = dict(zip(comp_uids, kinds_obj[kp].tolist()))
-        else:
-            placements = {u: kinds[k] for u, k, m
-                          in zip(comp_uids, kp.tolist(), placed.tolist()) if m}
-        done[pos] = SimResult(
-            makespan=float(makespan[li]), schedule=[],
-            busy={pool_names[p]: float(busy[p, li]) for p in range(P)
-                  if seen[p, li]},
-            pool_slots={pool_names[p]: counts[p] for p in range(P)},
-            placements=placements, policy=policy, system="")
+    done = lane_results(fg, pool_names, lane_counts, alive.tolist(), policy,
+                        makespan, busy, seen, placement)
     return done, diverged

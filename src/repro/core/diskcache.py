@@ -17,6 +17,20 @@ files, bit flips, and hash collisions (a *stale* entry written under another
 key) all degrade to a cache miss — the caller recomputes and overwrites;
 nothing crashes.  Writes are atomic (temp file + rename) so a killed sweep
 never leaves a half-written entry behind.
+
+**The content-hash registry protocol.**  Entries are filed under
+``sha256(key_text).pkl``, and that filename hash doubles as a wire-level
+name: a reader that only holds the 64-char hash — the exploration engine's
+process-pool workers, which keep a persistent hash→``FrozenGraph``
+registry and are handed hashes instead of re-pickled payloads — fetches
+via :meth:`DiskCache.get_hashed`, which re-hashes the embedded key text
+and verifies it against the requested hash.  The protocol's invariant:
+*any* value served (by ``get`` or ``get_hashed``) passed the payload
+digest check **and** the key/hash comparison, so a worker can trust a
+self-served graph exactly as much as one shipped from the parent.  Cache
+keys are namespaced by engine equivalence tier where it matters (see
+``repro.core.explore._sim_disk_text``): exact engines share one sim
+namespace, the jax rtol tier gets its own.
 """
 from __future__ import annotations
 

@@ -20,14 +20,15 @@ into a subsystem:
   both layers persist to an on-disk content-addressed store keyed by trace
   fingerprint + eligibility/system signature, so *repeated sweeps across
   processes and runs* skip straight to re-ranking.
-* **Compiled evaluation** — by default candidates run through the
-  candidate-axis batch engine (:mod:`repro.core.batchsim`): all slot-count
-  variants of one picklable :class:`FrozenGraph` advance in a single
-  lockstep sweep (schedule-free, ranking-identical to per-candidate
-  :func:`~repro.core.fastsim.simulate_fast`), with full
-  :class:`ScheduledTask` records materialised only for the top-k winners.
-  ``batch=False`` keeps the per-candidate fast loop; ``fast=False`` the
-  reference object engine.
+* **Compiled evaluation** — ``engine=`` selects among the four engines
+  (:data:`ENGINE_NAMES`): the reference object engine, the per-candidate
+  array engine, the candidate-axis numpy lockstep (default — all
+  slot-count variants of one picklable :class:`FrozenGraph` advance in a
+  single sweep, schedule-free, ranking-identical to per-candidate
+  :func:`~repro.core.fastsim.simulate_fast`), and the jit-compiled jax
+  scan (:mod:`repro.core.jaxsim`, rtol tier).  Full
+  :class:`ScheduledTask` records are materialised only for the top-k
+  winners.  The legacy ``fast``/``batch`` booleans keep working.
 * **Parallel evaluation** — ``processes=N`` fans graph×candidate-slice
   chunks out to a ``ProcessPoolExecutor`` whose workers keep a persistent
   content-hash→FrozenGraph registry (seeded once per worker from the first
@@ -278,6 +279,11 @@ class CacheStats:
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
 
+    def __repr__(self) -> str:
+        return (f"CacheStats(graph {self.graph_hits}h/{self.graph_misses}m, "
+                f"eval {self.eval_hits}h/{self.eval_misses}m, "
+                f"disk {self.disk_hits}h/{self.disk_misses}m)")
+
 
 def _eligibility_signature(elig: Eligibility) -> Tuple:
     return (tuple(sorted((k, tuple(v))
@@ -298,10 +304,15 @@ def _graph_key(system: SystemConfig, elig: Eligibility) -> Tuple:
             _eligibility_signature(elig))
 
 
-def _sim_key(graph_key: Tuple, system: SystemConfig, policy: str) -> Tuple:
+def _sim_key(graph_key: Tuple, system: SystemConfig, policy: str,
+             tier: str = "exact") -> Tuple:
     pools = tuple((p.name, tuple(p.kinds), p.count) for p in system.pools)
     shared = tuple((r.name, r.count) for r in system.shared)
-    return (graph_key, pools, shared, policy)
+    # the tier keeps rtol-level (jax) results out of the exact engines'
+    # cache namespace: a bit-identity contract must never be satisfied by
+    # a cached rtol result
+    return (graph_key, pools, shared, policy) if tier == "exact" \
+        else (graph_key, pools, shared, policy, tier)
 
 
 # ---------------------------------------------------------------------------
@@ -535,6 +546,12 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
             for pos, system in items]
 
 
+#: Valid ``Explorer(engine=...)`` names, in fidelity order.  ``reference``
+#: is the object engine, ``fast``/``batch`` the exact array engines, and
+#: ``jax`` the rtol-tier compiled scan (see ``repro.core.replay``).
+ENGINE_NAMES = ("reference", "fast", "batch", "jax")
+
+
 class Explorer:
     """Cached, parallel candidate evaluator bound to one trace.
 
@@ -550,17 +567,35 @@ class Explorer:
                  max_workers: Optional[int] = None, cache: bool = True,
                  fast: bool = True, batch: Optional[bool] = None,
                  processes: int = 0,
-                 cache_dir: Optional[str] = None):
-        """``fast`` routes evaluation through the array-compiled engine
-        (FrozenGraph + simulate_fast, bit-identical to the reference).
-        ``batch`` (default: on whenever ``fast`` is) additionally evaluates
-        all candidates sharing a graph in one lockstep sweep
-        (:mod:`repro.core.batchsim`, ranking-identical); ``batch=False``
-        keeps the per-candidate fast loop.  ``processes`` > 0 fans chunks
-        out to that many worker processes (fast mode only).  ``cache_dir``
-        persists frozen graphs and schedule-free sims to disk, keyed by
-        trace content hash + eligibility/system signature (fast mode
-        only)."""
+                 cache_dir: Optional[str] = None,
+                 engine: Optional[str] = None,
+                 jax_chunk: Optional[int] = None):
+        """``engine`` names the evaluation engine directly — one of
+        :data:`ENGINE_NAMES` — and overrides the legacy ``fast``/``batch``
+        booleans (kept for compatibility: ``fast=False`` is
+        ``engine="reference"``, ``fast=True, batch=False`` is
+        ``engine="fast"``, the default is ``engine="batch"``).
+        ``engine="jax"`` evaluates each graph-sharing candidate family
+        through the jit-compiled ``lax.scan`` backend
+        (:mod:`repro.core.jaxsim`, rtol-tier, in-process only;
+        ``jax_chunk`` caps its compiled lane-bucket width).  ``processes``
+        > 0 fans chunks out to that many worker processes (exact fast/batch
+        engines only).  ``cache_dir`` persists frozen graphs and
+        schedule-free sims to disk, keyed by trace content hash +
+        eligibility/system signature (array engines only; jax-tier entries
+        are namespaced so they can never satisfy an exact engine's
+        lookup)."""
+        if engine is not None:
+            if engine not in ENGINE_NAMES:
+                raise ValueError(
+                    f"unknown engine {engine!r}: valid engine names are "
+                    + ", ".join(repr(e) for e in ENGINE_NAMES))
+            fast = engine != "reference"
+            batch = engine in ("batch", "jax")
+        else:
+            engine = "reference" if not fast else \
+                ("batch" if (batch is None or batch) else "fast")
+        self.engine = engine
         self.trace = trace
         self.reports = reports
         self.policy = policy
@@ -572,6 +607,23 @@ class Explorer:
         self.fast = fast
         self.batch = fast if batch is None else bool(batch)
         self.processes = int(processes or 0)
+        if jax_chunk is not None:
+            if jax_chunk < 1:
+                raise ValueError(f"jax_chunk must be >= 1, got {jax_chunk!r}")
+            if engine != "jax":
+                raise ValueError(f"jax_chunk only applies to engine='jax' "
+                                 f"(got engine={engine!r})")
+        self.jax_chunk = jax_chunk
+        self._sim_tier = "jax" if engine == "jax" else "exact"
+        if engine == "jax":
+            from .jaxsim import require_jax
+            require_jax()                      # fail at construction time
+            if self.processes:
+                raise ValueError(
+                    "engine='jax' is in-process (the jit compile cache is "
+                    "per-process, so worker fan-out would recompile the "
+                    "scan in every worker); use engine='batch' with "
+                    "processes=N for process-parallel sweeps")
         if not fast:
             if self.batch:
                 raise ValueError("batch=True requires the fast engine "
@@ -653,11 +705,17 @@ class Explorer:
         self._disk_texts[graph_key] = text
         return text
 
-    def _sim_disk_text(self, graph_key: Tuple, system: SystemConfig) -> str:
+    def _sim_disk_text(self, graph_key: Tuple, system: SystemConfig,
+                       tier: Optional[str] = None) -> str:
         pools = [[p.name, list(p.kinds), p.count] for p in system.pools]
         shared = [[r.name, r.count] for r in system.shared]
+        # exact engines share one on-disk namespace (their results are
+        # interchangeable bit-for-bit); the jax tier gets its own tag so an
+        # rtol-level entry can never satisfy an exact engine's lookup
+        tier = self._sim_tier if tier is None else tier
+        tag = "sim" if tier == "exact" else f"sim-{tier}"
         return json.dumps(
-            ["sim", 1, sha256_text(self._graph_disk_text(graph_key)),
+            [tag, 1, sha256_text(self._graph_disk_text(graph_key)),
              pools, shared, self.policy])
 
     # ------------------------------------------------------------------
@@ -764,7 +822,7 @@ class Explorer:
         hit/miss accounting for the lookup."""
         if gkey is None:
             gkey = _graph_key(cand.system, cand.eligibility)
-        key = _sim_key(gkey, cand.system, self.policy)
+        key = _sim_key(gkey, cand.system, self.policy, self._sim_tier)
         with self._lock:
             if self.cache_enabled and key in self._sims:
                 self.stats.eval_hits += 1
@@ -774,6 +832,12 @@ class Explorer:
             return key, None, None
         text = self._sim_disk_text(gkey, cand.system)
         hit = self._disk.get(text)
+        if not isinstance(hit, SimResult) and self._sim_tier != "exact":
+            # tier blocking is one-directional: an exact entry trivially
+            # satisfies any relaxed tier, so a warm exact-engine store also
+            # serves jax re-ranks (the reverse stays blocked — see above)
+            hit = self._disk.get(
+                self._sim_disk_text(gkey, cand.system, "exact"))
         with self._lock:
             if isinstance(hit, SimResult):
                 self.stats.disk_hits += 1
@@ -974,10 +1038,8 @@ class Explorer:
             for gkey, items in pending.items():
                 payload, stats, crit, lb = graph_info[gkey]
                 t0 = time.perf_counter()
-                sims = simulate_batch(payload,
-                                      [cand.system for _, cand, _, _, _
-                                       in items],
-                                      self.policy, stats=self.batch_stats)
+                sims = self._lockstep_family(
+                    payload, [cand.system for _, cand, _, _, _ in items])
                 share = (time.perf_counter() - t0) / max(len(items), 1)
                 for (pos, cand, key, text, ghit), sim in zip(items, sims):
                     self._sim_store(key, text, sim)
@@ -1030,6 +1092,18 @@ class Explorer:
                     cand, stats, crit, lb, ghit, False, sim, share)
         return results
 
+    def _lockstep_family(self, payload: FrozenGraph,
+                         systems: Sequence[SystemConfig]) -> List[SimResult]:
+        """One graph-sharing candidate family through the configured
+        candidate-axis backend (numpy lockstep or the jax scan)."""
+        if self.engine == "jax":
+            from .jaxsim import simulate_jax
+            kw = {} if self.jax_chunk is None else {"chunk": self.jax_chunk}
+            return simulate_jax(payload, systems, self.policy,
+                                stats=self.batch_stats, **kw)
+        return simulate_batch(payload, systems, self.policy,
+                              stats=self.batch_stats)
+
     def _materialise_schedules(self, result: ExplorationResult,
                                cands: Sequence[Candidate],
                                estimates: Dict[str, PerfEstimate],
@@ -1077,7 +1151,9 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
             prune: bool = False, top_k: Optional[int] = None,
             fast: bool = True, batch: Optional[bool] = None,
             processes: int = 0,
-            cache_dir: Optional[str] = None) -> ExplorationResult:
+            cache_dir: Optional[str] = None,
+            engine: Optional[str] = None,
+            jax_chunk: Optional[int] = None) -> ExplorationResult:
     """Estimate every feasible candidate; rank; pick the best.
 
     This is the "coffee-break" loop: its wall time replaces one bitstream
@@ -1089,5 +1165,6 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
     ex = Explorer(trace, reports, policy=policy, smp_scale=smp_scale,
                   smp_seconds_fn=smp_seconds_fn, budget=budget,
                   max_workers=max_workers, cache=cache, fast=fast,
-                  batch=batch, processes=processes, cache_dir=cache_dir)
+                  batch=batch, processes=processes, cache_dir=cache_dir,
+                  engine=engine, jax_chunk=jax_chunk)
     return ex.explore(candidates, top_k=top_k, prune=prune)

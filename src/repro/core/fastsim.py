@@ -31,13 +31,17 @@ event-driven list-scheduling semantics over flat arrays
 placements only — which is what exploration ranks on; full records are
 rebuilt just for the top-k winners.
 
-Division of labour with :mod:`repro.core.batchsim`: this module is the
+Division of labour with the candidate-axis engines: this module is the
 *one-candidate* fast path (and the bit-identity anchor every other engine
-is pinned against); ``batchsim`` stacks *all* candidates sharing one
-``FrozenGraph`` on a dedicated candidate axis and advances them in lockstep,
-falling back to :func:`simulate_fast` per lane whenever a candidate's
-event order diverges from the batch — so ``simulate_fast`` is also the
-batch engine's reference runner and its exact escape hatch.
+is pinned against); :mod:`repro.core.batchsim` (numpy lockstep) and
+:mod:`repro.core.jaxsim` (jit-compiled ``lax.scan``, rtol tier) stack
+*all* candidates sharing one ``FrozenGraph`` on a dedicated candidate
+axis and advance them through one replayed event order, falling back to
+:func:`simulate_fast` per lane whenever a candidate's order diverges —
+so ``simulate_fast`` is every batch backend's reference-order recorder
+(``order_out=``) and exact escape hatch.  The shared replay protocol and
+the engine equivalence tiers live in :mod:`repro.core.replay`; the
+architecture overview in ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -167,6 +171,7 @@ class FrozenGraph:
         state = dict(self.__dict__)
         state.pop("_rt", None)          # plain-list mirror is rebuilt on use
         state.pop("_batch_aux", None)   # batchsim constants likewise
+        state.pop("_jax_xs", None)      # jaxsim scan inputs likewise
         return state
 
     def _runtime(self):

@@ -1,0 +1,435 @@
+"""jax ``lax.scan`` candidate-axis engine — the sweep loop, compiled.
+
+:mod:`repro.core.batchsim` proved the lockstep formulation: every candidate
+sharing one :class:`~repro.core.fastsim.FrozenGraph` advances through one
+replayed reference event order with per-candidate state stacked on a
+candidate ("lane") axis.  Its per-step cost is numpy-*dispatch*-bound
+(~20 µs/step of Python/C boundary crossings per task row).  This module
+compiles the identical per-step semantics into a single jit-compiled
+:func:`jax.lax.scan` over the replayed order, so a whole sweep runs as one
+XLA computation with the full per-candidate state carried as scan state on
+a device-resident candidate axis.
+
+Invariants (shared with the numpy backend unless stated):
+
+* **Lane-last axis convention.**  Per-candidate state is stacked with the
+  lane axis *last* — pool free-slot clocks ``[P, S, B]``, task ready times
+  ``[n, B]``, placement ids ``[n, B]`` — exactly the batchsim layout, so
+  the two backends' state arrays are interchangeable in tests and the
+  shared assembly helper (:func:`repro.core.replay.lane_results`) serves
+  both.
+* **rtol tier, not bit-identity.**  The exact engines replicate the
+  reference engine's float ops in the reference order; XLA owns its own op
+  scheduling, so this engine is pinned at the relaxed tier instead:
+  makespans and busy sums within :data:`repro.core.replay.JAX_RTOL`
+  (relative) of the reference, placements/pool layouts discrete-identical,
+  and rankings stable under the documented tie-break (sub-tolerance
+  makespan ties break by candidate submission order).  The scan runs in
+  float64 (``jax.experimental.enable_x64``) to keep the residual far below
+  the tier.
+* **Divergence falls back to the exact path.**  The same per-step heap-key
+  monotonicity check as batchsim runs *inside* the scan (carried
+  ``prev_key`` per lane); lanes whose popped ``(ready_t, tie_break)`` keys
+  ever violate it are flagged, their scan state is discarded, and they are
+  re-simulated through :func:`~repro.core.fastsim.simulate_fast` — the
+  identical contract to the numpy backend, enforced by
+  :func:`repro.core.replay.replay_group`.
+* **Fixed-bucket lane chunking.**  Lanes are evaluated in chunks padded to
+  power-of-two widths (``chunk`` caps the bucket), so repeat sweeps over
+  the same graph reuse the jit cache instead of recompiling per candidate
+  count; padding lanes replicate a real lane and are dropped before
+  assembly.
+
+The jax dependency is gated: importing this module without jax installed
+works, and :func:`simulate_jax` raises a clear ``RuntimeError`` pointing at
+the exact engines instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .devices import SystemConfig
+from .fastsim import FrozenGraph, simulate_fast
+# JAX_RTOL is re-exported here on purpose: it is this engine's tier constant.
+from .replay import (BatchStats, JAX_RTOL, Layout, MIN_LOCKSTEP,  # noqa: F401
+                     graph_aux, lane_results, simulate_grouped)
+from .simulator import SimResult
+
+# The jax import is deferred until the engine is actually used: importing
+# repro.core (which re-exports simulate_jax) must stay cheap and must not
+# load a multithreaded runtime before the exploration engine's fork-based
+# process pools start.  _jax() performs and caches the gated import.
+_JAX_MODULES: Optional[Tuple] = None
+_JAX_ERROR: Optional[BaseException] = None
+
+#: Lanes per compiled scan chunk (the bucket cap).  Chunks are padded up to
+#: power-of-two widths so the jit cache is keyed on a handful of shapes.
+DEFAULT_CHUNK = 64
+
+
+def _jax():
+    """``(jax, jnp, enable_x64)``, importing on first use (gated)."""
+    global _JAX_MODULES, _JAX_ERROR
+    if _JAX_MODULES is None and _JAX_ERROR is None:
+        try:
+            import jax
+            import jax.numpy as jnp
+            from jax.experimental import enable_x64
+            _JAX_MODULES = (jax, jnp, enable_x64)
+        except Exception as e:          # noqa: BLE001 — any import failure
+            _JAX_ERROR = e
+    if _JAX_MODULES is None:
+        raise RuntimeError(
+            "the jax candidate-axis engine requires jax, which failed to "
+            f"import here ({_JAX_ERROR!r}); use Explorer(engine='batch') — "
+            "the exact numpy lockstep engine — instead") from _JAX_ERROR
+    return _JAX_MODULES
+
+
+def have_jax() -> bool:
+    """Whether the jax backend is importable in this environment."""
+    try:
+        _jax()
+        return True
+    except RuntimeError:
+        return False
+
+
+def require_jax() -> None:
+    _jax()
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clamped to [8, cap]."""
+    b = 8
+    while b < n and b < cap:
+        b *= 2
+    return min(b, cap)
+
+
+# ---------------------------------------------------------------------------
+# The compiled scan (traced once per (graph shape, bucket) signature)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_scan():
+    """Build the jitted scan runner lazily (so import stays jax-free)."""
+    jax, jnp, _ = _jax()
+
+    def run(xs, clocks, ready, placement, busy, seen, kind_pool, smp_kid,
+            eft):
+        B = clocks.shape[2]
+        aB = jnp.arange(B)
+        S_max = xs["succ"].shape[1]
+        K = xs["own_opts"].shape[1]
+
+        def choose(opts, cost_row, rt, clocks):
+            """Vectorised reference `_choose_kind` over all lanes: options
+            visited in annotation order, strict < on (key, pref) — the
+            lowest-index winner, identical tie-breaks to the exact
+            engines."""
+            best_k = jnp.full((B,), -1, dtype=placement.dtype)
+            bv = jnp.zeros((B,), dtype=clocks.dtype)
+            bp = jnp.zeros((B,), dtype=clocks.dtype)
+            for j in range(K):                      # K is static and tiny
+                k = opts[j]
+                kk = jnp.maximum(k, 0)
+                pi = kind_pool[kk]
+                valid = (k >= 0) & (pi >= 0)
+                base = cost_row[kk]
+                t = jnp.min(clocks[jnp.maximum(pi, 0)], axis=0)     # [B]
+                start = jnp.maximum(rt, t)
+                keyv = start + jnp.where(eft, base, 0.0)
+                pref = jnp.where(k == smp_kid, 1.0, 0.0)
+                better = valid & ((best_k < 0) | (keyv < bv)
+                                  | ((keyv == bv) & (pref < bp)))
+                bv = jnp.where(better, keyv, bv)
+                bp = jnp.where(better, pref, bp)
+                best_k = jnp.where(better, k, best_k)
+            return best_k
+
+        def step(carry, x):
+            (clocks, ready, placement, busy, seen, makespan, prev_rt,
+             prev_tb, div) = carry
+            r = x["r"]
+            rt = ready[r]                                           # [B]
+            # heap-key monotonicity: a lane whose popped (ready_t, tb) key
+            # ever fails to strictly increase is not executing its own heap
+            # order — flag it for the exact fallback
+            div = div | (rt < prev_rt) | ((rt == prev_rt)
+                                          & (x["tb"] <= prev_tb))
+            # (div also absorbs bad dispatches below: any lane that *live*
+            # -executes a row the reference would raise on takes the exact
+            # fallback, which re-raises — or completes when the lane never
+            # actually reaches the row under its own order)
+
+            # ---- conditional pass-through (per-lane mask) ---------------
+            c = x["c"]
+            has_cond = c >= 0
+            cmax = jnp.maximum(c, 0)
+            pk = placement[cmax]                                    # [B]
+            chosen_p = choose(x["par_opts"], x["par_cost"], rt, clocks)
+            pk = jnp.where(pk < 0, chosen_p, pk)
+            placement = placement.at[cmax].set(
+                jnp.where(has_cond, pk, placement[cmax]))
+            live = jnp.where(has_cond, x["act"][jnp.maximum(pk, 0)], True)
+
+            # ---- dispatch + commit for the lanes executing the row ------
+            k_own = placement[r]
+            und = k_own < 0
+            chosen_o = choose(x["own_opts"], x["own_cost"], rt, clocks)
+            k = jnp.where(x["is_comp"], jnp.where(und, chosen_o, k_own),
+                          x["k_first"])
+            placement = placement.at[r].set(
+                jnp.where(x["is_comp"] & live & und, k, placement[r]))
+            div = div | (live & (x["bad_row"] | (k < 0)))
+            kk = jnp.maximum(k, 0)
+            p = jnp.maximum(kind_pool[kk], 0)                       # [B]
+            base = x["own_cost"][kk]                                # [B]
+            cl = clocks[p, :, aB]                                   # [B, S]
+            s = jnp.argmin(cl, axis=1)          # first-minimum, like ref
+            tmin = cl[aB, s]
+            start = jnp.maximum(rt, tmin)
+            end = start + base
+            end_eff = jnp.where(live, end, rt)
+            clocks = clocks.at[p, s, aB].set(
+                jnp.where(live, end, clocks[p, s, aB]))
+            busy = busy.at[p, aB].add(jnp.where(live, end - start, 0.0))
+            seen = seen.at[p, aB].set(seen[p, aB] | live)
+            makespan = jnp.maximum(makespan, end_eff)
+            ready = ready.at[x["succ"]].max(
+                jnp.broadcast_to(end_eff, (S_max, B)))
+            return (clocks, ready, placement, busy, seen, makespan, rt,
+                    x["tb"], div), None
+
+        makespan = jnp.zeros((B,), dtype=clocks.dtype)
+        prev_rt = jnp.full((B,), -jnp.inf, dtype=clocks.dtype)
+        prev_tb = jnp.asarray(-1, dtype=xs["tb"].dtype)
+        div = jnp.zeros((B,), dtype=bool)
+        init = (clocks, ready, placement, busy, seen, makespan, prev_rt,
+                prev_tb, div)
+        (clocks, ready, placement, busy, seen, makespan, _rt, _tb,
+         div), _ = jax.lax.scan(step, init, xs)
+        return makespan, busy, seen, placement, div
+
+    return jax.jit(run)
+
+
+# ---------------------------------------------------------------------------
+# Group driver: shared xs, chunked lanes, exact fallback
+# ---------------------------------------------------------------------------
+
+
+def _bad_rows(fg: FrozenGraph, kind_pool: Sequence[int]) -> np.ndarray:
+    """``bool[n]``: rows whose *execution* would make the reference engine
+    raise under this pool template — a compute row with an eligible option
+    (pool present) carrying a NaN cost or with no compatible pool at all,
+    or a non-compute row whose device has no pool / no cost.
+
+    Whether such a row ever executes in a given lane is runtime state
+    (conditional rows are skipped when the parent lands on the SMP), so
+    the scan cannot raise eagerly like :mod:`repro.core.batchsim` does
+    mid-sweep: instead a lane that *live*-dispatches a bad row is flagged
+    and re-routed through the exact fallback, where ``simulate_fast``
+    raises the reference error — or completes, when the lane's own event
+    order never reaches the row."""
+    (_uids, _ci, _cond, dev_first, dev_opts, _asets, costs, _succs,
+     _npred, is_comp, *_rest) = fg._runtime()
+    bad = np.zeros(fg.n, dtype=bool)
+    for r in range(fg.n):
+        if is_comp[r]:
+            any_pool = False
+            for k in dev_opts[r]:
+                if kind_pool[k] < 0:
+                    continue
+                any_pool = True
+                if costs[r][k] != costs[r][k]:      # NaN on eligible option
+                    bad[r] = True
+            bad[r] |= not any_pool
+        else:
+            k0 = dev_first[r]
+            bad[r] = kind_pool[k0] < 0 or costs[r][k0] != costs[r][k0]
+    return bad
+
+
+# Per-FrozenGraph cap on memoised (order, kind_pool) -> xs entries: one
+# entry per (pool template × policy) is typical, so a handful covers every
+# realistic sweep mix while bounding pathological template churn.
+_XS_CACHE_CAP = 8
+
+
+def _group_xs(fg: FrozenGraph, order: Sequence[int],
+              kind_pool: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Per-step scan inputs shared by every lane of the group, in replay
+    order: row ids, tie-break scalars, conditional parents, device options
+    and cost rows for the row *and* its conditional parent (the parent's
+    placement may be decided at this step), activation-mask rows,
+    bad-dispatch flags (:func:`_bad_rows`), and padded successor lists
+    (pad = ``n``, a dummy ready row).
+
+    Memoised on the FrozenGraph like :func:`~repro.core.replay.graph_aux`
+    (repeat sweeps — re-ranks, hillclimbs — replay the same order over the
+    same payload many times); dropped on pickling like ``_rt``.
+    """
+    cache = getattr(fg, "_jax_xs", None)
+    if cache is None:
+        cache = fg._jax_xs = {}
+    ckey = (tuple(order), tuple(kind_pool))
+    cached = cache.get(ckey)
+    if cached is not None:
+        return cached
+    (uids, ci, cond, dev_first, dev_opts, asets, costs, succs,
+     _npred, is_comp, rankmaps, *_rest) = fg._runtime()
+    n = fg.n
+    tb, act_mask = graph_aux(fg, ci, rankmaps[0], asets)
+    cost_np = fg.cost
+    T = len(order)
+    K = max(1, max(len(dev_opts[i]) for i in range(n)) if n else 1)
+    S_max = max(1, max((len(succs[i]) for i in range(n)), default=1))
+    n_kinds = len(fg.kinds)
+
+    xs = {
+        "r": np.empty(T, dtype=np.int32),
+        "tb": np.empty(T, dtype=np.int64),
+        "c": np.empty(T, dtype=np.int32),
+        "is_comp": np.empty(T, dtype=bool),
+        "k_first": np.empty(T, dtype=np.int32),
+        "own_opts": np.full((T, K), -1, dtype=np.int32),
+        "own_cost": np.zeros((T, n_kinds), dtype=np.float64),
+        "par_opts": np.full((T, K), -1, dtype=np.int32),
+        "par_cost": np.zeros((T, n_kinds), dtype=np.float64),
+        "act": np.zeros((T, n_kinds), dtype=bool),
+        "bad_row": _bad_rows(fg, kind_pool)[list(order)],
+        "succ": np.full((T, S_max), n, dtype=np.int32),
+    }
+    for t, r in enumerate(order):
+        xs["r"][t] = r
+        xs["tb"][t] = tb[r]
+        c = cond[r]
+        xs["c"][t] = c
+        xs["is_comp"][t] = is_comp[r]
+        xs["k_first"][t] = dev_first[r]
+        xs["own_opts"][t, :len(dev_opts[r])] = dev_opts[r]
+        xs["own_cost"][t] = cost_np[r]
+        if c >= 0:
+            xs["par_opts"][t, :len(dev_opts[c])] = dev_opts[c]
+            xs["par_cost"][t] = cost_np[c]
+            xs["act"][t] = act_mask[r]
+        if succs[r]:
+            xs["succ"][t, :len(succs[r])] = succs[r]
+    # bad-row flags capture every NaN a live dispatch could reach; scrub
+    # the rest so no masked-out lane arithmetic can produce a NaN
+    np.nan_to_num(xs["own_cost"], copy=False)
+    np.nan_to_num(xs["par_cost"], copy=False)
+    if len(cache) >= _XS_CACHE_CAP:
+        cache.pop(next(iter(cache)))
+    cache[ckey] = xs
+    return xs
+
+
+def _scan_group(fg: FrozenGraph, order: Sequence[int],
+                layouts: Sequence[Layout], policy: str, *,
+                chunk: int = DEFAULT_CHUNK
+                ) -> Tuple[Dict[int, SimResult], List[int]]:
+    """Drive every lane through ``order`` with the compiled scan.
+
+    Returns ``(done, diverged)`` in the :data:`repro.core.replay.LockstepFn`
+    contract: ``done`` maps lane position -> schedule-free SimResult
+    (``system`` filled by the caller), ``diverged`` lists lane positions
+    whose heap keys broke monotonicity (state discarded).
+    """
+    _, jnp, enable_x64 = _jax()
+    eft = policy == "eft"
+    kinds = fg.kinds
+    smp_kid = kinds.index("smp") if "smp" in kinds else -1
+    pool_names, _, kind_pool = layouts[0]               # template-shared
+    P = len(pool_names)
+    lane_counts = [lay[1] for lay in layouts]
+    S = _bucket(max(max(c) for c in lane_counts), cap=1 << 30)
+    n = fg.n
+    L = len(layouts)
+
+    xs_np = _group_xs(fg, order, kind_pool)
+    kept: List[int] = []
+    diverged: List[int] = []
+    cols_mk: List[np.ndarray] = []
+    cols_busy: List[np.ndarray] = []
+    cols_seen: List[np.ndarray] = []
+    cols_place: List[np.ndarray] = []
+
+    with enable_x64():
+        xs = {k: jnp.asarray(v) for k, v in xs_np.items()}
+        kind_pool_j = jnp.asarray(kind_pool, dtype=jnp.int32)
+        run = _compiled_scan()
+        for lo in range(0, L, chunk):
+            lanes = list(range(lo, min(lo + chunk, L)))
+            B = _bucket(len(lanes), cap=chunk)
+            # pad lanes replicate the last real lane: finite, well-defined
+            # state whose results are simply dropped before assembly
+            padded = lanes + [lanes[-1]] * (B - len(lanes))
+            clocks = np.full((P, S, B), np.inf)
+            for li, pos in enumerate(padded):
+                for p, cnt in enumerate(lane_counts[pos]):
+                    clocks[p, :cnt, li] = 0.0
+            makespan, busy, seen, placement, div = run(
+                xs, jnp.asarray(clocks),
+                jnp.zeros((n + 1, B)),                      # ready (+dummy)
+                jnp.full((n, B), -1, dtype=jnp.int32),      # placement
+                jnp.zeros((P, B)),                          # busy
+                jnp.zeros((P, B), dtype=bool),              # seen
+                kind_pool_j, smp_kid, eft)
+            div = np.asarray(div)
+            for li, pos in enumerate(lanes):
+                if div[li]:
+                    diverged.append(pos)
+                else:
+                    kept.append(pos)
+                    cols_mk.append(np.asarray(makespan)[li:li + 1])
+                    cols_busy.append(np.asarray(busy)[:, li:li + 1])
+                    cols_seen.append(np.asarray(seen)[:, li:li + 1])
+                    cols_place.append(np.asarray(placement)[:, li:li + 1])
+
+    if not kept:
+        return {}, diverged
+    done = lane_results(
+        fg, pool_names, lane_counts, kept, policy,
+        np.concatenate(cols_mk),
+        np.concatenate(cols_busy, axis=1),
+        np.concatenate(cols_seen, axis=1),
+        np.concatenate(cols_place, axis=1).astype(np.int64))
+    return done, diverged
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
+                 policy: str = "availability", *,
+                 min_lockstep: int = MIN_LOCKSTEP,
+                 chunk: int = DEFAULT_CHUNK,
+                 stats: Optional[BatchStats] = None) -> List[SimResult]:
+    """Schedule-free :class:`SimResult` per system, in input order.
+
+    The jax tier of :func:`repro.core.batchsim.simulate_batch`: equivalent
+    to ``[simulate_fast(fg, s, policy) for s in systems]`` at
+    :data:`~repro.core.replay.JAX_RTOL` relative makespan/busy error with
+    identical placements, and ranking-stable under the documented
+    tie-break.  Grouping, reference-order replay and the per-lane exact
+    fallback are the shared :mod:`repro.core.replay` protocol; ``chunk``
+    caps the compiled lane-bucket width.
+    """
+    require_jax()
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk!r}")
+
+    def lockstep(fg, order, layouts, policy):
+        return _scan_group(fg, order, layouts, policy, chunk=chunk)
+
+    return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
+                            stats=stats, lockstep_fn=lockstep)

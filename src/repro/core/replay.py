@@ -1,0 +1,283 @@
+"""Order-replay machinery shared by the candidate-axis engines.
+
+Both lockstep backends (:mod:`repro.core.batchsim` — numpy;
+:mod:`repro.core.jaxsim` — a jit-compiled ``jax.lax.scan``) run the same
+protocol around their inner sweep:
+
+1. **Group** the candidate systems by *pool template* (pool names/kinds and
+   the kind→pool map; slot counts are free to vary inside a group) — lanes
+   in one group agree on which pool serves each device kind, so one
+   dispatch-target table drives every lane.
+2. **Replay** one *reference event order*, recorded by running the
+   highest-parallelism lane through the bit-identical
+   :func:`~repro.core.fastsim.simulate_fast` path (``order_out=``).
+3. **Validate** every other lane against the heap-key monotonicity
+   invariant (a lane's execution order equals its own heap order *iff* its
+   popped ``(ready_t, tie_break)`` keys strictly increase along the replay)
+   and **fall back** any diverged lane to a serial ``simulate_fast`` run —
+   the lane's lockstep state is discarded, never resumed, so correctness
+   does not depend on how late the divergence is caught.
+
+This module owns the protocol (grouping, reference selection, fallback,
+per-lane result assembly, the per-graph auxiliary constants) so the two
+backends can never disagree on it; each backend supplies only the inner
+``lockstep_fn`` that advances the stacked per-candidate state.
+
+It also owns the **engine equivalence tiers**: the exact engines
+(``fast``/``batch``) are pinned bit-identical to the reference object
+engine, while the jax engine is pinned at ``rtol``-level
+(:data:`JAX_RTOL` relative makespan error, ranking-stable with ties broken
+deterministically by candidate submission order).  :func:`sims_equivalent`
+and :func:`rankings_equivalent` are the single implementation of those
+contracts, used by the test suite and the fig6 benchmark asserts alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .devices import SystemConfig
+from .fastsim import FrozenGraph, pool_layout, simulate_fast
+from .simulator import SimResult
+
+# Below this many lanes per group the per-step dispatch overhead outweighs
+# the vectorisation win and simulate_fast per lane is faster.
+MIN_LOCKSTEP = 6
+
+#: Engine equivalence tiers: maximum relative makespan error vs the
+#: reference object engine.  ``0.0`` means bit-identical (``==`` on floats);
+#: the jax engine is relaxed to rtol because XLA owns its op scheduling.
+ENGINE_TOLERANCE: Mapping[str, float] = {
+    "reference": 0.0,
+    "fast": 0.0,
+    "batch": 0.0,
+    "jax": 1e-6,
+}
+
+#: The jax engine's tier (``ENGINE_TOLERANCE["jax"]``), importable by name.
+JAX_RTOL = ENGINE_TOLERANCE["jax"]
+
+# A layout as produced by fastsim.pool_layout: (names, counts, kind_pool).
+Layout = Tuple[List[str], List[int], List[int]]
+# A backend's inner sweep: (fg, order, layouts, policy) ->
+# ({lane position -> schedule-free SimResult with system=""}, [diverged
+# lane positions]).  Positions index the *layouts* sequence.
+LockstepFn = Callable[[FrozenGraph, Sequence[int], Sequence[Layout], str],
+                      Tuple[Dict[int, SimResult], List[int]]]
+
+
+@dataclasses.dataclass
+class BatchStats:
+    """Observability for one or more grouped-simulation calls.
+
+    ``lockstep_lanes`` counts candidates fully evaluated inside a lockstep
+    sweep; ``diverged_lanes`` fell back to ``simulate_fast`` after a heap
+    -order mismatch; ``small_group_lanes`` never entered lockstep (group
+    below ``min_lockstep``); ``reference_lanes`` drove a replayed order
+    (evaluated via the bit-identical full-record path).
+    """
+
+    groups: int = 0
+    lockstep_lanes: int = 0
+    diverged_lanes: int = 0
+    small_group_lanes: int = 0
+    reference_lanes: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# The grouping / replay / fallback protocol
+# ---------------------------------------------------------------------------
+
+
+def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
+                     policy: str, *, min_lockstep: int = MIN_LOCKSTEP,
+                     stats: Optional[BatchStats] = None,
+                     lockstep_fn: LockstepFn) -> List[SimResult]:
+    """Schedule-free :class:`SimResult` per system, in input order.
+
+    The shared outer loop of every candidate-axis engine: group systems by
+    pool template, run small groups through per-candidate
+    ``simulate_fast``, and hand each large group to ``lockstep_fn`` via
+    :func:`replay_group` (reference order + divergence fallback).
+    """
+    if policy not in ("availability", "eft"):
+        raise ValueError(f"unknown policy {policy!r}")
+    results: List[Optional[SimResult]] = [None] * len(systems)
+    groups: Dict[Tuple, List[int]] = {}
+    layouts: List[Layout] = []
+    for i, system in enumerate(systems):
+        names, counts, kind_pool = pool_layout(fg.kinds, system)
+        layouts.append((names, counts, kind_pool))
+        groups.setdefault((tuple(names), tuple(kind_pool)), []).append(i)
+
+    for lanes in groups.values():
+        if stats is not None:
+            stats.groups += 1
+        if len(lanes) < min_lockstep:
+            for i in lanes:
+                results[i] = simulate_fast(fg, systems[i], policy)
+            if stats is not None:
+                stats.small_group_lanes += len(lanes)
+            continue
+        for i, sim in zip(lanes, replay_group(
+                fg, [systems[i] for i in lanes],
+                [layouts[i] for i in lanes], policy, stats, lockstep_fn)):
+            results[i] = sim
+    return results  # type: ignore[return-value]
+
+
+def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
+                 layouts: Sequence[Layout], policy: str,
+                 stats: Optional[BatchStats],
+                 lockstep_fn: LockstepFn) -> List[SimResult]:
+    """One pool-template group: record the reference order, run the
+    backend's lockstep sweep over the remaining lanes, re-simulate diverged
+    lanes serially.
+
+    The reference lane is the most parallel hardware — its saturated order
+    is the one large-slot-count lanes overwhelmingly share (ties -> last
+    lane, matching "later candidates are usually bigger" sweep conventions).
+    """
+    totals = [sum(lay[1]) for lay in layouts]
+    ref = max(range(len(systems)), key=lambda i: (totals[i], i))
+    order: List[int] = []
+    results: List[Optional[SimResult]] = [None] * len(systems)
+    results[ref] = simulate_fast(fg, systems[ref], policy, order_out=order)
+    if stats is not None:
+        stats.reference_lanes += 1
+    lane_ids = [i for i in range(len(systems)) if i != ref]
+    done, diverged = lockstep_fn(fg, order,
+                                 [layouts[i] for i in lane_ids], policy)
+    for pos, sim in done.items():
+        i = lane_ids[pos]
+        results[i] = dataclasses.replace(sim, system=systems[i].name)
+    for pos in diverged:
+        i = lane_ids[pos]
+        results[i] = simulate_fast(fg, systems[i], policy)
+    if stats is not None:
+        stats.diverged_lanes += len(diverged)
+        stats.lockstep_lanes += len(done)
+    return results  # type: ignore[return-value]
+
+
+def graph_aux(fg: FrozenGraph, ci, rank, asets):
+    """Graph-only lockstep constants, memoised on the FrozenGraph (repeat
+    sweeps — hillclimbs, re-ranks — hit the same frozen payload many
+    times): the strictly-(creation_index, rank)-monotone tie-break scalar
+    per row, and the dense conditional-activation mask for vectorised
+    membership tests.  Dropped on pickling like ``_rt``.
+    """
+    aux = getattr(fg, "_batch_aux", None)
+    if aux is None:
+        n = fg.n
+        tb = [ci[i] * n + rank[i] for i in range(n)]
+        act_mask = np.zeros((n, len(fg.kinds)), dtype=bool)
+        for i in range(n):
+            for k in asets[i]:
+                act_mask[i, k] = True
+        aux = fg._batch_aux = (tb, act_mask)
+    return aux
+
+
+def lane_results(fg: FrozenGraph, pool_names: Sequence[str],
+                 lane_counts: Sequence[Sequence[int]],
+                 lanes: Sequence[int], policy: str,
+                 makespan: np.ndarray, busy: np.ndarray, seen: np.ndarray,
+                 placement: np.ndarray) -> Dict[int, SimResult]:
+    """Assemble per-lane schedule-free results from stacked state.
+
+    ``lanes[li]`` is the original lane position of local column ``li`` in
+    the lane-last state arrays (``makespan [L]``, ``busy/seen [P, L]``,
+    ``placement [n, L]``); ``lane_counts`` is indexed by *original*
+    position.  ``system`` is left empty for the caller
+    (:func:`replay_group`) to fill.
+    """
+    rt = fg._runtime()
+    uids, comp_rows = rt[0], rt[12]
+    kinds = fg.kinds
+    P = len(pool_names)
+    comp_arr = np.asarray(comp_rows, dtype=np.int64)
+    comp_uids = [uids[i] for i in comp_rows]
+    kinds_obj = np.asarray(kinds, dtype=object)
+    comp_place = placement[comp_arr]                   # [C, L]
+    done: Dict[int, SimResult] = {}
+    for li, pos in enumerate(lanes):
+        counts = lane_counts[pos]
+        kp = comp_place[:, li]
+        placed = kp >= 0
+        if placed.all():
+            placements = dict(zip(comp_uids, kinds_obj[kp].tolist()))
+        else:
+            placements = {u: kinds[k] for u, k, m
+                          in zip(comp_uids, kp.tolist(), placed.tolist()) if m}
+        done[pos] = SimResult(
+            makespan=float(makespan[li]), schedule=[],
+            busy={pool_names[p]: float(busy[p, li]) for p in range(P)
+                  if seen[p, li]},
+            pool_slots={pool_names[p]: counts[p] for p in range(P)},
+            placements=placements, policy=policy, system="")
+    return done
+
+
+# ---------------------------------------------------------------------------
+# Equivalence tiers
+# ---------------------------------------------------------------------------
+
+
+def makespans_close(a: float, b: float, tolerance: float) -> bool:
+    """Tier test for one makespan pair: exact ``==`` at tolerance 0, else
+    relative error ``|a - b| <= tolerance * max(|a|, |b|)``."""
+    if tolerance == 0.0:
+        return a == b
+    return abs(a - b) <= tolerance * max(abs(a), abs(b))
+
+
+def sims_equivalent(got: SimResult, ref: SimResult,
+                    tolerance: float = 0.0) -> bool:
+    """Whether ``got`` matches ``ref`` at the given engine tier.
+
+    Tolerance 0 (the exact engines) demands float equality on makespan and
+    every busy sum plus identical placements, pool layout and policy.  A
+    non-zero tolerance (the jax tier) relaxes *only the floats* to relative
+    error — placements and structure stay discrete and must match exactly.
+    """
+    if not (got.placements == ref.placements
+            and got.pool_slots == ref.pool_slots
+            and got.policy == ref.policy
+            and set(got.busy) == set(ref.busy)):
+        return False
+    if not makespans_close(got.makespan, ref.makespan, tolerance):
+        return False
+    return all(makespans_close(got.busy[p], ref.busy[p], tolerance)
+               for p in ref.busy)
+
+
+def rankings_equivalent(got: Sequence[str], ref: Sequence[str],
+                        ref_makespans: Mapping[str, float],
+                        tolerance: float = 0.0) -> bool:
+    """Ranking-stability test between two ranked name sequences.
+
+    Both sequences must rank the same candidate set.  At tolerance 0 the
+    orders must be identical.  At a non-zero tolerance, positions may
+    disagree only where the *reference* makespans of the two swapped
+    candidates are themselves within tolerance of each other — i.e. the
+    documented tie-break: candidates whose makespans agree to within the
+    tier are ties, and ties are broken deterministically by submission
+    order (the stable sort both rankings use), so any residual disagreement
+    between a sub-tolerance pair is a legal tie resolution and anything
+    larger is a real ranking error.
+    """
+    if list(got) == list(ref):
+        return True
+    if tolerance == 0.0 or sorted(got) != sorted(ref):
+        return False
+    for a, b in zip(got, ref):
+        if a != b and not makespans_close(ref_makespans[a], ref_makespans[b],
+                                          tolerance):
+            return False
+    return True

@@ -28,11 +28,14 @@ effects the coarse estimator deliberately ignores (memory/bus contention,
 cache state, measurement noise), exactly the fidelity gap the paper reports
 between its estimates and the real board.
 
-Three engines share these semantics and are pinned bit-identical by tests:
-this object engine (one estimate, full records, ``time_model`` hooks),
-:mod:`repro.core.fastsim` (flat arrays, one candidate per call — the sweep
-workhorse), and :mod:`repro.core.batchsim` (all candidates of one frozen
-graph in a lockstep batch — the sweep *throughput* engine).  Shared
+Four engines share these semantics (see ``docs/architecture.md`` for the
+decision table): this object engine (one estimate, full records,
+``time_model`` hooks), :mod:`repro.core.fastsim` (flat arrays, one
+candidate per call — the sweep workhorse), :mod:`repro.core.batchsim`
+(all candidates of one frozen graph in a lockstep batch — the sweep
+*throughput* engine), the first three pinned bit-identical by tests, and
+:mod:`repro.core.jaxsim` (the lockstep jit-compiled as a ``lax.scan`` —
+pinned at rtol level, ``repro.core.replay.ENGINE_TOLERANCE``).  Shared
 plumbing lives here: :func:`validate_pools` (the degenerate-candidate
 guard every engine runs before touching pool state) and
 :meth:`SimResult.without_schedule` (the schedule-free projection batch

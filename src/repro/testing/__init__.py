@@ -1,6 +1,8 @@
 # Test-support utilities that ship with the package (no external deps):
 # a deterministic fallback implementation of the hypothesis API surface the
-# test suite uses, installed by tests/conftest.py when hypothesis is absent.
+# test suite uses, installed by tests/conftest.py when hypothesis is absent,
+# and the shared synthetic workloads the engine tests and README doctest
+# both build on (imported lazily by consumers to keep this package light).
 from . import minihypothesis
 
-__all__ = ["minihypothesis"]
+__all__ = ["minihypothesis", "synth"]

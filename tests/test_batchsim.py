@@ -12,40 +12,16 @@ import hypothesis
 import hypothesis.strategies as st
 import pytest
 
-from repro.core import Candidate, Eligibility, Explorer, zynq_system
-from repro.core.augment import build_graph
+from repro.core import Eligibility, Explorer, zynq_system
 from repro.core.batchsim import BatchStats, simulate_batch
 from repro.core.devices import DevicePool, SharedResource, SystemConfig
 from repro.core.explore import _process_eval_chunk
 from repro.core.fastsim import FrozenGraph, simulate_fast
-from repro.core.hlsreport import KernelReport
 from repro.core.simulator import Simulator, validate_pools
 from repro.core.taskgraph import Task, TaskGraph
 from repro.core.trace import Trace, TraceEvent
-
-
-def synth_reports(kernel: str = "k", kind: str = "fpga:k"):
-    rep = KernelReport(kernel=kernel, device_kind=kind, compute_s=1e-4,
-                       dma_in_s=1e-5, dma_out_s=2e-5,
-                       resources={"dsp": 100.0, "bram_kb": 10.0, "lut": 1000.0})
-    return {(kernel, kind): rep}, rep
-
-
-def synth_trace(n, n_regions=4):
-    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
-                         elapsed_smp=1e-3 * (1 + (i % 3)),
-                         accesses=[((i % n_regions,), "inout", 1024)],
-                         devices=("fpga", "smp"))
-              for i in range(n)]
-    return Trace(events=events, wall_seconds=1.0)
-
-
-def frozen_for(tr, smp: bool):
-    reports, _ = synth_reports()
-    kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
-    graph = build_graph(tr, zynq_system("g", {"fpga:k": 1}), reports,
-                        Eligibility({"k": kinds}), smp_cost="mean")
-    return FrozenGraph.freeze(graph), graph
+from repro.testing.synth import (frozen_for, synth_candidates, synth_report,
+                                 synth_reports, synth_trace)
 
 
 def assert_batch_equals_fast(fg, systems, policy, **kw):
@@ -203,22 +179,10 @@ def test_zero_slot_pool_rejected_with_clear_error_by_every_engine():
 # ---------------------------------------------------------------------------
 
 
-def _candidates(rep, accs):
-    out = []
-    for n_acc in accs:
-        for smp in (False, True):
-            name = f"{n_acc}acc" + ("+smp" if smp else "")
-            kinds = ("fpga:k", "smp") if smp else ("fpga:k",)
-            out.append(Candidate(
-                name=name, system=zynq_system(name, {"fpga:k": n_acc}),
-                eligibility=Eligibility({"k": kinds}), fabric=[(rep, n_acc)]))
-    return out
-
-
 def test_explorer_batch_matches_fast_and_reference():
-    reports, rep = synth_reports()
+    reports, rep = synth_reports(), synth_report()
     tr = synth_trace(40)
-    cands = _candidates(rep, accs=range(1, 11))
+    cands = synth_candidates(range(1, 11), rep)
     ex = Explorer(tr, reports)
     batch = ex.explore(cands, top_k=2)
     fast = Explorer(tr, reports, batch=False).explore(cands, top_k=2)
@@ -243,9 +207,9 @@ def test_explorer_batch_matches_fast_and_reference():
 
 
 def test_explorer_batch_process_pool_identical():
-    reports, rep = synth_reports()
+    reports, rep = synth_reports(), synth_report()
     tr = synth_trace(36)
-    cands = _candidates(rep, accs=range(1, 9))
+    cands = synth_candidates(range(1, 9), rep)
     serial = Explorer(tr, reports).explore(cands)
     procs = Explorer(tr, reports, processes=2).explore(cands)
     procs_fast = Explorer(tr, reports, processes=2, batch=False).explore(cands)
@@ -255,12 +219,12 @@ def test_explorer_batch_process_pool_identical():
 
 
 def test_explorer_batch_guardrail():
-    reports, rep = synth_reports()
+    reports, rep = synth_reports(), synth_report()
     tr = synth_trace(4)
     with pytest.raises(ValueError, match="batch"):
         Explorer(tr, reports, fast=False, batch=True)
     # prune stays on the per-candidate path but must agree with batch
-    cands = _candidates(rep, accs=(1, 2, 3))
+    cands = synth_candidates((1, 2, 3), rep)
     full = Explorer(tr, reports).explore(cands)
     pruned = Explorer(tr, reports).explore(cands, prune=True, top_k=1)
     assert pruned.best_name == full.best_name
@@ -283,7 +247,7 @@ def test_worker_registry_protocol():
 
 
 def test_adaptive_chunk_size():
-    reports, _ = synth_reports()
+    reports = synth_reports()
     ex = Explorer(synth_trace(4), reports)
     # serial batch mode: whole sweep in one deterministic chunk
     assert ex._chunk_size(200, False, 0, True, 1) == 200

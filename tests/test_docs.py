@@ -1,0 +1,63 @@
+"""Documentation is load-bearing: broken links and stale quickstarts fail.
+
+Two checks, both also run by the CI docs job:
+
+* every intra-repo markdown link in ``README.md`` / ``ROADMAP.md`` /
+  ``docs/**`` resolves (file exists, ``#fragment`` matches a heading);
+* the README quickstart is executable — it is a doctest, so the code the
+  docs show is the code that runs (engine names, cache-counter repr,
+  ranking outputs pinned).
+
+The ISSUE-4 acceptance criteria are asserted structurally too: the
+architecture document exists, is linked from README and ROADMAP, and its
+decision table names all four engines with their exactness guarantees.
+"""
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_no_broken_intra_repo_links():
+    errors = []
+    for f in check_docs.doc_files(REPO):
+        errors.extend(check_docs.check_file(f))
+    assert not errors, "\n".join(errors)
+
+
+def test_readme_quickstart_doctest():
+    failures, tests = doctest.testfile(str(REPO / "README.md"),
+                                       module_relative=False)
+    assert tests > 0, "README quickstart lost its doctest examples"
+    assert failures == 0
+
+
+def test_architecture_doc_exists_and_is_linked():
+    arch = REPO / "docs" / "architecture.md"
+    assert arch.exists()
+    readme = (REPO / "README.md").read_text()
+    roadmap = (REPO / "ROADMAP.md").read_text()
+    assert "docs/architecture.md" in readme
+    assert "docs/architecture.md" in roadmap
+    text = arch.read_text()
+    # the decision table names all four engines with exactness guarantees
+    table = text[text.index("## The decision table"):]
+    for module in ("repro.core.simulator", "repro.core.fastsim",
+                   "repro.core.batchsim", "repro.core.jaxsim"):
+        assert module in table, f"decision table must name {module}"
+    assert re.search(r"bit-identical", table)
+    assert re.search(r"rtol tier", table)
+
+
+def test_readme_engine_matrix_names_every_engine():
+    readme = (REPO / "README.md").read_text()
+    for name in ("reference", "fast", "batch", "jax"):
+        assert f'`"{name}"`' in readme, f"engine matrix must list {name!r}"
+    for knob in ("processes=", "cache_dir=", "batch=", "jax_chunk="):
+        assert knob in readme, f"quickstarts must show the {knob} knob"
+    assert "--baseline" in readme, "the baseline gate workflow is documented"

@@ -1,0 +1,413 @@
+"""The jax scan engine's tier contract, and the exactness of everyone else.
+
+``repro.core.jaxsim`` is pinned at the relaxed equivalence tier
+(``JAX_RTOL`` relative makespan/busy error, discrete-identical placements,
+ranking-stable under the documented tie-break), while ``fastsim`` and
+``batchsim`` stay bit-identical to the reference object engine.  Both
+contracts live in ``repro.core.replay`` and both are enforced here — the
+regression half of this file exists so a future change can never silently
+launder rtol-level results into the exact engines (through the sim caches
+or otherwise).
+"""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core import Explorer, zynq_system
+from repro.core.batchsim import simulate_batch
+from repro.core.devices import DevicePool, SharedResource, SystemConfig
+from repro.core.explore import ENGINE_NAMES, CacheStats
+from repro.core.fastsim import FrozenGraph, simulate_fast
+from repro.core.jaxsim import have_jax, simulate_jax
+from repro.core.replay import (BatchStats, ENGINE_TOLERANCE, JAX_RTOL,
+                               makespans_close, rankings_equivalent,
+                               sims_equivalent)
+from repro.core.simulator import simulate
+from repro.core.taskgraph import Task, TaskGraph
+from repro.core.trace import Trace, TraceEvent
+from repro.testing.synth import (frozen_for, synth_candidates, synth_report,
+                                 synth_reports, synth_trace)
+
+needs_jax = pytest.mark.skipif(not have_jax(), reason="jax not installed")
+
+
+def assert_jax_tier(fg, systems, policy, **kw):
+    """Every lane within the jax tier of its own ``simulate_fast`` run."""
+    sims = simulate_jax(fg, systems, policy, **kw)
+    refs = [simulate_fast(fg, system, policy) for system in systems]
+    for sim, ref, system in zip(sims, refs, systems):
+        assert sim.schedule == []
+        assert sim.system == system.name and sim.policy == policy
+        assert sims_equivalent(sim, ref, ENGINE_TOLERANCE["jax"]), \
+            (system.name, sim.makespan, ref.makespan)
+        # the discrete halves of the contract are never relaxed
+        assert sim.placements == ref.placements
+        assert sim.pool_slots == ref.pool_slots
+    got = [s.name for _, s in sorted(
+        ((sim.makespan, i), systems[i]) for i, sim in enumerate(sims))]
+    want = [s.name for _, s in sorted(
+        ((ref.makespan, i), systems[i]) for i, ref in enumerate(refs))]
+    spans = {system.name: ref.makespan for system, ref in zip(systems, refs)}
+    assert rankings_equivalent(got, want, spans, JAX_RTOL)
+    return sims
+
+
+# ---------------------------------------------------------------------------
+# randomized tier equivalence: policies × conditional DMA × hetero slots
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def random_trace(draw):
+    n = draw(st.integers(4, 20))
+    n_regions = draw(st.integers(1, 5))
+    events = [TraceEvent(index=i, name="k", created_at=i * 1e-6,
+                         elapsed_smp=draw(st.floats(1e-4, 5e-3)),
+                         accesses=[((i % n_regions,), "inout", 512)],
+                         devices=("fpga", "smp"))
+              for i in range(n)]
+    return Trace(events=events, wall_seconds=1.0)
+
+
+@needs_jax
+@hypothesis.given(random_trace(), st.booleans(),
+                  st.sampled_from(["availability", "eft"]),
+                  st.lists(st.integers(1, 12), min_size=2, max_size=8))
+@hypothesis.settings(deadline=None, max_examples=8)
+def test_jax_tier_on_augmented_graphs(tr, smp, policy, slot_counts):
+    """±smp exercises the conditional per-lane masking both ways; random
+    slot lists mix saturated lanes (lockstep) with contended ones (the
+    divergence fallback)."""
+    fg, _ = frozen_for(tr, smp)
+    systems = [zynq_system(f"{n}acc{i}", {"fpga:k": n})
+               for i, n in enumerate(slot_counts)]
+    assert_jax_tier(fg, systems, policy, min_lockstep=2)
+
+
+@needs_jax
+@hypothesis.given(st.integers(2, 20), st.integers(1, 3), st.integers(1, 3),
+                  st.sampled_from(["availability", "eft"]))
+@hypothesis.settings(deadline=None, max_examples=8)
+def test_jax_tier_on_bare_dags_with_two_pools(n, ca, cb, policy):
+    """Hand DAGs with two device kinds and counts varying on both pools —
+    heterogeneous slot counts beyond the single-accelerator shape."""
+    g = TaskGraph()
+    uids = []
+    for i in range(n):
+        kinds = ("a", "b") if i % 3 else ("b", "a")
+        t = Task(uid=g.new_uid(), name=f"t{i}", devices=kinds,
+                 costs={"a": 0.5 + (i % 5) * 0.25, "b": 1.0 + (i % 3) * 0.5},
+                 creation_index=i, meta={"role": "compute"})
+        g.add_task(t, infer_deps=False)
+        uids.append(t.uid)
+        if i >= 1 and i % 2:
+            g.add_edge(uids[i - 1], t.uid)
+    fg = FrozenGraph.freeze(g)
+    systems = [SystemConfig(name=f"s{i}-{j}",
+                            pools=[DevicePool("pa", ("a",), i),
+                                   DevicePool("pb", ("b",), j)],
+                            shared=[SharedResource("x", 1)])
+               for i in range(1, ca + 1) for j in range(1, cb + 1)]
+    assert_jax_tier(fg, systems, policy, min_lockstep=2)
+
+
+@needs_jax
+def test_jax_divergent_lanes_fall_back_exactly():
+    """A wide slot ramp forces event-order divergence; diverged lanes must
+    be flagged by the in-scan monotonicity check and re-simulated through
+    the exact path, with the whole batch staying inside the tier."""
+    fg, _ = frozen_for(synth_trace(40), smp=True)
+    systems = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in range(1, 25)]
+    stats = BatchStats()
+    assert_jax_tier(fg, systems, "availability", min_lockstep=2, stats=stats)
+    assert stats.groups == 1 and stats.reference_lanes == 1
+    assert stats.diverged_lanes > 0, "ramp should force exact fallbacks"
+    assert stats.lockstep_lanes > 0, "saturated lanes should stay in the scan"
+    assert (stats.lockstep_lanes + stats.diverged_lanes
+            + stats.reference_lanes) == len(systems)
+    # diverged lanes come from the exact path: bit-identical, not just close
+    sims = simulate_jax(fg, systems, "availability", min_lockstep=2)
+    for sim, system in zip(sims, systems):
+        if sim.makespan == simulate_fast(fg, system, "availability").makespan:
+            continue
+        pytest.fail(f"{system.name}: fallback lane not bit-identical")
+
+
+@needs_jax
+def test_jax_chunking_is_invariant():
+    """Chunk width is a perf knob, never a semantics knob: every chunking
+    of the lane axis yields the same results."""
+    fg, _ = frozen_for(synth_trace(20), smp=False)
+    systems = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in range(1, 13)]
+    base = simulate_jax(fg, systems, "availability", min_lockstep=2)
+    for chunk in (2, 3, 8, 64):
+        got = simulate_jax(fg, systems, "availability", min_lockstep=2,
+                           chunk=chunk)
+        assert [s.makespan for s in got] == [s.makespan for s in base]
+        assert [s.placements for s in got] == [s.placements for s in base]
+
+
+@needs_jax
+def test_jax_rejects_unknown_policy():
+    fg, _ = frozen_for(synth_trace(4), smp=False)
+    with pytest.raises(ValueError, match="policy"):
+        simulate_jax(fg, [zynq_system("s", {"fpga:k": 1})], "heft")
+
+
+@needs_jax
+def test_jax_pure_smp_lanes_skip_inactive_dma_rows():
+    """A pool template with no accelerator (and no DMA resources) forces
+    every compute task onto the SMP, so every DMA row is conditionally
+    inactive: the exact engines evaluate this fine, and so must the scan —
+    row validity is runtime state, never an eager check (regression for
+    the eager `_validate_rows` bug)."""
+    fg, _ = frozen_for(synth_trace(24), smp=True)
+    systems = [SystemConfig(name=f"smp{i}",
+                            pools=[DevicePool("smp", ("smp",), i)],
+                            shared=[SharedResource("submit", 1)])
+               for i in range(1, 9)]
+    sims = simulate_jax(fg, systems, "availability", min_lockstep=2)
+    for sim, system in zip(sims, systems):
+        ref = simulate_fast(fg, system, "availability")
+        assert sim.makespan == ref.makespan
+        assert sim.placements == ref.placements
+
+
+@needs_jax
+def test_jax_raises_reference_error_on_live_bad_dispatch():
+    """A row the reference engine raises on (no compatible pool) must
+    surface the same error from the scan — via the exact fallback."""
+    g = TaskGraph()
+    for i in range(10):
+        kinds = ("a",) if i != 5 else ("gpu",)
+        g.add_task(Task(uid=g.new_uid(), name=f"t{i}", devices=kinds,
+                        costs={kinds[0]: 1.0}, creation_index=i,
+                        meta={"role": "compute"}), infer_deps=False)
+    fg = FrozenGraph.freeze(g)
+    systems = [SystemConfig(name=f"s{i}", pools=[DevicePool("pa", ("a",), i)],
+                            shared=[SharedResource("x", 1)])
+               for i in range(1, 9)]
+    with pytest.raises(RuntimeError, match="no compatible pool"):
+        simulate_jax(fg, systems, "availability", min_lockstep=2)
+
+
+# ---------------------------------------------------------------------------
+# the tolerance tier machinery itself
+# ---------------------------------------------------------------------------
+
+
+def test_engine_tolerance_tiers():
+    """The exact engines are pinned at tolerance 0 — the tier table is the
+    contract the equivalence tests (and fig6 asserts) read, so an rtol
+    sneaking into fastsim/batchsim must fail here first."""
+    assert ENGINE_TOLERANCE["reference"] == 0.0
+    assert ENGINE_TOLERANCE["fast"] == 0.0
+    assert ENGINE_TOLERANCE["batch"] == 0.0
+    assert ENGINE_TOLERANCE["jax"] == JAX_RTOL > 0.0
+
+
+def test_makespans_close_tiers():
+    assert makespans_close(1.0, 1.0, 0.0)
+    assert not makespans_close(1.0, 1.0 + 1e-12, 0.0)   # exact means exact
+    assert makespans_close(1.0, 1.0 + 5e-7, 1e-6)
+    assert not makespans_close(1.0, 1.0 + 5e-6, 1e-6)
+
+
+def test_sims_equivalent_relaxes_floats_only():
+    ref = simulate_fast(*_one_sim())
+    close = _replace_makespan(ref, ref.makespan * (1 + 5e-7))
+    far = _replace_makespan(ref, ref.makespan * (1 + 5e-5))
+    assert sims_equivalent(ref, ref, 0.0)
+    assert not sims_equivalent(close, ref, 0.0)
+    assert sims_equivalent(close, ref, JAX_RTOL)
+    assert not sims_equivalent(far, ref, JAX_RTOL)
+    # discrete mismatches fail at every tier
+    import dataclasses
+    flipped = dataclasses.replace(
+        ref, placements={u: "smp" for u in ref.placements})
+    if ref.placements:
+        assert not sims_equivalent(flipped, ref, JAX_RTOL)
+
+
+def _one_sim():
+    fg, _ = frozen_for(synth_trace(8), smp=True)
+    return fg, zynq_system("s", {"fpga:k": 2}), "availability"
+
+
+def _replace_makespan(sim, value):
+    import dataclasses
+    return dataclasses.replace(sim, makespan=value)
+
+
+def test_rankings_equivalent_tie_break():
+    spans = {"a": 1.0, "b": 1.0 + 1e-8, "c": 2.0}
+    assert rankings_equivalent(["a", "b", "c"], ["a", "b", "c"], spans, 0.0)
+    # a sub-tolerance swap is a legal tie resolution...
+    assert rankings_equivalent(["b", "a", "c"], ["a", "b", "c"], spans,
+                               JAX_RTOL)
+    # ...but never at the exact tier, and never across a real gap
+    assert not rankings_equivalent(["b", "a", "c"], ["a", "b", "c"], spans,
+                                   0.0)
+    assert not rankings_equivalent(["c", "b", "a"], ["a", "b", "c"], spans,
+                                   JAX_RTOL)
+    # and the two rankings must rank the same candidate set
+    assert not rankings_equivalent(["a", "b"], ["a", "c"], spans, JAX_RTOL)
+
+
+# ---------------------------------------------------------------------------
+# regression: exact engines stay exact (no silent rtol leak)
+# ---------------------------------------------------------------------------
+
+
+def test_exact_engines_still_bit_identical():
+    """`fast` and `batch` are pinned with `==`, not rtol: this is the
+    canary that fails if anyone relaxes the exact engines' assertions."""
+    tr = synth_trace(24)
+    for smp in (False, True):
+        fg, graph = frozen_for(tr, smp)
+        for policy in ("availability", "eft"):
+            systems = [zynq_system(f"{n}acc", {"fpga:k": n})
+                       for n in range(1, 9)]
+            batch = simulate_batch(fg, systems, policy, min_lockstep=2)
+            for sim, system in zip(batch, systems):
+                fast = simulate_fast(fg, system, policy)
+                ref = simulate(graph, system, policy=policy)
+                assert fast.makespan == ref.makespan       # bit-identity,
+                assert sim.makespan == ref.makespan        # not rtol
+                assert fast.busy == ref.busy == sim.busy
+                assert fast.placements == ref.placements == sim.placements
+
+
+@needs_jax
+def test_jax_tier_never_leaks_into_exact_sim_cache(tmp_path):
+    """A jax-tier result persisted to the shared on-disk store must never
+    satisfy an exact engine's lookup: the sim-cache key is namespaced by
+    tier, so the exact sweep recomputes and stays bit-identical."""
+    reports, rep = synth_reports(), synth_report()
+    tr = synth_trace(24)
+    cands = synth_candidates(range(1, 7), rep)
+    cache_dir = str(tmp_path / "store")
+    jaxr = Explorer(tr, reports, engine="jax",
+                    cache_dir=cache_dir).explore(cands)
+    exact = Explorer(tr, reports, engine="batch",
+                     cache_dir=cache_dir).explore(cands)
+    # graphs are exact artifacts and ARE shared across tiers
+    assert exact.cache["disk_hits"] >= 1
+    # ...but every exact makespan must equal the reference float-for-float
+    ref = Explorer(tr, reports, engine="fast").explore(cands)
+    assert [(o.name, o.makespan_s) for o in exact.ranked] == \
+        [(o.name, o.makespan_s) for o in ref.ranked]
+    # and the jax sweep agrees with the exact one under the tie-break
+    spans = {o.name: o.makespan_s for o in ref.ranked}
+    assert rankings_equivalent([o.name for o in jaxr.ranked],
+                               [o.name for o in ref.ranked], spans, JAX_RTOL)
+
+
+@needs_jax
+def test_exact_sim_cache_serves_jax_reads(tmp_path):
+    """Tier blocking is one-directional: a warm *exact* store must serve a
+    jax re-rank (bit-exact trivially satisfies rtol) — only rtol entries
+    feeding exact lookups is forbidden."""
+    reports, rep = synth_reports(), synth_report()
+    tr = synth_trace(24)
+    cands = synth_candidates(range(1, 7), rep)
+    cache_dir = str(tmp_path / "store")
+    Explorer(tr, reports, engine="batch", cache_dir=cache_dir).explore(cands)
+    jaxr = Explorer(tr, reports, engine="jax",
+                    cache_dir=cache_dir).explore(cands)
+    # every sim lookup read through to the exact entries — no graph builds,
+    # no scan runs, just re-ranking from disk
+    assert jaxr.cache["disk_hits"] >= len(cands)
+    assert jaxr.cache["eval_misses"] == len(cands)
+    exact = Explorer(tr, reports, engine="fast").explore(cands)
+    assert [(o.name, o.makespan_s) for o in jaxr.ranked] == \
+        [(o.name, o.makespan_s) for o in exact.ranked]
+
+
+# ---------------------------------------------------------------------------
+# explorer wiring: engine names, jax dispatch, guardrails
+# ---------------------------------------------------------------------------
+
+
+def test_engine_names_and_validation():
+    reports = synth_reports()
+    tr = synth_trace(4)
+    assert ENGINE_NAMES == ("reference", "fast", "batch", "jax")
+    with pytest.raises(ValueError) as ei:
+        Explorer(tr, reports, engine="heft")
+    # the error names every valid engine (the "falls through" fix)
+    for name in ENGINE_NAMES:
+        assert repr(name) in str(ei.value)
+    # engine= overrides the legacy booleans
+    assert Explorer(tr, reports, engine="reference", fast=True).fast is False
+    assert Explorer(tr, reports, engine="fast").batch is False
+    assert Explorer(tr, reports, engine="batch").batch is True
+    # legacy spellings resolve to engine names
+    assert Explorer(tr, reports, fast=False).engine == "reference"
+    assert Explorer(tr, reports, batch=False).engine == "fast"
+    assert Explorer(tr, reports).engine == "batch"
+
+
+@needs_jax
+def test_explorer_jax_matches_batch_and_replays_topk():
+    reports, rep = synth_reports(), synth_report()
+    tr = synth_trace(30)
+    cands = synth_candidates(range(1, 9), rep)
+    jaxr = Explorer(tr, reports, engine="jax").explore(cands, top_k=2)
+    batch = Explorer(tr, reports, engine="batch").explore(cands, top_k=2)
+    spans = {o.name: o.makespan_s for o in batch.ranked}
+    assert rankings_equivalent([o.name for o in jaxr.ranked],
+                               [o.name for o in batch.ranked], spans,
+                               JAX_RTOL)
+    # top-k winners are replayed through the exact full-record path
+    winners = [o.name for o in jaxr.ranked[:2]]
+    for name, est in jaxr.estimates.items():
+        assert bool(est.sim.schedule) == (name in winners)
+
+
+@needs_jax
+def test_explorer_jax_rejects_processes():
+    with pytest.raises(ValueError, match="jax"):
+        Explorer(synth_trace(4), synth_reports(), engine="jax", processes=2)
+
+
+@needs_jax
+def test_bad_chunk_values_fail_fast():
+    """Non-positive chunk widths get a clear ValueError at the API
+    boundary — never an opaque range() crash or None-poisoned caches."""
+    fg, _ = frozen_for(synth_trace(8), smp=False)
+    systems = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in range(1, 9)]
+    for bad in (0, -4):
+        with pytest.raises(ValueError, match="chunk"):
+            simulate_jax(fg, systems, chunk=bad)
+        with pytest.raises(ValueError, match="jax_chunk"):
+            Explorer(synth_trace(4), synth_reports(), engine="jax",
+                     jax_chunk=bad)
+    # inapplicable knobs are rejected, not silently ignored
+    with pytest.raises(ValueError, match="jax_chunk"):
+        Explorer(synth_trace(4), synth_reports(), engine="batch",
+                 jax_chunk=16)
+
+
+@needs_jax
+def test_scan_inputs_memoised_on_frozen_graph():
+    """Repeat sweeps over the same payload reuse the per-step scan inputs
+    (and pickling drops them, like `_rt`)."""
+    import pickle
+    fg, _ = frozen_for(synth_trace(12), smp=False)
+    systems = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in range(1, 9)]
+    first = simulate_jax(fg, systems, "availability", min_lockstep=2)
+    cache = fg._jax_xs
+    assert len(cache) == 1
+    xs_id = id(next(iter(cache.values())))
+    again = simulate_jax(fg, systems, "availability", min_lockstep=2)
+    assert id(next(iter(fg._jax_xs.values()))) == xs_id   # reused, not rebuilt
+    assert [s.makespan for s in again] == [s.makespan for s in first]
+    assert not hasattr(pickle.loads(pickle.dumps(fg)), "_jax_xs")
+
+
+def test_cache_stats_repr_has_disk_counters():
+    s = CacheStats(graph_hits=3, graph_misses=1, eval_hits=7, eval_misses=2,
+                   disk_hits=5, disk_misses=4)
+    r = repr(s)
+    assert "disk 5h/4m" in r and "graph 3h/1m" in r and "eval 7h/2m" in r

@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Intra-repo documentation link checker (CI docs job + tier-1 test).
+
+Scans the repo's markdown documentation (``README.md``, ``ROADMAP.md``,
+``docs/**/*.md``, ...) for markdown links and verifies that every
+*relative* target resolves: the file exists, and when the link carries a
+``#fragment`` into a markdown file, a heading with that GitHub-style slug
+exists in the target.  External links (``http(s)://``, ``mailto:``) are
+out of scope — CI must not depend on the network.
+
+Exit status is the number of broken links; each is printed as
+``file:line: broken link (target)`` so editors can jump straight to it.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Iterable, List, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+# [text](target) — skips images' leading ! by matching it away, ignores
+# in-code backticked brackets well enough for our docs (fenced blocks are
+# stripped before matching).
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^(```|~~~)")
+
+
+def doc_files(root: Path = REPO_ROOT) -> List[Path]:
+    """The markdown set the repo treats as documentation."""
+    files = sorted(root.glob("*.md"))
+    docs = root / "docs"
+    if docs.is_dir():
+        files += sorted(docs.rglob("*.md"))
+    return files
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading line (good enough for ours):
+    strip markdown emphasis/code markers, lowercase, drop everything but
+    word characters, spaces and hyphens, then hyphenate spaces."""
+    text = heading.strip().lstrip("#").strip()
+    text = re.sub(r"[`*_]", "", text)
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return re.sub(r" +", "-", text.strip())
+
+
+def heading_slugs(path: Path) -> List[str]:
+    slugs: List[str] = []
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+        elif not in_fence and line.startswith("#"):
+            slugs.append(github_slug(line))
+    return slugs
+
+
+def iter_links(path: Path) -> Iterable[Tuple[int, str]]:
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), start=1):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: Path) -> List[str]:
+    errors: List[str] = []
+    for lineno, target in iter_links(path):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):    # URL scheme
+            continue
+        ref, _, frag = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if not dest.exists():
+            errors.append(f"{path.relative_to(REPO_ROOT)}:{lineno}: "
+                          f"broken link ({target}): no such file")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in heading_slugs(dest):
+                errors.append(f"{path.relative_to(REPO_ROOT)}:{lineno}: "
+                              f"broken link ({target}): no heading "
+                              f"#{frag} in {dest.name}")
+    return errors
+
+
+def main(argv: List[str] = ()) -> int:
+    files = [Path(a).resolve() for a in argv] or doc_files()
+    errors: List[str] = []
+    for f in files:
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
