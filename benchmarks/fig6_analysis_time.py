@@ -100,9 +100,9 @@ def _sweep_rows(trace, reports, a9, count: int,
     """Tentpole measurement: the candidate-axis engines vs the
     per-candidate fast path vs the PR-1 cached path on one big batch.
 
-    Eight engines over the same candidates, each fresh-Explorer (so the
-    in-memory caches start cold), best-of-``reps`` to tame this box's
-    scheduler jitter:
+    Nine engine configurations over the same candidates, each
+    fresh-Explorer (so the in-memory caches start cold), best-of-``reps``
+    to tame this box's scheduler jitter:
 
     * ``pr1``         — PR-1 path: reference object simulator, full
       schedules (also the machine-speed yardstick, see ``PR2_PR1_S``).
@@ -122,12 +122,21 @@ def _sweep_rows(trace, reports, a9, count: int,
       ``jax_compile_seconds``).
     * ``jaxc``        — same engine with 16-lane vmap-style chunking (the
       compile-cache-friendly bucket shape for very large sweeps).
+    * ``batchw``      — repeat sweep with a *warm order library*: a fresh
+      Explorer (cold graph/sim caches — every candidate re-simulates)
+      sharing the ``ReplayLibrary`` a priming sweep populated, so every
+      lane routes straight to its remembered dispatch order — no serial
+      reference run, no diverge-detect-resimulate cycle, zero serial
+      fallbacks (asserted).
 
     ``sweep_speedup`` stays pr1-over-best; the batch target is asserted
-    against the PR-2 trajectory at equal machine speed; the jax rows must
-    rank identically to the batch engine under the documented rtol
-    tie-break (``repro.core.replay.rankings_equivalent``).
+    against the PR-2 trajectory at equal machine speed; the warm-library
+    row must clear ≥1.3× the cold batch throughput (paired per round, so
+    machine drift cancels); the jax rows must rank identically to the
+    batch engine under the documented rtol tie-break
+    (``repro.core.replay.rankings_equivalent``).
     """
+    from repro.core import ReplayLibrary
     from repro.core.replay import JAX_RTOL, rankings_equivalent
 
     rows: List[Tuple[str, float, str]] = []
@@ -144,6 +153,11 @@ def _sweep_rows(trace, reports, a9, count: int,
     mk(engine="jax").explore(cands)
     jax_compile_s = time.perf_counter() - t0
     mk(engine="jax", jax_chunk=16).explore(cands)
+    # prime the shared order library outside the timed rounds: one cold
+    # discovery sweep records every lane's dispatch order + signature, so
+    # the `batchw` rows measure a fully warm repeat sweep
+    warm_lib = ReplayLibrary()
+    mk(order_library=warm_lib).explore(cands)
 
     # round-robin the engine configurations across measurement rounds so
     # machine-speed drift (frequency scaling, neighbours) hits every engine
@@ -157,6 +171,7 @@ def _sweep_rows(trace, reports, a9, count: int,
         "disk": dict(cache_dir=cache_dir),
         "jax": dict(engine="jax"),
         "jaxc": dict(engine="jax", jax_chunk=16),
+        "batchw": dict(order_library=warm_lib),
     }
     rounds = {name: (1 if smoke else 3) for name in cfgs}
     rounds["pr1"] = 1 if smoke else 2          # the expensive yardstick
@@ -178,15 +193,15 @@ def _sweep_rows(trace, reports, a9, count: int,
                 best[name] = dt
     pr1_s, fast_s, batch_s = best["pr1"], best["fast"], best["batch"]
     fastp_s, batchp_s, disk_s = best["fastp"], best["batchp"], best["disk"]
-    jax_s, jaxc_s = best["jax"], best["jaxc"]
+    jax_s, jaxc_s, batchw_s = best["jax"], best["jaxc"], best["batchw"]
     pr1, fast, batch = res["pr1"], res["fast"], res["batch"]
     fastp, batchp, disk = res["fastp"], res["batchp"], res["disk"]
-    jaxr, jaxcr = res["jax"], res["jaxc"]
-    batch_ex, jax_ex = exs["batch"], exs["jax"]
+    jaxr, jaxcr, batchw = res["jax"], res["jaxc"], res["batchw"]
+    batch_ex, jax_ex, warm_ex = exs["batch"], exs["jax"], exs["batchw"]
 
     key = lambda r: [(o.name, o.makespan_s) for o in r.ranked]
     assert key(pr1) == key(fast) == key(batch) == key(fastp) \
-        == key(batchp) == key(disk), \
+        == key(batchp) == key(disk) == key(batchw), \
         "every exact engine must produce the bit-identical ranking"
     spans = {o.name: o.makespan_s for o in batch.ranked}
     names = lambda r: [o.name for o in r.ranked]
@@ -211,9 +226,15 @@ def _sweep_rows(trace, reports, a9, count: int,
     batch_vs_pr2_fast = max(paired) if paired else \
         (PR2_FAST_SERIAL_S * speed_scale) / batch_best
     sweep_speedup = pr1_s / min(fast_s, batch_s, fastp_s, batchp_s, disk_s,
-                                jax_s, jaxc_s)
+                                jax_s, jaxc_s, batchw_s)
+    # warm-vs-cold paired within a round (same machine conditions), best
+    # round taken — the order-library win at equal machine speed
+    wpaired = [rd["batch"] / rd["batchw"] for rd in per_round
+               if "batch" in rd and "batchw" in rd]
+    warm_vs_cold = max(wpaired) if wpaired else batch_s / batchw_s
     bstats = batch_ex.batch_stats.as_dict()
     jstats = jax_ex.batch_stats.as_dict()
+    wstats = warm_ex.batch_stats.as_dict()
     rows.append(("fig6/sweep_pr1_cached", pr1_s * 1e6,
                  f"candidates={nc},seconds={pr1_s:.3f},"
                  f"throughput={nc / pr1_s:.0f}cand_per_s"))
@@ -224,7 +245,17 @@ def _sweep_rows(trace, reports, a9, count: int,
                  f"candidates={nc},seconds={batch_s:.3f},"
                  f"speedup={pr1_s / batch_s:.1f}x,"
                  f"lockstep={bstats['lockstep_lanes']},"
-                 f"diverged={bstats['diverged_lanes']}"))
+                 f"diverged={bstats['diverged_lanes']},"
+                 f"rescued={bstats['rescued_lanes']},"
+                 f"serialfb={bstats['serial_fallback_lanes']}"))
+    rows.append(("fig6/sweep_batch_warm", batchw_s * 1e6,
+                 f"candidates={nc},seconds={batchw_s:.3f},"
+                 f"speedup={pr1_s / batchw_s:.1f}x,"
+                 f"vs_cold={warm_vs_cold:.2f}x,"
+                 f"orderhits={wstats['order_hits']},"
+                 f"pinned={wstats['order_pinned_lanes']},"
+                 f"diverged={wstats['diverged_lanes']},"
+                 f"serialfb={wstats['serial_fallback_lanes']}"))
     rows.append(("fig6/sweep_fast_procs", fastp_s * 1e6,
                  f"candidates={nc},seconds={fastp_s:.3f},"
                  f"speedup={pr1_s / fastp_s:.1f}x,workers=2"))
@@ -259,6 +290,7 @@ def _sweep_rows(trace, reports, a9, count: int,
         "sweep_pr1_cached_seconds": pr1_s,
         "sweep_fast_serial_seconds": fast_s,
         "sweep_batch_serial_seconds": batch_s,
+        "sweep_batch_warm_seconds": batchw_s,
         "sweep_fast_procs_seconds": fastp_s,
         "sweep_batch_procs_seconds": batchp_s,
         "sweep_disk_rerank_seconds": disk_s,
@@ -268,18 +300,30 @@ def _sweep_rows(trace, reports, a9, count: int,
         "sweep_speedup": sweep_speedup,
         "sweep_fast_serial_speedup": pr1_s / fast_s,
         "sweep_disk_rerank_speedup": pr1_s / disk_s,
+        "sweep_batch_warm_vs_cold_speedup": warm_vs_cold,
         "candidates_per_sec_pr1": nc / pr1_s,
         "candidates_per_sec_fast": nc / min(fast_s, fastp_s),
         "candidates_per_sec_batch": nc / batch_best,
+        "candidates_per_sec_batch_warm": nc / batchw_s,
         "candidates_per_sec_jax": nc / min(jax_s, jaxc_s),
         "batch_vs_pr2_fast_speedup": batch_vs_pr2_fast,
         "fast_procs_vs_serial_speedup": fast_s / fastp_s,
         "sweep_batch_stats": bstats,
+        "sweep_batch_warm_stats": wstats,
         "sweep_jax_stats": jstats,
         "sweep_cache_fast": dict(fast.cache),
         "sweep_cache_disk_rerank": dict(disk.cache),
     })
+    assert wstats["serial_fallback_lanes"] == 0, \
+        f"a warm order library must leave no serial-fallback lane: {wstats}"
+    assert wstats["reference_lanes"] == 0, \
+        f"a warm order library must skip the serial reference run: {wstats}"
+    assert wstats["order_hits"] > 0, wstats
     if not smoke:
+        assert warm_vs_cold >= 1.3, \
+            f"warm order-library sweep must clear >=1.3x the cold batch " \
+            f"throughput at equal machine speed (got {warm_vs_cold:.2f}x: " \
+            f"warm {batchw_s:.3f}s vs cold {batch_s:.3f}s)"
         assert fastp_s < fast_s, \
             f"processes=2 must beat serial on the fast path (PR-2 " \
             f"regression): procs {fastp_s:.3f}s vs serial {fast_s:.3f}s"

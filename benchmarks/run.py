@@ -8,11 +8,15 @@ the top-level driver into bench_output.txt.
 ``--json [PATH]`` additionally writes a machine-readable perf-trajectory
 artifact (default ``BENCH_simulator.json`` at the repo root): every CSV row
 plus the fig6 sweep metrics — candidates/sec for each engine (including the
-``sweep_batch_*`` lockstep and ``sweep_jax_*`` compiled-scan rows), cache
-hit rates, fast-vs-reference and disk-rerank speedups — so future PRs can
-diff the numbers instead of eyeballing logs.  ``--baseline PATH`` turns the run into a regression gate:
+``sweep_batch_*`` lockstep rows — cold and ``sweep_batch_warm``, the
+repeat sweep over a warm dispatch-order library with its rescue counters —
+and the ``sweep_jax_*`` compiled-scan rows), cache hit rates,
+fast-vs-reference and disk-rerank speedups — so future PRs can diff the
+numbers instead of eyeballing logs.  ``--baseline PATH`` turns the run into a regression gate:
 every throughput-like metric recorded in the baseline artifact is compared
-against this run and the process exits non-zero when any drops more than
+against this run (the warm-sweep throughput and its
+``sweep_batch_warm_vs_cold_speedup`` ratio are gated like every other
+``sweep_*`` metric) and the process exits non-zero when any drops more than
 20%.  ``--only fig6`` (etc.) restricts the run; CI uses ``--only fig6
 --smoke`` as the smoke invocation.
 """

@@ -14,7 +14,8 @@ from .simulator import (ScheduledTask, SimResult, Simulator, simulate,
                         validate_pools)
 from .fastsim import FrozenGraph, freeze_graph, simulate_each, simulate_fast
 from .batchsim import BatchStats, simulate_batch
-from .replay import (ENGINE_TOLERANCE, JAX_RTOL, rankings_equivalent,
+from .replay import (ENGINE_TOLERANCE, JAX_RTOL, MAX_RESCUE_ROUNDS,
+                     ReplayLibrary, order_valid, rankings_equivalent,
                      sims_equivalent)
 from .jaxsim import have_jax, simulate_jax
 from .diskcache import DiskCache, trace_fingerprint
@@ -38,7 +39,8 @@ __all__ = [
     "ScheduledTask", "SimResult", "Simulator", "simulate", "validate_pools",
     "FrozenGraph", "freeze_graph", "simulate_each", "simulate_fast",
     "BatchStats", "simulate_batch",
-    "ENGINE_TOLERANCE", "JAX_RTOL", "rankings_equivalent", "sims_equivalent",
+    "ENGINE_TOLERANCE", "JAX_RTOL", "MAX_RESCUE_ROUNDS", "ReplayLibrary",
+    "order_valid", "rankings_equivalent", "sims_equivalent",
     "have_jax", "simulate_jax",
     "DiskCache", "trace_fingerprint",
     "PerfEstimate", "contention_time_model", "estimate", "reference_run",

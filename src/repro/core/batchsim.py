@@ -59,7 +59,8 @@ import numpy as np
 
 from .devices import SystemConfig
 from .fastsim import FrozenGraph, simulate_fast  # noqa: F401 — re-export
-from .replay import (BatchStats, MIN_LOCKSTEP, graph_aux, lane_results,
+from .replay import (BatchStats, MAX_RESCUE_ROUNDS, MIN_LOCKSTEP,
+                     RESCUE_MIN, ReplayLibrary, graph_aux, lane_results,
                      simulate_grouped)
 from .simulator import SimResult
 
@@ -72,7 +73,10 @@ _WINDOW = 24
 def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
                    policy: str = "availability", *,
                    min_lockstep: int = MIN_LOCKSTEP,
-                   stats: Optional[BatchStats] = None) -> List[SimResult]:
+                   stats: Optional[BatchStats] = None,
+                   library: Optional[ReplayLibrary] = None,
+                   max_rounds: int = MAX_RESCUE_ROUNDS,
+                   rescue_min: int = RESCUE_MIN) -> List[SimResult]:
     """Schedule-free :class:`SimResult` per system, in input order.
 
     Ranking-identical to ``[simulate_fast(fg, s, policy) for s in
@@ -80,11 +84,17 @@ def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
     — at a fraction of the per-candidate cost when candidates share the
     graph.  Systems are grouped by *pool template* (pool names/kinds and
     the kind→pool map — slot counts are free to vary inside a group); each
-    group runs one lockstep sweep, with per-lane serial fallback on
-    event-order divergence.
+    group replays dispatch orders from ``library`` (an ephemeral one when
+    ``None``) with lockstep rescue of diverged cohorts, bounded by
+    ``max_rounds`` serial discoveries — see
+    :func:`repro.core.replay.replay_group`.  A shared library makes repeat
+    sweeps start warm: every lane routes straight to the order its slot
+    counts validated against before.
     """
     return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
-                            stats=stats, lockstep_fn=_run_lockstep)
+                            stats=stats, library=library,
+                            max_rounds=max_rounds, rescue_min=rescue_min,
+                            lockstep_fn=_run_lockstep)
 
 
 def _run_lockstep(fg: FrozenGraph, order: Sequence[int],

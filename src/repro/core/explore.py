@@ -70,6 +70,7 @@ from .devices import SystemConfig
 from .diskcache import DiskCache, sha256_text, trace_fingerprint
 from .estimator import PerfEstimate
 from .fastsim import FrozenGraph, simulate_fast
+from .replay import MAX_RESCUE_ROUNDS, ReplayLibrary
 from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
 from .simulator import SimResult, simulate
 from .taskgraph import TaskGraph
@@ -267,6 +268,13 @@ class CacheStats:
     ``graph_*`` / ``eval_*`` count the in-memory layers; ``disk_*`` count
     consultations of the persistent store (only reached on an in-memory
     miss, so a cross-run warm sweep shows ``eval_misses == disk_hits``).
+
+    The lane counters mirror the batch engines' fallback telemetry per
+    explore call (see :class:`repro.core.replay.BatchStats`):
+    ``diverged_lanes`` failed a replay validation at least once,
+    ``rescued_lanes`` were recovered by a later library order in lockstep,
+    and ``serial_fallback_lanes`` degraded to a plain serial run with
+    nothing recorded — the cost a warm order library drives to zero.
     """
 
     graph_hits: int = 0
@@ -275,6 +283,9 @@ class CacheStats:
     eval_misses: int = 0
     disk_hits: int = 0
     disk_misses: int = 0
+    diverged_lanes: int = 0
+    rescued_lanes: int = 0
+    serial_fallback_lanes: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -282,7 +293,9 @@ class CacheStats:
     def __repr__(self) -> str:
         return (f"CacheStats(graph {self.graph_hits}h/{self.graph_misses}m, "
                 f"eval {self.eval_hits}h/{self.eval_misses}m, "
-                f"disk {self.disk_hits}h/{self.disk_misses}m)")
+                f"disk {self.disk_hits}h/{self.disk_misses}m, "
+                f"lanes {self.diverged_lanes}d/{self.rescued_lanes}r/"
+                f"{self.serial_fallback_lanes}f)")
 
 
 def _eligibility_signature(elig: Eligibility) -> Tuple:
@@ -463,12 +476,19 @@ _WORKER_GRAPHS: "collections.OrderedDict[str, FrozenGraph]" = \
     collections.OrderedDict()
 _WORKER_GRAPH_CAP = 32
 _WORKER_DISK: Optional[DiskCache] = None
+# Worker-persistent order library: discovered dispatch orders outlive the
+# chunk (and the Explorer) exactly like the graph registry, so repeat
+# chunks — and repeat sweeps on the long-lived executor — replay warm.
+# The parent additionally ships its own orders with every chunk and merges
+# the worker's discoveries back, so knowledge flows both ways.
+_WORKER_LIBRARY = ReplayLibrary()
 
 
 def _process_worker_init(cache_dir: Optional[str]) -> None:
-    global _WORKER_DISK
+    global _WORKER_DISK, _WORKER_LIBRARY
     _WORKER_DISK = DiskCache(cache_dir) if cache_dir else None
     _WORKER_GRAPHS.clear()
+    _WORKER_LIBRARY = ReplayLibrary()
 
 
 # One long-lived executor per (worker count, disk store): spawning worker
@@ -518,14 +538,22 @@ def _shutdown_executors() -> None:
 
 def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
                         items: Sequence[Tuple[int, SystemConfig]],
-                        policy: str, batch: bool
-                        ) -> Optional[List[Tuple[int, SimResult]]]:
+                        policy: str, batch: bool,
+                        orders: Optional[Mapping] = None,
+                        max_rounds: int = MAX_RESCUE_ROUNDS
+                        ) -> Optional[Tuple]:
     """Worker-side unit: one graph (by registry hash, with the pickled
     payload riding along only on seeding chunks) × a slice of slot-count
     variants, evaluated in one lockstep batch (``batch=True``) or one
-    ``simulate_fast`` loop.  Returns ``None`` when the graph is known
-    neither to the registry nor the disk store — the parent re-submits the
-    chunk with the payload attached.  Must stay module-level picklable."""
+    ``simulate_fast`` loop.  ``orders`` is the parent's
+    :meth:`~repro.core.replay.ReplayLibrary.export` payload for this graph
+    — merged (with validation) into the worker-persistent library so the
+    chunk replays warm.  Returns ``None`` when the graph is known neither
+    to the registry nor the disk store (the parent re-submits the chunk
+    with the payload attached), else ``(results, orders_export,
+    batch_stats_dict)``: the worker's full order set for the graph rides
+    back so the parent can merge discoveries into the sweep library.
+    Must stay module-level picklable."""
     g = _WORKER_GRAPHS.get(ghash)
     if g is None:
         if fg is None and _WORKER_DISK is not None:
@@ -536,14 +564,24 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
             return None
         _WORKER_GRAPHS[ghash] = g = fg
         while len(_WORKER_GRAPHS) > _WORKER_GRAPH_CAP:
-            _WORKER_GRAPHS.popitem(last=False)
+            _, evicted = _WORKER_GRAPHS.popitem(last=False)
+            # keep the order library bounded alongside the graph registry
+            # (its discoveries already rode back to the parent per chunk)
+            _WORKER_LIBRARY.drop_graph(evicted.content_hash())
     else:
         _WORKER_GRAPHS.move_to_end(ghash)
-    if batch:
-        sims = simulate_batch(g, [system for _, system in items], policy)
-        return [(pos, sim) for (pos, _), sim in zip(items, sims)]
-    return [(pos, simulate_fast(g, system, policy))
-            for pos, system in items]
+    if not batch:
+        return ([(pos, simulate_fast(g, system, policy))
+                 for pos, system in items], None, None)
+    if orders:
+        _WORKER_LIBRARY.merge(g, policy, orders)
+    stats = BatchStats()
+    sims = simulate_batch(g, [system for _, system in items], policy,
+                          stats=stats, library=_WORKER_LIBRARY,
+                          max_rounds=max_rounds)
+    return ([(pos, sim) for (pos, _), sim in zip(items, sims)],
+            _WORKER_LIBRARY.export(g.content_hash(), policy),
+            stats.as_dict())
 
 
 #: Valid ``Explorer(engine=...)`` names, in fidelity order.  ``reference``
@@ -569,7 +607,9 @@ class Explorer:
                  processes: int = 0,
                  cache_dir: Optional[str] = None,
                  engine: Optional[str] = None,
-                 jax_chunk: Optional[int] = None):
+                 jax_chunk: Optional[int] = None,
+                 order_library: Optional[ReplayLibrary] = None,
+                 max_rescue_rounds: int = MAX_RESCUE_ROUNDS):
         """``engine`` names the evaluation engine directly — one of
         :data:`ENGINE_NAMES` — and overrides the legacy ``fast``/``batch``
         booleans (kept for compatibility: ``fast=False`` is
@@ -584,7 +624,14 @@ class Explorer:
         schedule-free sims to disk, keyed by trace content hash +
         eligibility/system signature (array engines only; jax-tier entries
         are namespaced so they can never satisfy an exact engine's
-        lookup)."""
+        lookup).  ``order_library`` shares a
+        :class:`~repro.core.replay.ReplayLibrary` of discovered dispatch
+        orders across Explorers (default: a private one per instance);
+        with ``cache_dir`` the orders also persist on disk, keyed by
+        graph content hash + policy, so repeat sweeps and worker
+        processes start warm.  ``max_rescue_rounds`` bounds the serial
+        order discoveries per candidate group (see
+        :func:`repro.core.replay.replay_group`)."""
         if engine is not None:
             if engine not in ENGINE_NAMES:
                 raise ValueError(
@@ -634,9 +681,16 @@ class Explorer:
             if cache_dir is not None:
                 raise ValueError("cache_dir requires the fast engine "
                                  "(FrozenGraph is the on-disk payload)")
+        if max_rescue_rounds < 0:
+            raise ValueError(f"max_rescue_rounds must be >= 0, got "
+                             f"{max_rescue_rounds!r}")
         self._disk = DiskCache(cache_dir) if cache_dir is not None else None
         self.stats = CacheStats()
         self.batch_stats = BatchStats()     # parent-side batchsim telemetry
+        self.order_library = order_library if order_library is not None \
+            else ReplayLibrary()
+        self.max_rescue_rounds = int(max_rescue_rounds)
+        self._orders_loaded: set = set()    # graph tokens read from disk
         self._ghashes: Dict[Tuple, str] = {}
         self._mem_ns = uuid.uuid4().hex[:12]
         self._shipped: Dict[str, int] = {}
@@ -717,6 +771,40 @@ class Explorer:
         return json.dumps(
             [tag, 1, sha256_text(self._graph_disk_text(graph_key)),
              pools, shared, self.policy])
+
+    def _orders_disk_text(self, graph_token: str) -> str:
+        """On-disk key for one graph's order-library entry.
+
+        Keyed by the FrozenGraph *content* hash + policy — nothing else:
+        orders are engine-agnostic (recorded by the exact path, re-validated
+        per lane by every backend), so one entry serves every engine tier,
+        but never a different policy (the heap keys differ)."""
+        return json.dumps(["orders", 1, graph_token, self.policy])
+
+    def _load_orders(self, payload: FrozenGraph) -> None:
+        """Warm the order library from disk, once per graph per Explorer.
+        Corrupted entries fail the DiskCache integrity check and stale or
+        tampered payloads fail ``order_valid`` inside ``merge`` — either
+        way the sweep falls back to rediscovery, never a wrong replay."""
+        if self._disk is None:
+            return
+        token = payload.content_hash()
+        if token in self._orders_loaded:
+            return
+        self._orders_loaded.add(token)
+        got = self._disk.get(self._orders_disk_text(token))
+        if isinstance(got, dict):
+            self.order_library.merge(payload, self.policy, got,
+                                     mark_dirty=False)
+
+    def _save_orders(self) -> None:
+        """Flush newly discovered orders to disk (end of every explore)."""
+        if self._disk is None:
+            return
+        for token in self.order_library.take_dirty(self.policy):
+            export = self.order_library.export(token, self.policy)
+            if export:
+                self._disk.put(self._orders_disk_text(token), export)
 
     # ------------------------------------------------------------------
     def _graph_for(self, cand: Candidate,
@@ -885,6 +973,7 @@ class Explorer:
         """
         t0 = time.perf_counter()
         stats_before = self.stats.as_dict()
+        bstats_before = self.batch_stats.as_dict()
         cands = list(candidates)
         procs = self.processes if self.fast else 0
         n_workers = procs if procs > 0 \
@@ -955,6 +1044,18 @@ class Explorer:
 
         done = [o for o in outcomes if o is not None]
         assert len(done) == len(cands)
+        # mirror this call's batch-engine fallback telemetry into the
+        # cache counters (the ROADMAP's "~15%" figure, now measured): how
+        # many lanes diverged from a replayed order, how many the library
+        # rescued back into lockstep, how many degraded to serial
+        bstats = self.batch_stats.as_dict()
+        self.stats.diverged_lanes += \
+            bstats["diverged_lanes"] - bstats_before["diverged_lanes"]
+        self.stats.rescued_lanes += \
+            bstats["rescued_lanes"] - bstats_before["rescued_lanes"]
+        self.stats.serial_fallback_lanes += \
+            bstats["serial_fallback_lanes"] \
+            - bstats_before["serial_fallback_lanes"]
         # per-call delta, not the Explorer's lifetime totals — a stored
         # sweep must account for its own batch only
         cache = {k: v - stats_before[k]
@@ -966,6 +1067,7 @@ class Explorer:
         for rank, o in enumerate(result.ranked):
             o.rank = rank
         self._materialise_schedules(result, cands, estimates, kk)
+        self._save_orders()
         return result
 
     def _chunk_size(self, n_cands: int, prune: bool, procs: int,
@@ -1052,6 +1154,14 @@ class Explorer:
         for gkey, items in pending.items():
             payload = graph_info[gkey][0]
             ghash = self._graph_hash(gkey)
+            orders_arg = None
+            if self.batch:
+                # ship the sweep's known orders for this graph so worker
+                # chunks replay warm (the workers' own registry persists
+                # across chunks too; discoveries ride back on the result)
+                self._load_orders(payload)
+                orders_arg = self.order_library.export(
+                    payload.content_hash(), self.policy) or None
             # a single-eligibility sweep must still use every worker: split
             # each graph key's items across the pool (deterministic slices,
             # reassembled by position)
@@ -1072,17 +1182,31 @@ class Explorer:
                 futures.append((gkey, ghash, part, time.perf_counter(),
                                 ppool.submit(_process_eval_chunk, ghash,
                                              fg_arg, work, self.policy,
-                                             self.batch)))
+                                             self.batch, orders_arg,
+                                             self.max_rescue_rounds)))
         for gkey, ghash, items, t_submit, fut in futures:
             got = fut.result()
+            payload = graph_info[gkey][0]
             if got is None:
                 # the worker drew a hash-only chunk before any seeding
                 # chunk reached it: one re-submission with the payload
-                payload = graph_info[gkey][0]
                 work = [(pos, cand.system) for pos, cand, _, _, _ in items]
+                orders_arg = self.order_library.export(
+                    payload.content_hash(), self.policy) or None \
+                    if self.batch else None
                 got = ppool.submit(_process_eval_chunk, ghash, payload,
-                                   work, self.policy, self.batch).result()
-            sims = dict(got)
+                                   work, self.policy, self.batch,
+                                   orders_arg,
+                                   self.max_rescue_rounds).result()
+            pairs, worker_orders, worker_stats = got
+            if worker_orders:
+                # validated merge: the worker's discoveries warm this
+                # sweep's library (and, with a store, tomorrow's)
+                self.order_library.merge(payload, self.policy,
+                                         worker_orders)
+            if worker_stats:
+                self.batch_stats.add_dict(worker_stats)
+            sims = dict(pairs)
             share = (time.perf_counter() - t_submit) / max(len(items), 1)
             _, stats, crit, lb = graph_info[gkey]
             for pos, cand, key, text, ghit in items:
@@ -1095,14 +1219,20 @@ class Explorer:
     def _lockstep_family(self, payload: FrozenGraph,
                          systems: Sequence[SystemConfig]) -> List[SimResult]:
         """One graph-sharing candidate family through the configured
-        candidate-axis backend (numpy lockstep or the jax scan)."""
+        candidate-axis backend (numpy lockstep or the jax scan), replaying
+        orders from the sweep's (disk-warmed) library."""
+        self._load_orders(payload)
         if self.engine == "jax":
             from .jaxsim import simulate_jax
             kw = {} if self.jax_chunk is None else {"chunk": self.jax_chunk}
             return simulate_jax(payload, systems, self.policy,
-                                stats=self.batch_stats, **kw)
+                                stats=self.batch_stats,
+                                library=self.order_library,
+                                max_rounds=self.max_rescue_rounds, **kw)
         return simulate_batch(payload, systems, self.policy,
-                              stats=self.batch_stats)
+                              stats=self.batch_stats,
+                              library=self.order_library,
+                              max_rounds=self.max_rescue_rounds)
 
     def _materialise_schedules(self, result: ExplorationResult,
                                cands: Sequence[Candidate],
@@ -1153,7 +1283,9 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
             processes: int = 0,
             cache_dir: Optional[str] = None,
             engine: Optional[str] = None,
-            jax_chunk: Optional[int] = None) -> ExplorationResult:
+            jax_chunk: Optional[int] = None,
+            order_library: Optional[ReplayLibrary] = None,
+            max_rescue_rounds: int = MAX_RESCUE_ROUNDS) -> ExplorationResult:
     """Estimate every feasible candidate; rank; pick the best.
 
     This is the "coffee-break" loop: its wall time replaces one bitstream
@@ -1166,5 +1298,7 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
                   smp_seconds_fn=smp_seconds_fn, budget=budget,
                   max_workers=max_workers, cache=cache, fast=fast,
                   batch=batch, processes=processes, cache_dir=cache_dir,
-                  engine=engine, jax_chunk=jax_chunk)
+                  engine=engine, jax_chunk=jax_chunk,
+                  order_library=order_library,
+                  max_rescue_rounds=max_rescue_rounds)
     return ex.explore(candidates, top_k=top_k, prune=prune)

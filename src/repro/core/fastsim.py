@@ -46,6 +46,7 @@ architecture overview in ``docs/architecture.md``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from heapq import heapify, heappop, heappush
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -222,6 +223,30 @@ class FrozenGraph:
         for r, i in enumerate(order):
             rank[i] = r
         return rank, order
+
+    def content_hash(self) -> str:
+        """sha256 over the simulation-determining content, memoised.
+
+        This is the graph token of the multi-order replay library
+        (:mod:`repro.core.replay`) and of its on-disk order entries: two
+        payloads with equal hashes replay each other's dispatch orders, so
+        everything a heap order can depend on is hashed — the arrays plus
+        the row/kind naming.  Derived metadata (``stats``, critical path)
+        is excluded.  The memo is content-derived, so unlike ``_rt`` it
+        survives pickling (workers reuse it instead of re-hashing).
+        """
+        h = getattr(self, "_content_hash", None)
+        if h is None:
+            m = hashlib.sha256()
+            for a in (self.uid, self.is_compute, self.creation_index,
+                      self.cond, self.act_indptr, self.act_kids,
+                      self.dev_indptr, self.dev_kids, self.cost,
+                      self.succ_indptr, self.succ_rows, self.n_pred):
+                m.update(np.ascontiguousarray(a).tobytes())
+            m.update(repr((self.n, self.names, self.roles,
+                           self.kinds)).encode("utf-8"))
+            h = self._content_hash = m.hexdigest()
+        return h
 
     def nbytes(self) -> int:
         return sum(int(a.nbytes) for a in (

@@ -54,8 +54,9 @@ import numpy as np
 from .devices import SystemConfig
 from .fastsim import FrozenGraph, simulate_fast
 # JAX_RTOL is re-exported here on purpose: it is this engine's tier constant.
-from .replay import (BatchStats, JAX_RTOL, Layout, MIN_LOCKSTEP,  # noqa: F401
-                     graph_aux, lane_results, simulate_grouped)
+from .replay import (BatchStats, JAX_RTOL, Layout,  # noqa: F401
+                     MAX_RESCUE_ROUNDS, MIN_LOCKSTEP, RESCUE_MIN,
+                     ReplayLibrary, graph_aux, lane_results, simulate_grouped)
 from .simulator import SimResult
 
 # The jax import is deferred until the engine is actually used: importing
@@ -256,10 +257,11 @@ def _bad_rows(fg: FrozenGraph, kind_pool: Sequence[int]) -> np.ndarray:
     return bad
 
 
-# Per-FrozenGraph cap on memoised (order, kind_pool) -> xs entries: one
-# entry per (pool template × policy) is typical, so a handful covers every
-# realistic sweep mix while bounding pathological template churn.
-_XS_CACHE_CAP = 8
+# Per-FrozenGraph cap on memoised (order, kind_pool) -> xs entries.  With
+# the multi-order replay library a warm sweep replays one order per
+# signature-routed cohort, so the cap matches the library's per-key order
+# cap instead of the old one-reference-order assumption.
+_XS_CACHE_CAP = 32
 
 
 def _group_xs(fg: FrozenGraph, order: Sequence[int],
@@ -413,16 +415,22 @@ def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
                  policy: str = "availability", *,
                  min_lockstep: int = MIN_LOCKSTEP,
                  chunk: int = DEFAULT_CHUNK,
-                 stats: Optional[BatchStats] = None) -> List[SimResult]:
+                 stats: Optional[BatchStats] = None,
+                 library: Optional[ReplayLibrary] = None,
+                 max_rounds: int = MAX_RESCUE_ROUNDS,
+                 rescue_min: int = RESCUE_MIN) -> List[SimResult]:
     """Schedule-free :class:`SimResult` per system, in input order.
 
     The jax tier of :func:`repro.core.batchsim.simulate_batch`: equivalent
     to ``[simulate_fast(fg, s, policy) for s in systems]`` at
     :data:`~repro.core.replay.JAX_RTOL` relative makespan/busy error with
     identical placements, and ranking-stable under the documented
-    tie-break.  Grouping, reference-order replay and the per-lane exact
-    fallback are the shared :mod:`repro.core.replay` protocol; ``chunk``
-    caps the compiled lane-bucket width.
+    tie-break.  Grouping, multi-order library replay (``library`` —
+    orders are engine-agnostic: they are recorded by the exact serial
+    path and each lane re-validates in-scan, so a batch-warmed library
+    serves this engine unchanged) and the per-lane exact fallback are the
+    shared :mod:`repro.core.replay` protocol; ``chunk`` caps the compiled
+    lane-bucket width.
     """
     require_jax()
     if chunk < 1:
@@ -432,4 +440,6 @@ def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
         return _scan_group(fg, order, layouts, policy, chunk=chunk)
 
     return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
-                            stats=stats, lockstep_fn=lockstep)
+                            stats=stats, library=library,
+                            max_rounds=max_rounds, rescue_min=rescue_min,
+                            lockstep_fn=lockstep)

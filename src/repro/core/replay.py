@@ -8,17 +8,35 @@ protocol around their inner sweep:
    the kind→pool map; slot counts are free to vary inside a group) — lanes
    in one group agree on which pool serves each device kind, so one
    dispatch-target table drives every lane.
-2. **Replay** one *reference event order*, recorded by running the
-   highest-parallelism lane through the bit-identical
+2. **Replay** dispatch orders from a :class:`ReplayLibrary` — every order
+   ever discovered for this (graph, pool template, policy) key, starting
+   from the orders the library already holds and falling back to recording
+   new ones through the bit-identical
    :func:`~repro.core.fastsim.simulate_fast` path (``order_out=``).
-3. **Validate** every other lane against the heap-key monotonicity
-   invariant (a lane's execution order equals its own heap order *iff* its
-   popped ``(ready_t, tie_break)`` keys strictly increase along the replay)
-   and **fall back** any diverged lane to a serial ``simulate_fast`` run —
-   the lane's lockstep state is discarded, never resumed, so correctness
-   does not depend on how late the divergence is caught.
+3. **Validate** every lane against the heap-key monotonicity invariant (a
+   lane's execution order equals its own heap order *iff* its popped
+   ``(ready_t, tie_break)`` keys strictly increase along the replay) and
+   **rescue** diverged lanes: their own orders are recorded once, appended
+   to the library, and the diverged cohort is re-batched in lockstep
+   against the new orders (bounded by ``max_rounds``); only when the
+   library is full or the rounds budget is spent does a lane degrade to a
+   plain serial ``simulate_fast`` run.  A diverged lane's lockstep state
+   is always discarded, never resumed, so correctness does not depend on
+   how late the divergence is caught.
 
-This module owns the protocol (grouping, reference selection, fallback,
+The library also remembers, per replayed order, which *slot-count
+signatures* passed it (`sig routing`): a warm sweep routes every lane
+straight to the order its signature validated against last time — the
+deterministic engines guarantee the same (graph, template, counts, policy)
+always pops the same heap order — so repeat sweeps skip both the serial
+reference run and the diverge-detect-resimulate cycle entirely.  Lanes
+whose remembered order serves *only* them are evaluated straight through
+the exact serial path (``order_pinned_lanes``): replaying a single lane in
+lockstep costs more than the serial loop it replaces, so the library's win
+for such a lane is skipping it out of a doomed lockstep, not vectorising
+it.
+
+This module owns the protocol (grouping, order selection, rescue, fallback,
 per-lane result assembly, the per-graph auxiliary constants) so the two
 backends can never disagree on it; each backend supplies only the inner
 ``lockstep_fn`` that advances the stacked per-candidate state.
@@ -30,11 +48,17 @@ engine, while the jax engine is pinned at ``rtol``-level
 deterministically by candidate submission order).  :func:`sims_equivalent`
 and :func:`rankings_equivalent` are the single implementation of those
 contracts, used by the test suite and the fig6 benchmark asserts alike.
+Cached orders are **tier-agnostic**: every order is recorded by the exact
+serial path, and each backend re-validates every lane against it, so a
+library warmed by the batch engine serves the jax engine unchanged (and
+vice versa) without laundering rtol results into the exact tier.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+import threading
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
@@ -45,6 +69,23 @@ from .simulator import SimResult
 # Below this many lanes per group the per-step dispatch overhead outweighs
 # the vectorisation win and simulate_fast per lane is faster.
 MIN_LOCKSTEP = 6
+
+#: Max serial order *discoveries* (reference + rescue recordings) per
+#: group call; past it the remaining diverged lanes degrade to plain
+#: serial fallbacks with nothing recorded.
+MAX_RESCUE_ROUNDS = 32
+
+#: Rescue re-batches (lockstep re-runs of a diverged cohort against a
+#: freshly discovered order) only start when the cohort is at least this
+#: wide: one re-batch sweep costs roughly ten serial runs, so thin cohorts
+#: are cheaper to discover serially — which still records their orders, so
+#: the *next* sweep routes them without any lockstep gamble.
+RESCUE_MIN = 24
+
+#: Orders kept per (graph, template, policy) key; beyond it new orders are
+#: not recorded (their lanes degrade to serial fallback) so a pathological
+#: all-unique-order sweep cannot grow the library without bound.
+MAX_ORDERS_PER_KEY = 32
 
 #: Engine equivalence tiers: maximum relative makespan error vs the
 #: reference object engine.  ``0.0`` means bit-identical (``==`` on floats);
@@ -72,38 +113,320 @@ LockstepFn = Callable[[FrozenGraph, Sequence[int], Sequence[Layout], str],
 class BatchStats:
     """Observability for one or more grouped-simulation calls.
 
-    ``lockstep_lanes`` counts candidates fully evaluated inside a lockstep
-    sweep; ``diverged_lanes`` fell back to ``simulate_fast`` after a heap
-    -order mismatch; ``small_group_lanes`` never entered lockstep (group
-    below ``min_lockstep``); ``reference_lanes`` drove a replayed order
-    (evaluated via the bit-identical full-record path).
+    Terminal lane classification (each lane counted exactly once):
+    ``lockstep_lanes`` were fully evaluated inside a lockstep sweep;
+    ``order_pinned_lanes`` were routed by the library straight to the exact
+    serial path (their remembered order serves only them — see module
+    docstring); ``reference_lanes`` ran serially through the schedule-free
+    exact path *and recorded their order* into the library (the initial
+    reference plus every rescue discovery); ``serial_fallback_lanes``
+    ran serially with nothing recorded (rounds/library budget spent —
+    the cost the library exists to eliminate); ``small_group_lanes`` never
+    entered the protocol (group below ``min_lockstep``).
+
+    Event counters (overlapping the above): ``diverged_lanes`` counts
+    distinct lanes that failed at least one replay validation;
+    ``rescued_lanes`` counts diverged lanes later completed in lockstep
+    against another order; ``order_hits`` counts lanes completed against
+    an order the library already held before the call (the warm-sweep
+    figure of merit).
     """
 
     groups: int = 0
     lockstep_lanes: int = 0
     diverged_lanes: int = 0
+    rescued_lanes: int = 0
+    order_hits: int = 0
+    order_pinned_lanes: int = 0
+    serial_fallback_lanes: int = 0
     small_group_lanes: int = 0
     reference_lanes: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
 
+    def add_dict(self, other: Mapping[str, int]) -> None:
+        """Fold another call's counters in (process-pool workers report
+        their BatchStats back as dicts)."""
+        for k, v in other.items():
+            if hasattr(self, k):
+                setattr(self, k, getattr(self, k) + int(v))
+
 
 # ---------------------------------------------------------------------------
-# The grouping / replay / fallback protocol
+# The multi-order replay library
+# ---------------------------------------------------------------------------
+
+
+def order_valid(fg: FrozenGraph, order: Sequence[int]) -> bool:
+    """Whether ``order`` is a topological permutation of ``fg``'s rows.
+
+    The lockstep engines assume every replayed row's predecessors already
+    executed (ready times would silently be wrong otherwise, and the
+    monotonicity check cannot catch an under-informed ready time), so an
+    order from a corrupted or stale library entry must be rejected *before*
+    it is ever replayed — this is the corruption gate, run once per merge,
+    O(n + E).
+    """
+    n = fg.n
+    try:
+        rows = [int(r) for r in order]
+    except (TypeError, ValueError):
+        return False
+    if len(rows) != n:
+        return False
+    indptr = fg.succ_indptr.tolist()
+    succ = fg.succ_rows.tolist()
+    rem = fg.n_pred.tolist()
+    seen = [False] * n
+    for r in rows:
+        if r < 0 or r >= n or seen[r] or rem[r] != 0:
+            return False
+        seen[r] = True
+        for j in succ[indptr[r]:indptr[r + 1]]:
+            rem[j] -= 1
+    return True
+
+
+# A library key: (graph content hash, (pool names, kind→pool map), policy).
+LibraryKey = Tuple[str, Tuple[Tuple[str, ...], Tuple[int, ...]], str]
+# A lane's slot-count signature inside one pool template.
+CountsSig = Tuple[int, ...]
+
+
+class _LibraryEntry:
+    __slots__ = ("orders", "index", "sigs", "pins")
+
+    def __init__(self) -> None:
+        self.orders: List[Tuple[int, ...]] = []
+        self.index: Dict[Tuple[int, ...], int] = {}     # content -> position
+        self.sigs: Dict[CountsSig, int] = {}            # counts -> position
+        # signatures whose own heap order is not lockstep-provable (the
+        # monotonicity check is conservative: zero-cost ties can pop a
+        # smaller tie-break than a predecessor even in the lane's true
+        # heap order) — route these straight to the exact serial path
+        self.pins: Set[CountsSig] = set()
+
+
+class ReplayLibrary:
+    """Cross-engine, cross-run cache of discovered dispatch orders.
+
+    Keys are ``(graph content hash, pool template, policy)`` — everything a
+    heap order depends on besides the per-lane slot counts — and each entry
+    holds the orders discovered so far plus the *signature map*: which
+    slot-count signature last validated against which order.  Because the
+    engines are deterministic, a signature's remembered order is always its
+    own heap order, so a warm :func:`replay_group` routes each lane straight
+    to the right replay without a serial reference run.
+
+    The library is a plain mutable object shared by engines, Explorers and
+    sweeps; it is never pickled across processes — the worker protocol
+    ships per-graph :meth:`export` payloads instead, and :meth:`merge`
+    validates every incoming order against the graph
+    (:func:`order_valid`) so corrupted or stale payloads degrade to a
+    rediscovery, never to a wrong replay.
+    """
+
+    def __init__(self, max_orders_per_key: int = MAX_ORDERS_PER_KEY):
+        self.max_orders_per_key = int(max_orders_per_key)
+        self._entries: Dict[LibraryKey, _LibraryEntry] = {}
+        self._dirty: Set[Tuple[str, str]] = set()       # (graph hash, policy)
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def key(fg: FrozenGraph, layout: Layout, policy: str) -> LibraryKey:
+        names, _counts, kind_pool = layout
+        return (fg.content_hash(), (tuple(names), tuple(kind_pool)), policy)
+
+    # ------------------------------------------------------------------
+    def lookup(self, key: LibraryKey
+               ) -> Tuple[List[Tuple[int, ...]], Dict[CountsSig, int],
+                          Set[CountsSig]]:
+        """Snapshot of ``(orders, signature map, pinned signatures)``."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                return [], {}, set()
+            return list(e.orders), dict(e.sigs), set(e.pins)
+
+    def record(self, key: LibraryKey, order: Sequence[int],
+               sig: Optional[CountsSig] = None, *,
+               mark: bool = True) -> Optional[int]:
+        """Add ``order`` (dedup by content, capped per key); map ``sig`` to
+        it.  Returns the order's position, or ``None`` when the key is full
+        and the order is new — the caller's lane then counts as a serial
+        fallback, not a recording.  ``mark=False`` (the merge-from-store
+        path) skips the dirty flag so loading never schedules a write-back.
+        """
+        tup = tuple(int(r) for r in order)
+        with self._lock:
+            e = self._entries.setdefault(key, _LibraryEntry())
+            pos = e.index.get(tup)
+            changed = False
+            if pos is None:
+                if len(e.orders) >= self.max_orders_per_key:
+                    return None
+                pos = len(e.orders)
+                e.orders.append(tup)
+                e.index[tup] = pos
+                changed = True
+            if sig is not None and e.sigs.get(sig) != pos:
+                e.sigs[sig] = pos
+                changed = True
+            if changed and mark:
+                self._dirty.add((key[0], key[2]))
+            return pos
+
+    def map_sig(self, key: LibraryKey, sig: CountsSig, position: int, *,
+                validated: bool = True, mark: bool = True) -> None:
+        """Remember that ``sig`` ran against order ``position``.
+
+        ``validated=True`` (a lockstep pass) also lifts any pin on the
+        signature: the library now holds proof the signature can lockstep,
+        so it must not stay parked on the serial path forever."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None or not 0 <= position < len(e.orders):
+                return
+            changed = False
+            if e.sigs.get(sig) != position:
+                e.sigs[sig] = position
+                changed = True
+            if validated and sig in e.pins:
+                e.pins.discard(sig)
+                changed = True
+            if changed and mark:
+                self._dirty.add((key[0], key[2]))
+
+    def pin_sig(self, key: LibraryKey, sig: CountsSig, *,
+                mark: bool = True) -> None:
+        """Mark ``sig`` as lockstep-unprovable: its lanes are evaluated
+        straight through the exact serial path from now on (until a
+        lockstep validation proves otherwise — see :meth:`map_sig`)."""
+        with self._lock:
+            e = self._entries.setdefault(key, _LibraryEntry())
+            if sig not in e.pins:
+                e.pins.add(sig)
+                if mark:
+                    self._dirty.add((key[0], key[2]))
+
+    def drop_graph(self, graph_hash: str) -> None:
+        """Forget every entry (and pending write-back) of one graph — the
+        worker registry calls this when it evicts the graph itself, so the
+        worker-persistent library stays bounded alongside it."""
+        with self._lock:
+            for key in [k for k in self._entries if k[0] == graph_hash]:
+                del self._entries[key]
+            self._dirty = {d for d in self._dirty if d[0] != graph_hash}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return sum(len(e.orders) for e in self._entries.values())
+
+    # ----------------------------------------------------- wire payloads
+    def export(self, graph_hash: str, policy: str) -> Dict[Tuple, Dict]:
+        """Picklable ``{template: {"orders": [...], "sigs": {...}}}`` for
+        one (graph, policy) — the worker-registry / disk-store payload."""
+        out: Dict[Tuple, Dict] = {}
+        with self._lock:
+            for (gh, template, pol), e in self._entries.items():
+                if gh == graph_hash and pol == policy \
+                        and (e.orders or e.pins):
+                    out[template] = {
+                        "orders": [list(o) for o in e.orders],
+                        "sigs": {tuple(s): int(i) for s, i in e.sigs.items()},
+                        "pins": [tuple(s) for s in sorted(e.pins)],
+                    }
+        return out
+
+    def merge(self, fg: FrozenGraph, policy: str,
+              payload: Mapping, mark_dirty: bool = True) -> int:
+        """Fold an :meth:`export` payload in, validating every order
+        against ``fg`` (:func:`order_valid`) and every signature mapping
+        against the merged order list; returns the number of new orders
+        accepted.  Malformed payloads contribute nothing — a corrupted
+        disk entry or a garbled worker reply degrades to rediscovery.
+        ``mark_dirty=False`` (loading *from* the store) applies the
+        changes without scheduling a write-back; dirty marks set
+        concurrently by other threads are never touched either way."""
+        gh = fg.content_hash()
+        added = 0
+        try:
+            items = list(payload.items())
+        except AttributeError:
+            return 0
+        for template, entry in items:
+            try:
+                names, kind_pool = template
+                key = (gh, (tuple(names), tuple(int(k) for k in kind_pool)),
+                       policy)
+                orders = list(entry["orders"])
+                sigs = dict(entry.get("sigs", {}))
+            except (TypeError, ValueError, KeyError):
+                continue
+            positions: Dict[int, int] = {}      # payload idx -> merged idx
+            for i, order in enumerate(orders):
+                with self._lock:
+                    e = self._entries.get(key)
+                    known = e.index.get(tuple(int(r) for r in order)) \
+                        if e is not None else None
+                if known is None and not order_valid(fg, order):
+                    continue
+                pos = self.record(key, order, mark=mark_dirty)
+                if pos is None:
+                    continue
+                positions[i] = pos
+                if known is None:
+                    added += 1
+            for sig, idx in sigs.items():
+                try:
+                    sig_t = tuple(int(c) for c in sig)
+                    pos = positions.get(int(idx))
+                except (TypeError, ValueError):
+                    continue
+                if pos is not None:
+                    # a merged mapping is hearsay, not this process's own
+                    # lockstep validation — it must not lift a pin
+                    self.map_sig(key, sig_t, pos, validated=False,
+                                 mark=mark_dirty)
+            for sig in entry.get("pins", ()):
+                try:
+                    self.pin_sig(key, tuple(int(c) for c in sig),
+                                 mark=mark_dirty)
+                except (TypeError, ValueError):
+                    continue
+        return added
+
+    def take_dirty(self, policy: str) -> List[str]:
+        """Graph hashes with changes under ``policy`` since the last call
+        (the Explorer's flush-to-disk worklist)."""
+        with self._lock:
+            taken = [gh for gh, pol in self._dirty if pol == policy]
+            self._dirty -= {(gh, policy) for gh in taken}
+            return taken
+
+
+# ---------------------------------------------------------------------------
+# The grouping / replay / rescue protocol
 # ---------------------------------------------------------------------------
 
 
 def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
                      policy: str, *, min_lockstep: int = MIN_LOCKSTEP,
                      stats: Optional[BatchStats] = None,
+                     library: Optional[ReplayLibrary] = None,
+                     max_rounds: int = MAX_RESCUE_ROUNDS,
+                     rescue_min: int = RESCUE_MIN,
+                     schedule_free: bool = True,
                      lockstep_fn: LockstepFn) -> List[SimResult]:
     """Schedule-free :class:`SimResult` per system, in input order.
 
     The shared outer loop of every candidate-axis engine: group systems by
     pool template, run small groups through per-candidate
     ``simulate_fast``, and hand each large group to ``lockstep_fn`` via
-    :func:`replay_group` (reference order + divergence fallback).
+    :func:`replay_group` (library-routed replay + rescue + fallback).
+    ``library`` carries discovered orders across calls, engines, processes
+    and runs; ``None`` still rescues within the call via an ephemeral one.
     """
     if policy not in ("availability", "eft"):
         raise ValueError(f"unknown policy {policy!r}")
@@ -115,18 +438,23 @@ def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
         layouts.append((names, counts, kind_pool))
         groups.setdefault((tuple(names), tuple(kind_pool)), []).append(i)
 
+    with_schedule = not schedule_free
     for lanes in groups.values():
         if stats is not None:
             stats.groups += 1
         if len(lanes) < min_lockstep:
             for i in lanes:
-                results[i] = simulate_fast(fg, systems[i], policy)
+                results[i] = simulate_fast(fg, systems[i], policy,
+                                           with_schedule=with_schedule)
             if stats is not None:
                 stats.small_group_lanes += len(lanes)
             continue
         for i, sim in zip(lanes, replay_group(
                 fg, [systems[i] for i in lanes],
-                [layouts[i] for i in lanes], policy, stats, lockstep_fn)):
+                [layouts[i] for i in lanes], policy, stats, lockstep_fn,
+                library=library, min_lockstep=min_lockstep,
+                max_rounds=max_rounds, rescue_min=rescue_min,
+                schedule_free=schedule_free)):
             results[i] = sim
     return results  # type: ignore[return-value]
 
@@ -134,34 +462,186 @@ def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
 def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
                  layouts: Sequence[Layout], policy: str,
                  stats: Optional[BatchStats],
-                 lockstep_fn: LockstepFn) -> List[SimResult]:
-    """One pool-template group: record the reference order, run the
-    backend's lockstep sweep over the remaining lanes, re-simulate diverged
-    lanes serially.
+                 lockstep_fn: LockstepFn, *,
+                 library: Optional[ReplayLibrary] = None,
+                 min_lockstep: int = MIN_LOCKSTEP,
+                 max_rounds: int = MAX_RESCUE_ROUNDS,
+                 rescue_min: int = RESCUE_MIN,
+                 schedule_free: bool = True) -> List[SimResult]:
+    """One pool-template group through the multi-order replay protocol.
 
-    The reference lane is the most parallel hardware — its saturated order
-    is the one large-slot-count lanes overwhelmingly share (ties -> last
-    lane, matching "later candidates are usually bigger" sweep conventions).
+    Three phases, every completion either a validated lockstep lane or an
+    exact serial run (so the exactness tiers are preserved by construction):
+
+    1. **Signature routing** — lanes whose slot-count signature is in the
+       library's map go straight to their remembered order: one lockstep
+       sweep per routed order (cohorts below ``min_lockstep`` take the
+       exact serial path instead — ``order_pinned_lanes``).
+    2. **Cached-order trials** — the remaining cohort replays the library's
+       untried orders in insertion order (the original reference first),
+       while the cohort stays lockstep-worthy and each trial keeps
+       passing lanes; a zero-pass trial stops the phase.
+    3. **Discovery and rescue** — the most-parallel remaining lane is run
+       serially with ``order_out=`` (recording its order and signature —
+       the classic reference run is just this phase's first iteration),
+       then the diverged cohort is re-batched in lockstep against the new
+       order while the cohort is at least ``rescue_min`` wide and re-batches
+       keep rescuing lanes.  At most ``max_rounds`` discoveries; past the
+       budget (or a full library key) lanes degrade to plain serial
+       fallbacks with nothing recorded.
+
+    The reference/discovery lanes honor ``schedule_free`` (default: no
+    :class:`~repro.core.simulator.ScheduledTask` records are built —
+    sweeps rank schedule-free and replay full records only for top-k
+    winners); lockstep lanes are schedule-free by construction.
     """
+    lib = library if library is not None else ReplayLibrary()
+    key = lib.key(fg, layouts[0], policy)
+    orders, sig_map, pins = lib.lookup(key)
+    n_cached = len(orders)
+    # positions index the library entry; a dict (not the snapshot list)
+    # because a concurrently shared library may assign a discovery a
+    # position past the end of this call's snapshot
+    order_by_pos: Dict[int, Tuple[int, ...]] = dict(enumerate(orders))
+    sig_of = [tuple(lay[1]) for lay in layouts]
     totals = [sum(lay[1]) for lay in layouts]
-    ref = max(range(len(systems)), key=lambda i: (totals[i], i))
-    order: List[int] = []
     results: List[Optional[SimResult]] = [None] * len(systems)
-    results[ref] = simulate_fast(fg, systems[ref], policy, order_out=order)
-    if stats is not None:
-        stats.reference_lanes += 1
-    lane_ids = [i for i in range(len(systems)) if i != ref]
-    done, diverged = lockstep_fn(fg, order,
-                                 [layouts[i] for i in lane_ids], policy)
-    for pos, sim in done.items():
-        i = lane_ids[pos]
-        results[i] = dataclasses.replace(sim, system=systems[i].name)
-    for pos in diverged:
-        i = lane_ids[pos]
-        results[i] = simulate_fast(fg, systems[i], policy)
-    if stats is not None:
-        stats.diverged_lanes += len(diverged)
-        stats.lockstep_lanes += len(done)
+    ever_diverged: Set[int] = set()
+    failed_at: Dict[int, Set[int]] = {}     # lane -> positions it diverged on
+    with_schedule = not schedule_free
+
+    def pinned_serial(i: int, hit: bool) -> None:
+        results[i] = simulate_fast(fg, systems[i], policy,
+                                   with_schedule=with_schedule)
+        if stats is not None:
+            stats.order_pinned_lanes += 1
+            if hit:
+                stats.order_hits += 1
+
+    def sweep(lanes: List[int], position: int,
+              from_cache: bool) -> List[int]:
+        """Replay the order at ``position`` for ``lanes``; returns the
+        lanes that diverged (their lockstep state is discarded)."""
+        done, diverged = lockstep_fn(fg, order_by_pos[position],
+                                     [layouts[i] for i in lanes], policy)
+        for pos, sim in done.items():
+            i = lanes[pos]
+            results[i] = dataclasses.replace(sim, system=systems[i].name)
+            lib.map_sig(key, sig_of[i], position)
+            if stats is not None:
+                stats.lockstep_lanes += 1
+                if from_cache:
+                    stats.order_hits += 1
+                if i in ever_diverged:
+                    stats.rescued_lanes += 1
+        failed = [lanes[pos] for pos in diverged]
+        for i in failed:
+            failed_at.setdefault(i, set()).add(position)
+        if stats is not None:
+            for i in failed:
+                if i not in ever_diverged:
+                    stats.diverged_lanes += 1
+        ever_diverged.update(failed)
+        return failed
+
+    # ---- phase 1: signature routing ----------------------------------
+    pending = list(range(len(systems)))
+    if sig_map or pins:
+        routed: Dict[int, List[int]] = {}
+        unrouted: List[int] = []
+        for i in pending:
+            if sig_of[i] in pins:
+                # the library learned this signature's own heap order is
+                # not lockstep-provable (the monotonicity check is
+                # conservative) — straight to the exact serial path
+                pinned_serial(i, hit=True)
+                continue
+            pos = sig_map.get(sig_of[i])
+            if pos is not None and 0 <= pos < n_cached:
+                routed.setdefault(pos, []).append(i)
+            else:
+                unrouted.append(i)
+        pending = unrouted
+        for pos in sorted(routed):
+            lanes = routed[pos]
+            if len(lanes) >= min_lockstep:
+                for i in sweep(lanes, pos, from_cache=True):
+                    # the map promised this order and validation said no:
+                    # never lockstep-route the signature again
+                    lib.pin_sig(key, sig_of[i])
+                    pending.append(i)
+            else:
+                # replaying a thin cohort in lockstep costs more than the
+                # serial loop: the library's win here is routing the lanes
+                # *around* a doomed sweep, straight to the exact path
+                for i in lanes:
+                    pinned_serial(i, hit=True)
+
+    # ---- phase 2: cached-order trials for the unrouted cohort ---------
+    trial = 0
+    while pending and trial < n_cached and len(pending) >= min_lockstep:
+        # never re-replay a position a lane already diverged on (e.g. the
+        # order its signature routed it to in phase 1): the engines are
+        # deterministic, so the lane would diverge identically again
+        cohort = [i for i in pending if trial not in failed_at.get(i, ())]
+        if len(cohort) < min_lockstep:
+            trial += 1
+            continue
+        failed = sweep(cohort, trial, from_cache=True)
+        trial += 1
+        if len(failed) == len(cohort):  # unproductive: stop trying
+            break
+        completed = set(cohort) - set(failed)
+        pending = [i for i in pending if i not in completed]
+
+    # ---- phase 3: discovery + bounded lockstep rescue -----------------
+    rounds = 0
+    rebatch_ok = True
+    while pending:
+        if rounds >= max_rounds:
+            for i in pending:
+                results[i] = simulate_fast(fg, systems[i], policy,
+                                           with_schedule=with_schedule)
+                if stats is not None:
+                    stats.serial_fallback_lanes += 1
+            break
+        i = max(pending, key=lambda j: (totals[j], j))
+        pending.remove(i)
+        out: List[int] = []
+        results[i] = simulate_fast(fg, systems[i], policy,
+                                   with_schedule=with_schedule,
+                                   order_out=out)
+        rounds += 1
+        position = lib.record(key, out, sig_of[i])
+        if position is not None and position in failed_at.get(i, ()):
+            # the lane's own recorded order already failed its validation:
+            # provably a conservative false positive — pin the signature so
+            # warm sweeps go straight to serial instead of re-diverging
+            lib.pin_sig(key, sig_of[i])
+        if stats is not None:
+            if position is None:
+                stats.serial_fallback_lanes += 1    # key full: not recorded
+            else:
+                stats.reference_lanes += 1
+        if position is None:
+            for j in pending:
+                results[j] = simulate_fast(fg, systems[j], policy,
+                                           with_schedule=with_schedule)
+                if stats is not None:
+                    stats.serial_fallback_lanes += 1
+            break
+        order_by_pos[position] = tuple(out)
+        # the first discovery's re-batch is the classic reference sweep;
+        # later ones only pay off on wide cohorts that share orders, so
+        # they are gated on width and stopped once a re-batch rescues
+        # nothing (all-unique-order cohorts are discovered serially, which
+        # costs the same as the old fallback but leaves the library warm)
+        gate = min_lockstep if rounds == 1 else max(min_lockstep, rescue_min)
+        if pending and rebatch_ok and len(pending) >= gate:
+            before = len(pending)
+            pending = sweep(pending, position, from_cache=False)
+            if len(pending) == before and rounds > 1:
+                rebatch_ok = False
     return results  # type: ignore[return-value]
 
 

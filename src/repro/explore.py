@@ -1,0 +1,177 @@
+"""One-stop exploration driver: ``python -m repro.explore <trace> ...``.
+
+The examples and benchmarks used to re-implement the same driver glue —
+load a trace, build a report map, enumerate a slot-count × ±SMP candidate
+ramp, pick an engine, dump the ranking.  This module is that glue, once:
+
+    python -m repro.explore trace.jsonl --reports reports.json \\
+        --engine batch --cache-dir .sweeps --accs 1-16 --top-k 5
+
+    python -m repro.explore synth:40 --engine jax --top-k 3 --json out.json
+
+The positional trace is either a JSONL file written by
+:meth:`repro.core.trace.Trace.save` or ``synth:N`` — the deterministic
+:func:`repro.testing.synth.synth_trace` workload with its built-in report
+(handy for smoke tests and demos; ``--reports`` is then optional).
+``--reports`` is a JSON list of kernel cost reports::
+
+    [{"kernel": "mxm_block", "device_kind": "fpga:mxm64",
+      "compute_s": 1e-4, "dma_in_s": 1e-5, "dma_out_s": 2e-5,
+      "resources": {"dsp": 100.0}}]
+
+Candidates are the CEDR-style ramp every engine groups into one
+``FrozenGraph`` family per eligibility: one candidate per (slot count ×
+±SMP), slot counts from ``--accs`` (``1-8`` or ``1,2,4``).  Output is a
+single JSON document (stdout, or ``--json PATH``): the ranked top-k with
+makespans and bottlenecks, cache counters, and the batch engines' replay
+telemetry (order hits, diverged / rescued / serial-fallback lanes) —
+with ``--cache-dir`` a repeat invocation starts warm from the on-disk
+graph, sim and dispatch-order stores.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .core.augment import Eligibility
+from .core.devices import zynq_system
+from .core.explore import Candidate, ENGINE_NAMES, Explorer
+from .core.hlsreport import KernelReport
+from .core.replay import MAX_RESCUE_ROUNDS
+from .core.trace import Trace
+
+
+def _parse_accs(spec: str) -> List[int]:
+    """``"1-8"`` or ``"1,2,4"`` (or a mix) -> sorted distinct counts."""
+    out = set()
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "-" in part:
+            lo, hi = part.split("-", 1)
+            out.update(range(int(lo), int(hi) + 1))
+        else:
+            out.add(int(part))
+    counts = sorted(c for c in out if c >= 1)
+    if not counts:
+        raise ValueError(f"no slot counts in --accs {spec!r}")
+    return counts
+
+
+def _load_reports(path: str) -> Dict[Tuple[str, str], KernelReport]:
+    with open(path) as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise ValueError(f"{path}: expected a JSON list of kernel reports")
+    fields = {f.name for f in dataclasses.fields(KernelReport)}
+    reports: Dict[Tuple[str, str], KernelReport] = {}
+    for e in entries:
+        rep = KernelReport(**{k: v for k, v in e.items() if k in fields})
+        reports[(rep.kernel, rep.device_kind)] = rep
+    if not reports:
+        raise ValueError(f"{path}: no kernel reports")
+    return reports
+
+
+def _build_candidates(reports: Dict[Tuple[str, str], KernelReport],
+                      accs: Sequence[int], smp: bool) -> List[Candidate]:
+    kinds_by_kernel = {}
+    for kernel, kind in reports:
+        kinds_by_kernel.setdefault(kernel, []).append(kind)
+    acc_kinds = sorted({kind for _, kind in reports})
+    out: List[Candidate] = []
+    for n_acc in accs:
+        for with_smp in (False, True) if smp else (False,):
+            name = f"{n_acc}acc" + ("+smp" if with_smp else "")
+            elig = Eligibility({
+                kernel: tuple(kinds) + (("smp",) if with_smp else ())
+                for kernel, kinds in kinds_by_kernel.items()})
+            out.append(Candidate(
+                name=name,
+                system=zynq_system(name, {k: n_acc for k in acc_kinds}),
+                eligibility=elig))
+    return out
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.explore",
+        description="Rank co-design candidates for one trace.")
+    ap.add_argument("trace", help="Trace JSONL (Trace.save) or synth:N")
+    ap.add_argument("--reports", metavar="PATH",
+                    help="JSON list of kernel cost reports "
+                         "(optional for synth:N traces)")
+    ap.add_argument("--engine", choices=ENGINE_NAMES, default="batch",
+                    help="evaluation engine (default %(default)s)")
+    ap.add_argument("--policy", choices=("availability", "eft"),
+                    default="availability")
+    ap.add_argument("--accs", default="1-8", metavar="SPEC",
+                    help="accelerator slot counts, e.g. 1-8 or 1,2,4 "
+                         "(default %(default)s)")
+    ap.add_argument("--no-smp", action="store_true",
+                    help="drop the ±SMP eligibility axis")
+    ap.add_argument("--top-k", type=int, default=5, metavar="K")
+    ap.add_argument("--prune", action="store_true",
+                    help="lower-bound pruning (per-candidate exact path)")
+    ap.add_argument("--processes", type=int, default=0, metavar="N",
+                    help="worker processes (exact engines only)")
+    ap.add_argument("--cache-dir", metavar="DIR",
+                    help="persistent graph/sim/order store — repeat "
+                         "invocations start warm")
+    ap.add_argument("--max-rescue-rounds", type=int,
+                    default=MAX_RESCUE_ROUNDS, metavar="N",
+                    help="order discoveries per candidate group "
+                         "(default %(default)s)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the result document here instead of stdout")
+    args = ap.parse_args(argv)
+
+    if args.trace.startswith("synth:"):
+        from .testing.synth import synth_reports, synth_trace
+        trace = synth_trace(int(args.trace.split(":", 1)[1]))
+        reports = _load_reports(args.reports) if args.reports \
+            else synth_reports()
+    else:
+        trace = Trace.load(args.trace)
+        if not args.reports:
+            ap.error("--reports is required for a file trace")
+        reports = _load_reports(args.reports)
+
+    cands = _build_candidates(reports, _parse_accs(args.accs),
+                              smp=not args.no_smp)
+    ex = Explorer(trace, reports, policy=args.policy, engine=args.engine,
+                  processes=args.processes, cache_dir=args.cache_dir,
+                  max_rescue_rounds=args.max_rescue_rounds)
+    result = ex.explore(cands, top_k=args.top_k, prune=args.prune)
+
+    doc = {
+        "trace": args.trace,
+        "engine": args.engine,
+        "policy": args.policy,
+        "candidates": len(cands),
+        "wall_seconds": result.wall_seconds,
+        "best": result.best_name,
+        "top": [{"rank": o.rank, "name": o.name, "makespan_s": o.makespan_s,
+                 "bottleneck": o.bottleneck}
+                for o in result.top(args.top_k)],
+        "infeasible": result.infeasible,
+        "pruned": result.pruned,
+        "cache": dict(result.cache),
+        "replay": ex.batch_stats.as_dict(),
+    }
+    text = json.dumps(doc, indent=2)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,17 +99,23 @@ def test_batch_identical_on_bare_dags_with_two_pools(n, ca, cb, policy):
 def test_batch_divergent_lanes_fall_back_exactly():
     """A wide slot-count ramp under the availability policy produces lanes
     whose event order differs from the saturated reference — they must be
-    detected and re-simulated, and the whole batch must stay exact."""
+    detected, their own orders discovered and recorded, and the whole
+    batch must stay exact."""
     fg, _ = frozen_for(synth_trace(40), smp=True)
     systems = [zynq_system(f"{n}acc", {"fpga:k": n}) for n in range(1, 33)]
     stats = BatchStats()
     assert_batch_equals_fast(fg, systems, "availability",
                              min_lockstep=2, stats=stats)
-    assert stats.groups == 1 and stats.reference_lanes == 1
-    assert stats.diverged_lanes > 0, "ramp should force serial fallbacks"
+    assert stats.groups == 1
+    assert stats.reference_lanes >= 1, "every discovery records an order"
+    assert stats.diverged_lanes > 0, "ramp should force divergences"
     assert stats.lockstep_lanes > 0, "saturated lanes should stay in lockstep"
-    assert (stats.lockstep_lanes + stats.diverged_lanes
-            + stats.reference_lanes) == len(systems)
+    # terminal classification covers every lane exactly once
+    assert (stats.lockstep_lanes + stats.order_pinned_lanes
+            + stats.reference_lanes + stats.serial_fallback_lanes
+            + stats.small_group_lanes) == len(systems)
+    # within the default rounds budget nothing degrades to a bare fallback
+    assert stats.serial_fallback_lanes == 0
 
 
 def test_batch_small_groups_and_mixed_templates():
@@ -232,18 +238,26 @@ def test_explorer_batch_guardrail():
 
 def test_worker_registry_protocol():
     """Workers signal an unknown graph instead of failing, absorb the
-    payload once, then serve hash-only chunks from the registry."""
+    payload once, then serve hash-only chunks from the registry — and
+    batch chunks return their discovered orders plus engine telemetry
+    alongside the results."""
     fg, _ = frozen_for(synth_trace(8), smp=False)
     system = zynq_system("s", {"fpga:k": 2})
     items = [(0, system)]
     assert _process_eval_chunk("h-unknown", None, items,
                                "availability", True) is None
-    seeded = _process_eval_chunk("h-seed", fg, items, "availability", True)
-    cached = _process_eval_chunk("h-seed", None, items, "availability", False)
+    seeded, orders, wstats = _process_eval_chunk("h-seed", fg, items,
+                                                 "availability", True)
+    cached, no_orders, no_stats = _process_eval_chunk(
+        "h-seed", None, items, "availability", False)
     ref = simulate_fast(fg, system, "availability")
     for got in (seeded, cached):
         assert len(got) == 1 and got[0][0] == 0
         assert got[0][1].makespan == ref.makespan
+    # the single-lane chunk is below min_lockstep — no order is discovered
+    # and the per-candidate path reports neither orders nor stats
+    assert no_orders is None and no_stats is None
+    assert isinstance(wstats, dict) and wstats["small_group_lanes"] == 1
 
 
 def test_adaptive_chunk_size():
