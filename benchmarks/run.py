@@ -45,7 +45,8 @@ def _gated_metric(key: str) -> bool:
     """
     return (key.startswith("sweep_") and not key.endswith("_stats")) \
         or key.startswith("candidates_per_sec") \
-        or key == "batch_vs_pr2_fast_speedup"
+        or key == "batch_vs_pr2_fast_speedup" \
+        or key == "jax_megabatch_vs_chunked_speedup"
 
 
 def check_baseline(metrics: dict, baseline_path: Path,

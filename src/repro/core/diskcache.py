@@ -32,16 +32,21 @@ keys are namespaced by engine equivalence tier where it matters (see
 ``repro.core.explore._sim_disk_text``): exact engines share one sim
 namespace, the jax rtol tier gets its own.
 
-Three entry families share the store, all under the same wire format:
+Four entry families share the store, all under the same wire format:
 ``graph`` (frozen payloads), ``sim`` / ``sim-<tier>`` (schedule-free
-results), and ``orders`` (the multi-order replay library's dispatch
+results), ``orders`` (the multi-order replay library's dispatch
 orders + signature maps, keyed by ``FrozenGraph.content_hash()`` +
 policy — deliberately *not* tier-namespaced, since orders are recorded
-by the exact path and re-validated per lane by every engine).  Order
-payloads get one more gate on top of the digest check: every order is
-topologically validated against the graph before it is ever replayed
+by the exact path and re-validated per lane by every engine), and
+``xla`` (serialized XLA executables of the jax engine's compiled scan,
+keyed by jax/jaxlib version + backend + x64 mode + shape signature —
+see ``repro.core.xlacache.CompileCache``).  Order payloads get one more
+gate on top of the digest check: every order is topologically validated
+against the graph before it is ever replayed
 (``repro.core.replay.order_valid``), so even an internally-consistent
-entry re-homed from another graph degrades to rediscovery.
+entry re-homed from another graph degrades to rediscovery; ``xla``
+payloads similarly must survive ``deserialize_and_load`` or they degrade
+to a fresh compile.
 """
 from __future__ import annotations
 

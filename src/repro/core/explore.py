@@ -56,7 +56,9 @@ import collections
 import dataclasses
 import itertools
 import json
+import multiprocessing
 import random
+import sys
 import threading
 import time
 import uuid
@@ -491,25 +493,56 @@ def _process_worker_init(cache_dir: Optional[str]) -> None:
     _WORKER_LIBRARY = ReplayLibrary()
 
 
-# One long-lived executor per (worker count, disk store): spawning worker
-# processes costs ~50-100ms — more than an entire 200-candidate batched
-# sweep — so repeat sweeps must reuse the pool (and with it every worker's
-# graph registry) instead of re-forking per `explore()` call.  Explorers
-# sharing the key share the pool.  A small LRU (capacity 2, so a pattern
-# alternating between e.g. a disk-backed and a plain sweep never thrashes)
-# bounds idle workers; only the least-recently-used pool beyond that is
-# retired.  Acquisition is locked — concurrent explores may share a pool,
-# though two explores racing on *more than two distinct keys* can still
-# retire a pool the other is using (bounded, documented trade-off).
-_EXECUTORS: "collections.OrderedDict[Tuple[int, Optional[str]], " \
+# One long-lived executor per (worker count, disk store, start method):
+# spawning worker processes costs ~50-100ms — more than an entire
+# 200-candidate batched sweep — so repeat sweeps must reuse the pool (and
+# with it every worker's graph registry) instead of re-forking per
+# `explore()` call.  Explorers sharing the key share the pool.  A small LRU
+# (capacity 2, so a pattern alternating between e.g. a disk-backed and a
+# plain sweep never thrashes) bounds idle workers; only the
+# least-recently-used pool beyond that is retired.  Acquisition is locked —
+# concurrent explores may share a pool, though two explores racing on
+# *more than two distinct keys* can still retire a pool the other is using
+# (bounded, documented trade-off).
+_EXECUTORS: "collections.OrderedDict[Tuple[int, Optional[str], str], " \
             "ProcessPoolExecutor]" = collections.OrderedDict()
 _EXECUTORS_CAP = 2
 _EXECUTORS_LOCK = threading.Lock()
 
 
+def _pool_mp_context() -> "multiprocessing.context.BaseContext":
+    """The start method worker pools must use *right now*.
+
+    Forking a process that has loaded jax risks deadlock — jax's runtime is
+    multithreaded, and a forked child inherits its locks mid-state (CPython
+    emits ``RuntimeWarning: os.fork() was called ... JAX is multithreaded``
+    for exactly this).  jax's import is lazy throughout this package so
+    that pools created *before* any jax engine runs can keep the cheap fork
+    method; once ``jax`` (or ``jaxlib``) has been imported, pools switch to
+    ``forkserver`` (whose server process is started by a C-level
+    fork+exec, never copying the parent's threads; ``spawn`` is the
+    fallback where forkserver is unavailable).  The worker protocol is
+    spawn-safe by construction: workers are seeded via the
+    ``_process_worker_init`` initializer plus picklable chunk payloads,
+    never via inherited module state.
+
+    Evaluated per pool acquisition (the method is part of the executor
+    key): an Explorer created before jax loads and used after gets a fresh,
+    correctly-started pool instead of the stale fork-method one.
+    """
+    methods = multiprocessing.get_all_start_methods()
+    if "jax" in sys.modules or "jaxlib" in sys.modules:
+        for m in ("forkserver", "spawn"):
+            if m in methods:
+                return multiprocessing.get_context(m)
+    return multiprocessing.get_context(
+        "fork" if "fork" in methods else methods[0])
+
+
 def _shared_executor(procs: int,
                      cache_dir: Optional[str]) -> ProcessPoolExecutor:
-    key = (procs, cache_dir)
+    ctx = _pool_mp_context()
+    key = (procs, cache_dir, ctx.get_start_method())
     with _EXECUTORS_LOCK:
         ex = _EXECUTORS.get(key)
         if ex is not None and getattr(ex, "_broken", False):
@@ -518,6 +551,7 @@ def _shared_executor(procs: int,
             ex = None
         if ex is None:
             ex = ProcessPoolExecutor(max_workers=procs,
+                                     mp_context=ctx,
                                      initializer=_process_worker_init,
                                      initargs=(cache_dir,))
             _EXECUTORS[key] = ex
@@ -608,6 +642,8 @@ class Explorer:
                  cache_dir: Optional[str] = None,
                  engine: Optional[str] = None,
                  jax_chunk: Optional[int] = None,
+                 jax_megabatch: Optional[bool] = None,
+                 compile_cache: Optional["CompileCache"] = None,
                  order_library: Optional[ReplayLibrary] = None,
                  max_rescue_rounds: int = MAX_RESCUE_ROUNDS):
         """``engine`` names the evaluation engine directly — one of
@@ -618,13 +654,26 @@ class Explorer:
         ``engine="jax"`` evaluates each graph-sharing candidate family
         through the jit-compiled ``lax.scan`` backend
         (:mod:`repro.core.jaxsim`, rtol-tier, in-process only;
-        ``jax_chunk`` caps its compiled lane-bucket width).  ``processes``
-        > 0 fans chunks out to that many worker processes (exact fast/batch
-        engines only).  ``cache_dir`` persists frozen graphs and
-        schedule-free sims to disk, keyed by trace content hash +
-        eligibility/system signature (array engines only; jax-tier entries
-        are namespaced so they can never satisfy an exact engine's
-        lookup).  ``order_library`` shares a
+        ``jax_chunk`` caps its compiled lane-bucket width — non-power-of-
+        two caps round down to a power of two, so the compiled width
+        never exceeds the cap).  ``jax_megabatch`` (default on for the jax
+        engine) routes each evaluation chunk's *whole* graph set through
+        one compiled scan (:func:`repro.core.jaxsim.simulate_jax_many`)
+        instead of one scan per graph family; with a ``cache_dir`` the
+        compiled executables also persist
+        (:class:`~repro.core.xlacache.CompileCache`, DiskCache ``xla``
+        namespace), so warm sweeps skip XLA compilation entirely.
+        ``compile_cache`` shares an explicit
+        :class:`~repro.core.xlacache.CompileCache` across Explorers
+        (like ``order_library``; overrides the ``cache_dir`` default —
+        without either, Explorers share jaxsim's process-global
+        in-memory cache).
+        ``processes`` > 0 fans chunks out to that many worker processes
+        (exact fast/batch engines only).  ``cache_dir`` persists frozen
+        graphs and schedule-free sims to disk, keyed by trace content
+        hash + eligibility/system signature (array engines only; jax-tier
+        entries are namespaced so they can never satisfy an exact
+        engine's lookup).  ``order_library`` shares a
         :class:`~repro.core.replay.ReplayLibrary` of discovered dispatch
         orders across Explorers (default: a private one per instance);
         with ``cache_dir`` the orders also persist on disk, keyed by
@@ -661,15 +710,24 @@ class Explorer:
                 raise ValueError(f"jax_chunk only applies to engine='jax' "
                                  f"(got engine={engine!r})")
         self.jax_chunk = jax_chunk
+        if jax_megabatch is not None and engine != "jax":
+            raise ValueError(f"jax_megabatch only applies to engine='jax' "
+                             f"(got engine={engine!r})")
+        if compile_cache is not None and engine != "jax":
+            raise ValueError(f"compile_cache only applies to engine='jax' "
+                             f"(got engine={engine!r})")
+        self.jax_megabatch = (engine == "jax") if jax_megabatch is None \
+            else bool(jax_megabatch)
         self._sim_tier = "jax" if engine == "jax" else "exact"
         if engine == "jax":
             from .jaxsim import require_jax
             require_jax()                      # fail at construction time
             if self.processes:
                 raise ValueError(
-                    "engine='jax' is in-process (the jit compile cache is "
-                    "per-process, so worker fan-out would recompile the "
-                    "scan in every worker); use engine='batch' with "
+                    "engine='jax' is in-process (the compile cache makes "
+                    "compiled scans cheap to share on disk, but worker "
+                    "fan-out would still pay per-worker executable loads "
+                    "and device transfers); use engine='batch' with "
                     "processes=N for process-parallel sweeps")
         if not fast:
             if self.batch:
@@ -685,6 +743,15 @@ class Explorer:
             raise ValueError(f"max_rescue_rounds must be >= 0, got "
                              f"{max_rescue_rounds!r}")
         self._disk = DiskCache(cache_dir) if cache_dir is not None else None
+        if compile_cache is not None:
+            self.compile_cache: Optional["CompileCache"] = compile_cache
+        elif engine == "jax" and self._disk is not None:
+            from .xlacache import CompileCache
+            self.compile_cache = CompileCache(self._disk)
+        else:
+            # None ⇒ jaxsim's process-global in-memory cache: fresh
+            # Explorers share warm executables within one process
+            self.compile_cache = None
         self.stats = CacheStats()
         self.batch_stats = BatchStats()     # parent-side batchsim telemetry
         self.order_library = order_library if order_library is not None \
@@ -1137,6 +1204,8 @@ class Explorer:
             pending.setdefault(gkey, []).append((pos, cand, key, text, ghit))
 
         if ppool is None:                      # serial lockstep evaluation
+            if self.engine == "jax" and self.jax_megabatch and pending:
+                return self._evaluate_megabatch(pending, graph_info, results)
             for gkey, items in pending.items():
                 payload, stats, crit, lb = graph_info[gkey]
                 t0 = time.perf_counter()
@@ -1216,6 +1285,38 @@ class Explorer:
                     cand, stats, crit, lb, ghit, False, sim, share)
         return results
 
+    def _evaluate_megabatch(self, pending: Mapping[Tuple, Sequence[Tuple]],
+                            graph_info: Mapping[Tuple, Tuple],
+                            results: List) -> List:
+        """Every graph family of one evaluation chunk through a single
+        compiled scan (:func:`repro.core.jaxsim.simulate_jax_many`) —
+        one megabatch dispatch instead of one per-graph scan each, with
+        compiled executables shared via the Explorer's compile cache."""
+        from .jaxsim import simulate_jax_many
+        gkeys = list(pending)
+        fams = []
+        for gkey in gkeys:
+            payload = graph_info[gkey][0]
+            self._load_orders(payload)
+            fams.append((payload, [cand.system for _, cand, _, _, _
+                                   in pending[gkey]]))
+        t0 = time.perf_counter()
+        kw = {} if self.jax_chunk is None else {"chunk": self.jax_chunk}
+        fam_sims = simulate_jax_many(
+            fams, self.policy, stats=self.batch_stats,
+            library=self.order_library, max_rounds=self.max_rescue_rounds,
+            compile_cache=self.compile_cache, **kw)
+        n_total = sum(len(v) for v in pending.values()) or 1
+        share = (time.perf_counter() - t0) / n_total
+        for gkey, sims in zip(gkeys, fam_sims):
+            _, stats, crit, lb = graph_info[gkey]
+            for (pos, cand, key, text, ghit), sim in zip(pending[gkey],
+                                                         sims):
+                self._sim_store(key, text, sim)
+                results[pos] = self._outcome_from_sim(
+                    cand, stats, crit, lb, ghit, False, sim, share)
+        return results
+
     def _lockstep_family(self, payload: FrozenGraph,
                          systems: Sequence[SystemConfig]) -> List[SimResult]:
         """One graph-sharing candidate family through the configured
@@ -1228,7 +1329,8 @@ class Explorer:
             return simulate_jax(payload, systems, self.policy,
                                 stats=self.batch_stats,
                                 library=self.order_library,
-                                max_rounds=self.max_rescue_rounds, **kw)
+                                max_rounds=self.max_rescue_rounds,
+                                compile_cache=self.compile_cache, **kw)
         return simulate_batch(payload, systems, self.policy,
                               stats=self.batch_stats,
                               library=self.order_library,
@@ -1284,6 +1386,8 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
             cache_dir: Optional[str] = None,
             engine: Optional[str] = None,
             jax_chunk: Optional[int] = None,
+            jax_megabatch: Optional[bool] = None,
+            compile_cache: Optional["CompileCache"] = None,
             order_library: Optional[ReplayLibrary] = None,
             max_rescue_rounds: int = MAX_RESCUE_ROUNDS) -> ExplorationResult:
     """Estimate every feasible candidate; rank; pick the best.
@@ -1299,6 +1403,7 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
                   max_workers=max_workers, cache=cache, fast=fast,
                   batch=batch, processes=processes, cache_dir=cache_dir,
                   engine=engine, jax_chunk=jax_chunk,
+                  jax_megabatch=jax_megabatch, compile_cache=compile_cache,
                   order_library=order_library,
                   max_rescue_rounds=max_rescue_rounds)
     return ex.explore(candidates, top_k=top_k, prune=prune)

@@ -32,13 +32,38 @@ Invariants (shared with the numpy backend unless stated):
   ``prev_key`` per lane); lanes whose popped ``(ready_t, tie_break)`` keys
   ever violate it are flagged, their scan state is discarded, and they are
   re-simulated through :func:`~repro.core.fastsim.simulate_fast` — the
-  identical contract to the numpy backend, enforced by
-  :func:`repro.core.replay.replay_group`.
+  identical contract to the numpy backend.
 * **Fixed-bucket lane chunking.**  Lanes are evaluated in chunks padded to
-  power-of-two widths (``chunk`` caps the bucket), so repeat sweeps over
-  the same graph reuse the jit cache instead of recompiling per candidate
-  count; padding lanes replicate a real lane and are dropped before
-  assembly.
+  power-of-two widths (``chunk`` caps the bucket — non-power-of-two caps
+  round *down* to a power of two, so the compiled width never exceeds the
+  cap and the jit cache stays keyed on a handful of shapes); padding lanes
+  replicate a real lane and are dropped before assembly.
+
+Beyond the per-graph protocol, two mechanisms flip the engine's cold-start
+economics:
+
+* **Multi-graph megabatch** (:func:`simulate_jax_many`).  One scan serves
+  *every* graph family of a sweep at once: heterogeneous
+  ``(graph, order)`` cohorts are padded along the task axis to a shared
+  ``[T, G, ...]`` step-input block with per-step validity masks, each lane
+  carries its cohort index ``g``, and the step body gathers its row data
+  per lane.  A sweep whose graphs each batched 100 lanes through their own
+  compiled shapes now runs as one wide scan — one compile, no per-graph
+  remainder chunks.  The routing/discovery protocol around it is
+  :func:`repro.core.replay.simulate_many`.
+* **Persistent compile cache** (:class:`repro.core.xlacache.CompileCache`).
+  The scan runner is compiled ahead-of-time per shape signature and the
+  serialized executable persists in the sweep's DiskCache (``xla``
+  namespace), so a warm store turns the multi-second cold compile into a
+  millisecond deserialize — across processes and runs, exactly like the
+  order library.
+
+The step body's commit (pool select + slot argmin + clock/busy/seen
+update) is pluggable (``step_impl``): the default pure-``lax`` form, or
+the fused pallas kernel :func:`repro.kernels.lockstep_step.step_commit`
+(TPU-native on TPU backends; ``"pallas-interpret"`` runs the same kernel
+body under the interpreter so CPU CI exercises it at the ``JAX_RTOL``
+tier).
 
 The jax dependency is gated: importing this module without jax installed
 works, and :func:`simulate_jax` raises a clear ``RuntimeError`` pointing at
@@ -46,7 +71,9 @@ the exact engines instead.
 """
 from __future__ import annotations
 
+import collections
 import functools
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -56,19 +83,45 @@ from .fastsim import FrozenGraph, simulate_fast
 # JAX_RTOL is re-exported here on purpose: it is this engine's tier constant.
 from .replay import (BatchStats, JAX_RTOL, Layout,  # noqa: F401
                      MAX_RESCUE_ROUNDS, MIN_LOCKSTEP, RESCUE_MIN,
-                     ReplayLibrary, graph_aux, lane_results, simulate_grouped)
+                     ReplayLibrary, graph_aux, lane_results, simulate_grouped,
+                     simulate_many)
 from .simulator import SimResult
+from .xlacache import CompileCache
 
 # The jax import is deferred until the engine is actually used: importing
 # repro.core (which re-exports simulate_jax) must stay cheap and must not
-# load a multithreaded runtime before the exploration engine's fork-based
-# process pools start.  _jax() performs and caches the gated import.
+# load a multithreaded runtime before the exploration engine's process
+# pools pick a start method.  _jax() performs and caches the gated import.
 _JAX_MODULES: Optional[Tuple] = None
 _JAX_ERROR: Optional[BaseException] = None
 
-#: Lanes per compiled scan chunk (the bucket cap).  Chunks are padded up to
-#: power-of-two widths so the jit cache is keyed on a handful of shapes.
+#: Lanes per compiled scan chunk (the bucket cap) on the per-graph path.
+#: Chunks are padded up to power-of-two widths so the jit cache is keyed
+#: on a handful of shapes; non-power-of-two caps round down to a power of
+#: two (the effective cap), so the compiled width never exceeds the cap.
 DEFAULT_CHUNK = 64
+
+#: Lane-bucket cap for the multi-graph megabatch: wider than the per-graph
+#: default because one scan now carries every cohort of the sweep, so the
+#: fixed per-scan overhead amortises over more lanes per launch.
+MEGABATCH_CHUNK = 256
+
+#: Megabatch slice working-set target, in f64 clock elements (``P×S×B``).
+#: The scan's per-step cost has two regimes: a fixed dispatch overhead per
+#: launch-step, and array traffic that scales with the clock block — and
+#: the traffic turns super-linear once the block spills L2.  Slices are
+#: therefore sized so ``P_max × S × B`` stays near this target (64 KiB of
+#: f64): wide lanes for narrow slot axes, narrow lanes for wide ones.
+TARGET_SLICE_ELEMS = 8192
+
+#: Valid ``step_impl`` names: ``auto`` picks the pallas kernel on TPU
+#: backends and pure lax elsewhere; ``pallas-interpret`` forces the pallas
+#: kernel body under the interpreter (slow — CI equivalence runs only).
+STEP_IMPLS = ("auto", "lax", "pallas", "pallas-interpret")
+
+#: Fallback in-memory compile cache for bare ``simulate_jax`` calls with no
+#: Explorer-owned cache: still deduplicates compiles within the process.
+_MEM_COMPILE_CACHE = CompileCache()
 
 
 def _jax():
@@ -104,48 +157,105 @@ def require_jax() -> None:
 
 
 def _bucket(n: int, cap: int) -> int:
-    """Smallest power of two >= n, clamped to [8, cap]."""
-    b = 8
-    while b < n and b < cap:
+    """Smallest power of two >= ``n``, clamped to ``[min(8, cap'), cap']``
+    where ``cap'`` is ``cap`` rounded *down* to a power of two.
+
+    The result is always a power of two and never exceeds ``cap`` — a
+    non-power-of-two cap (say ``jax_chunk=48``) must not leak odd compiled
+    widths (48-lane buckets) into the jit cache, and must never compile
+    *wider* than the user asked."""
+    cap_p = 1
+    while cap_p * 2 <= cap:
+        cap_p *= 2
+    b = min(8, cap_p)
+    while b < n and b * 2 <= cap_p:
         b *= 2
-    return min(b, cap)
+    return b
+
+
+def _resolve_step_impl(step_impl: str) -> str:
+    if step_impl not in STEP_IMPLS:
+        raise ValueError(f"unknown step_impl {step_impl!r}: valid names are "
+                         + ", ".join(repr(s) for s in STEP_IMPLS))
+    if step_impl == "auto":
+        jax, _, _ = _jax()
+        return "pallas" if jax.default_backend() == "tpu" else "lax"
+    return step_impl
 
 
 # ---------------------------------------------------------------------------
-# The compiled scan (traced once per (graph shape, bucket) signature)
+# The compiled scan runner (one body serves per-graph and megabatch paths)
 # ---------------------------------------------------------------------------
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_scan():
-    """Build the jitted scan runner lazily (so import stays jax-free)."""
-    jax, jnp, _ = _jax()
+def _runner(step_impl: str):
+    """The pure scan function for one resolved ``step_impl``.
 
-    def run(xs, clocks, ready, placement, busy, seen, kind_pool, smp_kid,
-            eft):
+    All shapes are megabatch-form and **lane-aligned**: step inputs ``xs``
+    carry the lane axis directly (``[T, B, ...]`` — each lane's cohort
+    rows pre-gathered on the host by :func:`_scan_cohorts`), and per-step
+    ``valid`` masks make the task-axis padding inert.  Keeping the cohort
+    gathers out of the compiled body matters on CPU, where the scan is
+    dispatch-bound: a dozen per-step gather ops cost more than the dense
+    math they feed.  It also keeps the cohort count out of the shape
+    signature, so warm-run routing drift (cohorts splitting as orders are
+    discovered) cannot invalidate the compile cache.  Compiled
+    ahead-of-time per shape signature via
+    :class:`~repro.core.xlacache.CompileCache` (see :func:`_load_runner`).
+    """
+    jax, jnp, _ = _jax()
+    use_pallas = step_impl in ("pallas", "pallas-interpret")
+    if use_pallas:
+        from ..kernels.lockstep_step import step_commit
+        interpret = (step_impl == "pallas-interpret"
+                     or jax.default_backend() != "tpu")
+        kernel_commit = functools.partial(step_commit, interpret=interpret)
+
+    def commit(clocks, busy, seen, p, rt, base, live, aB):
+        """Slot argmin + clock/busy/seen update — the step's dense tail."""
+        if use_pallas:
+            return kernel_commit(clocks, busy, seen, p, rt, base, live)
+        cl = clocks[p, :, aB]                               # [B, S]
+        s = jnp.argmin(cl, axis=1)          # first-minimum, like ref
+        tmin = cl[aB, s]
+        start = jnp.maximum(rt, tmin)
+        end = start + base
+        clocks = clocks.at[p, s, aB].set(
+            jnp.where(live, end, clocks[p, s, aB]))
+        busy = busy.at[p, aB].add(jnp.where(live, end - start, 0.0))
+        seen = seen.at[p, aB].set(seen[p, aB] | live)
+        return clocks, busy, seen, end
+
+    def run(xs, clocks, ready, placement, busy, seen, kind_pool,
+            smp_kid, eft):
         B = clocks.shape[2]
         aB = jnp.arange(B)
-        S_max = xs["succ"].shape[1]
-        K = xs["own_opts"].shape[1]
+        K = xs["own_opts"].shape[2]
+        skid = smp_kid                                      # [B]
 
-        def choose(opts, cost_row, rt, clocks):
+        def choose(opts, cost, rt, minc):
             """Vectorised reference `_choose_kind` over all lanes: options
             visited in annotation order, strict < on (key, pref) — the
             lowest-index winner, identical tie-breaks to the exact
-            engines."""
+            engines.  ``opts [B, K]`` / ``cost [B, NK]`` are the lanes'
+            own cohorts' tables (lane-aligned by the host pre-gather);
+            ``minc [P, B]`` is the step's hoisted earliest-free-slot
+            reduction, so each option costs a [B] gather instead of its
+            own [B, S] min."""
             best_k = jnp.full((B,), -1, dtype=placement.dtype)
-            bv = jnp.zeros((B,), dtype=clocks.dtype)
-            bp = jnp.zeros((B,), dtype=clocks.dtype)
+            bv = jnp.zeros((B,), dtype=minc.dtype)
+            bp = jnp.zeros((B,), dtype=minc.dtype)
             for j in range(K):                      # K is static and tiny
-                k = opts[j]
+                k = opts[:, j]
                 kk = jnp.maximum(k, 0)
-                pi = kind_pool[kk]
+                pi = kind_pool[aB, kk]                          # [B]
                 valid = (k >= 0) & (pi >= 0)
-                base = cost_row[kk]
-                t = jnp.min(clocks[jnp.maximum(pi, 0)], axis=0)     # [B]
+                base = cost[aB, kk]
+                t = minc[jnp.maximum(pi, 0), aB]
                 start = jnp.maximum(rt, t)
                 keyv = start + jnp.where(eft, base, 0.0)
-                pref = jnp.where(k == smp_kid, 1.0, 0.0)
+                pref = jnp.where(k == skid, 1.0, 0.0)
                 better = valid & ((best_k < 0) | (keyv < bv)
                                   | ((keyv == bv) & (pref < bp)))
                 bv = jnp.where(better, keyv, bv)
@@ -156,60 +266,65 @@ def _compiled_scan():
         def step(carry, x):
             (clocks, ready, placement, busy, seen, makespan, prev_rt,
              prev_tb, div) = carry
-            r = x["r"]
-            rt = ready[r]                                           # [B]
+            valid = x["valid"]                                  # [B]
+            r = x["r"]                   # dummy row n_max on invalid steps
+            rt = ready[r, aB]                                   # [B]
+            tbv = x["tb"]
             # heap-key monotonicity: a lane whose popped (ready_t, tb) key
             # ever fails to strictly increase is not executing its own heap
-            # order — flag it for the exact fallback
-            div = div | (rt < prev_rt) | ((rt == prev_rt)
-                                          & (x["tb"] <= prev_tb))
+            # order — flag it for the exact fallback.  Invalid (padding)
+            # steps read the dummy ready row, so every check and write
+            # below is gated on `valid`.
+            div = div | (valid & ((rt < prev_rt)
+                                  | ((rt == prev_rt) & (tbv <= prev_tb))))
             # (div also absorbs bad dispatches below: any lane that *live*
             # -executes a row the reference would raise on takes the exact
             # fallback, which re-raises — or completes when the lane never
             # actually reaches the row under its own order)
 
+            # earliest-free slot per (pool, lane), shared by both choose
+            # passes (clocks are only committed after them)
+            minc = jnp.min(clocks, axis=1)                      # [P, B]
+
             # ---- conditional pass-through (per-lane mask) ---------------
             c = x["c"]
-            has_cond = c >= 0
+            has_cond = (c >= 0) & valid
             cmax = jnp.maximum(c, 0)
-            pk = placement[cmax]                                    # [B]
-            chosen_p = choose(x["par_opts"], x["par_cost"], rt, clocks)
+            pk = placement[cmax, aB]                            # [B]
+            chosen_p = choose(x["par_opts"], x["par_cost"], rt, minc)
             pk = jnp.where(pk < 0, chosen_p, pk)
-            placement = placement.at[cmax].set(
-                jnp.where(has_cond, pk, placement[cmax]))
-            live = jnp.where(has_cond, x["act"][jnp.maximum(pk, 0)], True)
+            placement = placement.at[cmax, aB].set(
+                jnp.where(has_cond, pk, placement[cmax, aB]))
+            live = jnp.where(has_cond, x["act"][aB, jnp.maximum(pk, 0)],
+                             True) & valid
 
             # ---- dispatch + commit for the lanes executing the row ------
-            k_own = placement[r]
+            k_own = placement[r, aB]
             und = k_own < 0
-            chosen_o = choose(x["own_opts"], x["own_cost"], rt, clocks)
-            k = jnp.where(x["is_comp"], jnp.where(und, chosen_o, k_own),
+            chosen_o = choose(x["own_opts"], x["own_cost"], rt, minc)
+            is_comp = x["is_comp"]
+            k = jnp.where(is_comp, jnp.where(und, chosen_o, k_own),
                           x["k_first"])
-            placement = placement.at[r].set(
-                jnp.where(x["is_comp"] & live & und, k, placement[r]))
+            placement = placement.at[r, aB].set(
+                jnp.where(is_comp & live & und, k, placement[r, aB]))
             div = div | (live & (x["bad_row"] | (k < 0)))
             kk = jnp.maximum(k, 0)
-            p = jnp.maximum(kind_pool[kk], 0)                       # [B]
-            base = x["own_cost"][kk]                                # [B]
-            cl = clocks[p, :, aB]                                   # [B, S]
-            s = jnp.argmin(cl, axis=1)          # first-minimum, like ref
-            tmin = cl[aB, s]
-            start = jnp.maximum(rt, tmin)
-            end = start + base
-            end_eff = jnp.where(live, end, rt)
-            clocks = clocks.at[p, s, aB].set(
-                jnp.where(live, end, clocks[p, s, aB]))
-            busy = busy.at[p, aB].add(jnp.where(live, end - start, 0.0))
-            seen = seen.at[p, aB].set(seen[p, aB] | live)
+            p = jnp.maximum(kind_pool[aB, kk], 0)               # [B]
+            base = x["own_cost"][aB, kk]                        # [B]
+            clocks, busy, seen, end = commit(clocks, busy, seen, p, rt,
+                                             base, live, aB)
+            end_eff = jnp.where(live, end, jnp.where(valid, rt, 0.0))
             makespan = jnp.maximum(makespan, end_eff)
-            ready = ready.at[x["succ"]].max(
-                jnp.broadcast_to(end_eff, (S_max, B)))
-            return (clocks, ready, placement, busy, seen, makespan, rt,
-                    x["tb"], div), None
+            ready = ready.at[x["succ"], aB[:, None]].max(
+                end_eff[:, None])
+            prev_rt = jnp.where(valid, rt, prev_rt)
+            prev_tb = jnp.where(valid, tbv, prev_tb)
+            return (clocks, ready, placement, busy, seen, makespan,
+                    prev_rt, prev_tb, div), None
 
         makespan = jnp.zeros((B,), dtype=clocks.dtype)
         prev_rt = jnp.full((B,), -jnp.inf, dtype=clocks.dtype)
-        prev_tb = jnp.asarray(-1, dtype=xs["tb"].dtype)
+        prev_tb = jnp.full((B,), -1, dtype=xs["tb"].dtype)
         div = jnp.zeros((B,), dtype=bool)
         init = (clocks, ready, placement, busy, seen, makespan, prev_rt,
                 prev_tb, div)
@@ -217,11 +332,47 @@ def _compiled_scan():
          div), _ = jax.lax.scan(step, init, xs)
         return makespan, busy, seen, placement, div
 
-    return jax.jit(run)
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _code_fingerprint() -> str:
+    """Hash of the scan/kernel source files, part of every compile-cache
+    key: a persisted executable compiled from an older version of the step
+    semantics must miss, never silently serve stale results."""
+    from repro.kernels import lockstep_step
+    h = hashlib.sha256()
+    for mod_file in (__file__, lockstep_step.__file__):
+        try:
+            with open(mod_file, "rb") as f:
+                h.update(f.read())
+        except OSError:                 # zipped/frozen install: sources
+            return "unhashable"         # unreadable, env key still applies
+    return h.hexdigest()[:16]
+
+
+def _signature(step_impl: str, args: Tuple) -> Tuple:
+    """Shape/dtype signature of one runner invocation — the compile-cache
+    key body (the environment half lives in CompileCache)."""
+    def one(a):
+        return (tuple(a.shape), str(a.dtype))
+    xs = args[0]
+    return (_code_fingerprint(), step_impl,
+            tuple((k, one(v)) for k, v in sorted(xs.items())),
+            tuple(one(a) for a in args[1:]))
+
+
+def _load_runner(cc: CompileCache, step_impl: str, args: Tuple):
+    """The AOT-compiled executable for this signature: in-memory hit, disk
+    deserialize, or fresh ``lower().compile()`` (then persisted)."""
+    jax, _, _ = _jax()
+    return cc.load_or_compile(
+        _signature(step_impl, args),
+        lambda: jax.jit(_runner(step_impl)).lower(*args))
 
 
 # ---------------------------------------------------------------------------
-# Group driver: shared xs, chunked lanes, exact fallback
+# Per-cohort step inputs
 # ---------------------------------------------------------------------------
 
 
@@ -257,21 +408,66 @@ def _bad_rows(fg: FrozenGraph, kind_pool: Sequence[int]) -> np.ndarray:
     return bad
 
 
+def _pool_caps(fg: FrozenGraph, order: Sequence[int],
+               kind_pool: Sequence[int], P: int) -> np.ndarray:
+    """``int[P]``: how many rows of ``order`` could *ever* dispatch to each
+    pool — computes count toward every eligible pool, non-computes toward
+    their device's pool.
+
+    This bounds the slot axis exactly: slots are claimed in prefix order
+    (the commit's first-minimum argmin always prefers the lowest-index
+    free slot, and every slot starts free), so a pool that receives at
+    most ``m`` dispatches can never touch slot ``m`` or beyond — clamping
+    a lane's slot count to the cap changes nothing about its schedule.  A
+    1000-slot candidate over a 64-task graph then costs a 64-wide slot
+    axis, not 1024 (the canonical over-provisioned end of a co-design
+    ramp).  Memoised per (order, kind_pool) beside :func:`_group_xs`.
+    """
+    cache = getattr(fg, "_jax_caps", None)
+    if cache is None:
+        cache = fg._jax_caps = {}
+    ckey = (tuple(order), tuple(kind_pool), P)
+    cached = cache.get(ckey)
+    if cached is not None:
+        return cached
+    (_uids, _ci, _cond, dev_first, dev_opts, _asets, _costs, _succs,
+     _npred, is_comp, *_rest) = fg._runtime()
+    cap = np.zeros(P, dtype=np.int64)
+    for r in order:
+        for k in (dev_opts[r] if is_comp[r] else (dev_first[r],)):
+            p = kind_pool[k]
+            if p >= 0:
+                cap[p] += 1
+    if len(cache) >= _XS_CACHE_CAP:
+        cache.pop(next(iter(cache)))
+    cache[ckey] = cap
+    return cap
+
+
 # Per-FrozenGraph cap on memoised (order, kind_pool) -> xs entries.  With
 # the multi-order replay library a warm sweep replays one order per
 # signature-routed cohort, so the cap matches the library's per-key order
 # cap instead of the old one-reference-order assumption.
 _XS_CACHE_CAP = 32
 
+# Lane-aligned device blocks, memoised across _scan_cohorts calls: keyed by
+# content (per-cohort graph hash × order × pool template), megabatch dims
+# and the slice's cohort-index vector.  Entries are a few MB of device
+# arrays each; the cap bounds residency, LRU evicts.
+_DEV_XS_CACHE: "collections.OrderedDict[Tuple, Tuple]" = \
+    collections.OrderedDict()
+_DEV_XS_CACHE_CAP = 16
+
 
 def _group_xs(fg: FrozenGraph, order: Sequence[int],
               kind_pool: Sequence[int]) -> Dict[str, np.ndarray]:
-    """Per-step scan inputs shared by every lane of the group, in replay
+    """Per-step scan inputs shared by every lane of the cohort, in replay
     order: row ids, tie-break scalars, conditional parents, device options
     and cost rows for the row *and* its conditional parent (the parent's
     placement may be decided at this step), activation-mask rows,
     bad-dispatch flags (:func:`_bad_rows`), and padded successor lists
-    (pad = ``n``, a dummy ready row).
+    (pad = ``n``, a dummy ready row — remapped to the megabatch dummy by
+    :func:`_scan_cohorts`).
 
     Memoised on the FrozenGraph like :func:`~repro.core.replay.graph_aux`
     (repeat sweeps — re-ranks, hillclimbs — replay the same order over the
@@ -333,77 +529,265 @@ def _group_xs(fg: FrozenGraph, order: Sequence[int],
     return xs
 
 
-def _scan_group(fg: FrozenGraph, order: Sequence[int],
-                layouts: Sequence[Layout], policy: str, *,
-                chunk: int = DEFAULT_CHUNK
-                ) -> Tuple[Dict[int, SimResult], List[int]]:
-    """Drive every lane through ``order`` with the compiled scan.
+# ---------------------------------------------------------------------------
+# Cohort driver: task-axis padding, chunked lanes, shared compiled scan
+# ---------------------------------------------------------------------------
 
-    Returns ``(done, diverged)`` in the :data:`repro.core.replay.LockstepFn`
-    contract: ``done`` maps lane position -> schedule-free SimResult
-    (``system`` filled by the caller), ``diverged`` lists lane positions
-    whose heap keys broke monotonicity (state discarded).
+
+def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
+                                          Sequence[Layout]]],
+                  policy: str, *, chunk: int,
+                  compile_cache: Optional[CompileCache] = None,
+                  step_impl: str = "auto",
+                  slot_bucketed: bool = False
+                  ) -> List[Tuple[Dict[int, SimResult], List[int]]]:
+    """Drive every lane of every ``(fg, order, layouts)`` cohort through
+    one shared compiled scan.
+
+    Task-axis padding layout: per-cohort step inputs (:func:`_group_xs`)
+    are stacked into ``[T_max, G, ...]`` blocks — steps beyond a cohort's
+    own length carry ``valid=False``, the dummy row id ``n_max`` and
+    all-dummy successor lists, so they update nothing; rows/pools/options
+    pad to the megabatch maxima with inert values (``-1`` options, dummy
+    successors, ``inf`` clocks beyond a lane's slot count).  Lanes from
+    *all* cohorts share the bucketed lane axis (``chunk`` caps the bucket;
+    padding lanes replicate the last real lane).
+
+    ``slot_bucketed=True`` (the megabatch path) additionally sorts lanes
+    by the slot count they actually need and compiles each slice with the
+    *narrowest* power-of-two slot axis covering it, instead of one global
+    slot axis sized to the widest lane of the sweep.  Per-step cost is
+    ``O(S × B)`` plus a fixed per-step dispatch overhead, so the slicer
+    optimises both terms: lanes pack greedily up to ``chunk``, and a new
+    slice only opens at a slot-bucket boundary once the current one holds
+    ``chunk/8`` lanes (small slot groups merge into their wider neighbour
+    rather than paying another scan launch — on a CPU backend the launch
+    count dominates).  On slot-count ramps (1..N accelerators — the
+    canonical co-design sweep) this cuts the scan work from
+    ``max_slots × n_lanes`` to roughly ``Σ slots_per_lane`` with only a
+    handful of compiled shapes, all persisted by the compile cache.  The
+    per-graph path keeps the single global slot axis: its cohorts come
+    pre-grouped by pool template, and one shape per chunk width keeps the
+    jit cache minimal.
+
+    Returns one ``(done, diverged)`` pair per cohort in the
+    :data:`repro.core.replay.LockstepFn` contract, positions indexing the
+    cohort's own ``layouts``.
     """
     _, jnp, enable_x64 = _jax()
+    impl = _resolve_step_impl(step_impl)
+    cc = compile_cache if compile_cache is not None else _MEM_COMPILE_CACHE
     eft = policy == "eft"
-    kinds = fg.kinds
-    smp_kid = kinds.index("smp") if "smp" in kinds else -1
-    pool_names, _, kind_pool = layouts[0]               # template-shared
-    P = len(pool_names)
-    lane_counts = [lay[1] for lay in layouts]
-    S = _bucket(max(max(c) for c in lane_counts), cap=1 << 30)
-    n = fg.n
-    L = len(layouts)
 
-    xs_np = _group_xs(fg, order, kind_pool)
-    kept: List[int] = []
-    diverged: List[int] = []
-    cols_mk: List[np.ndarray] = []
-    cols_busy: List[np.ndarray] = []
-    cols_seen: List[np.ndarray] = []
-    cols_place: List[np.ndarray] = []
+    per = []
+    for fg, order, layouts in cohorts:
+        pool_names, _, kind_pool = layouts[0]           # template-shared
+        kinds = fg.kinds
+        caps = _pool_caps(fg, order, kind_pool, len(pool_names))
+        lane_counts = [lay[1] for lay in layouts]
+        per.append({
+            "fg": fg, "xs": _group_xs(fg, order, kind_pool),
+            "pool_names": pool_names, "kind_pool": list(kind_pool),
+            "smp_kid": kinds.index("smp") if "smp" in kinds else -1,
+            "lane_counts": lane_counts,
+            # slot-axis need per lane: pool slot counts clamped to the
+            # dispatch caps (exact — see _pool_caps)
+            "needs": [max(1, max((min(int(c), int(caps[p]))
+                                  for p, c in enumerate(cnt)), default=1))
+                      for cnt in lane_counts],
+            "n": fg.n, "P": len(pool_names),
+        })
+    G = len(per)
+    n_max = max(c["n"] for c in per)
+    P_max = max(c["P"] for c in per)
+    T_max = max(len(c["xs"]["r"]) for c in per)
+    K = max(c["xs"]["own_opts"].shape[1] for c in per)
+    NK = max(len(c["kind_pool"]) for c in per)
+    SC = max(c["xs"]["succ"].shape[1] for c in per)
+    S = _bucket(max(nd for c in per for nd in c["needs"]), cap=1 << 30)
+
+    kind_pool_m = np.full((G, NK), -1, dtype=np.int32)
+    smp_kid_m = np.full((G,), -1, dtype=np.int32)
+    for gi, c in enumerate(per):
+        nk = len(c["kind_pool"])
+        kind_pool_m[gi, :nk] = c["kind_pool"]
+        smp_kid_m[gi] = c["smp_kid"]
+
+    _mega_memo: List[Optional[Dict[str, np.ndarray]]] = [None]
+
+    def _mega() -> Dict[str, np.ndarray]:
+        """The ``[T_max, G, ...]`` task-axis-padded step-input stack —
+        built lazily: a warm repeat sweep whose slices all hit the device
+        cache never stacks it at all."""
+        if _mega_memo[0] is not None:
+            return _mega_memo[0]
+        mega = {
+            "valid": np.zeros((T_max, G), dtype=bool),
+            "r": np.full((T_max, G), n_max, dtype=np.int32),
+            "tb": np.zeros((T_max, G), dtype=np.int64),
+            "c": np.full((T_max, G), -1, dtype=np.int32),
+            "is_comp": np.zeros((T_max, G), dtype=bool),
+            "k_first": np.zeros((T_max, G), dtype=np.int32),
+            "own_opts": np.full((T_max, G, K), -1, dtype=np.int32),
+            "own_cost": np.zeros((T_max, G, NK), dtype=np.float64),
+            "par_opts": np.full((T_max, G, K), -1, dtype=np.int32),
+            "par_cost": np.zeros((T_max, G, NK), dtype=np.float64),
+            "act": np.zeros((T_max, G, NK), dtype=bool),
+            "bad_row": np.zeros((T_max, G), dtype=bool),
+            "succ": np.full((T_max, G, SC), n_max, dtype=np.int32),
+        }
+        for gi, c in enumerate(per):
+            xs = c["xs"]
+            T, n = len(xs["r"]), c["n"]
+            kg, nk, sc = (xs["own_opts"].shape[1], xs["own_cost"].shape[1],
+                          xs["succ"].shape[1])
+            mega["valid"][:T, gi] = True
+            for f in ("r", "tb", "c", "is_comp", "k_first", "bad_row"):
+                mega[f][:T, gi] = xs[f]
+            mega["own_opts"][:T, gi, :kg] = xs["own_opts"]
+            mega["par_opts"][:T, gi, :kg] = xs["par_opts"]
+            mega["own_cost"][:T, gi, :nk] = xs["own_cost"]
+            mega["par_cost"][:T, gi, :nk] = xs["par_cost"]
+            mega["act"][:T, gi, :nk] = xs["act"]
+            # each cohort's own dummy successor row is its fg.n — remap to
+            # the megabatch-wide dummy ready row n_max
+            mega["succ"][:T, gi, :sc] = np.where(xs["succ"] == n, n_max,
+                                                 xs["succ"])
+        _mega_memo[0] = mega
+        return mega
+
+    # cache key prefix for the lane-aligned device blocks: content-based
+    # (graph hash × order × pool template per cohort), so repeat sweeps
+    # hit it across fresh Explorers — a warm re-rank re-launches resident
+    # device blocks without re-stacking or re-transferring anything
+    base_key = (tuple((c["fg"].content_hash(), tuple(c["xs"]["r"]),
+                       tuple(c["kind_pool"])) for c in per),
+                (T_max, n_max, P_max, K, NK, SC),
+                kind_pool_m.tobytes(), smp_kid_m.tobytes())
+
+    lanes_flat = [(gi, pos) for gi, c in enumerate(per)
+                  for pos in range(len(c["lane_counts"]))]
+    accs = [{"kept": [], "mk": [], "busy": [], "seen": [], "place": []}
+            for _ in per]
+    diverged: List[List[int]] = [[] for _ in per]
+    step = _bucket(chunk, cap=chunk)    # effective power-of-two slice width
+
+    def _need(lane):
+        gi, pos = lane
+        return per[gi]["needs"][pos]
+
+    def _width(S_sl: int) -> int:
+        """Lane width keeping the slice's clock block near the cache
+        target: ``P_max × S_sl × width ≈ TARGET_SLICE_ELEMS``, floored at
+        16 lanes and capped by ``chunk``."""
+        return max(16, min(step,
+                           _bucket(TARGET_SLICE_ELEMS // (P_max * S_sl),
+                                   cap=1 << 30)))
+
+    slices: List[Tuple[List[Tuple[int, int]], int]] = []
+    if slot_bucketed:
+        by_slots = sorted(lanes_flat, key=lambda t: (_need(t), t))
+        cur: List[Tuple[int, int]] = []
+        cur_S = 1
+        for lane in by_slots:
+            nb = max(cur_S, _bucket(_need(lane), cap=1 << 30))
+            if cur and len(cur) >= _width(nb):
+                slices.append((cur, cur_S))
+                cur, cur_S = [], 1
+                nb = _bucket(_need(lane), cap=1 << 30)
+            cur.append(lane)
+            cur_S = nb
+        if cur:
+            slices.append((cur, cur_S))
+    else:
+        slices = [(lanes_flat[lo:lo + step], S)
+                  for lo in range(0, len(lanes_flat), step)]
 
     with enable_x64():
-        xs = {k: jnp.asarray(v) for k, v in xs_np.items()}
-        kind_pool_j = jnp.asarray(kind_pool, dtype=jnp.int32)
-        run = _compiled_scan()
-        for lo in range(0, L, chunk):
-            lanes = list(range(lo, min(lo + chunk, L)))
-            B = _bucket(len(lanes), cap=chunk)
+        # lane-aligned step inputs per distinct cohort-index vector: the
+        # host gathers [T, G, ...] -> [T, B, ...] once per slice shape so
+        # the compiled body carries no gather ops (and no G in its shape
+        # signature).  The device blocks are memoised across calls
+        # (module-level LRU): per-graph chunking reuses one upload across
+        # its equal-width slices, and warm repeat sweeps re-launch the
+        # resident blocks without re-stacking or re-transferring anything.
+        def _lane_aligned(g_np: np.ndarray) -> Tuple:
+            key = (base_key, g_np.tobytes())
+            hit = _DEV_XS_CACHE.get(key)
+            if hit is None:
+                mega = _mega()
+                hit = ({k: jnp.asarray(np.ascontiguousarray(v[:, g_np]))
+                        for k, v in mega.items()},
+                       jnp.asarray(kind_pool_m[g_np]),
+                       jnp.asarray(smp_kid_m[g_np]))
+                if len(_DEV_XS_CACHE) >= _DEV_XS_CACHE_CAP:
+                    _DEV_XS_CACHE.popitem(last=False)
+                _DEV_XS_CACHE[key] = hit
+            else:
+                _DEV_XS_CACHE.move_to_end(key)
+            return hit
+
+        for sl, S_sl in slices:
+            B = _bucket(len(sl), cap=chunk)
             # pad lanes replicate the last real lane: finite, well-defined
             # state whose results are simply dropped before assembly
-            padded = lanes + [lanes[-1]] * (B - len(lanes))
-            clocks = np.full((P, S, B), np.inf)
-            for li, pos in enumerate(padded):
-                for p, cnt in enumerate(lane_counts[pos]):
+            padded = sl + [sl[-1]] * (B - len(sl))
+            g_np = np.fromiter((gi for gi, _ in padded), dtype=np.int32,
+                               count=B)
+            clocks = np.full((P_max, S_sl, B), np.inf)
+            for li, (gi, pos) in enumerate(padded):
+                for p, cnt in enumerate(per[gi]["lane_counts"][pos]):
                     clocks[p, :cnt, li] = 0.0
-            makespan, busy, seen, placement, div = run(
-                xs, jnp.asarray(clocks),
-                jnp.zeros((n + 1, B)),                      # ready (+dummy)
-                jnp.full((n, B), -1, dtype=jnp.int32),      # placement
-                jnp.zeros((P, B)),                          # busy
-                jnp.zeros((P, B), dtype=bool),              # seen
-                kind_pool_j, smp_kid, eft)
-            div = np.asarray(div)
-            for li, pos in enumerate(lanes):
-                if div[li]:
-                    diverged.append(pos)
-                else:
-                    kept.append(pos)
-                    cols_mk.append(np.asarray(makespan)[li:li + 1])
-                    cols_busy.append(np.asarray(busy)[:, li:li + 1])
-                    cols_seen.append(np.asarray(seen)[:, li:li + 1])
-                    cols_place.append(np.asarray(placement)[:, li:li + 1])
+            xs_j, kp_j, sk_j = _lane_aligned(g_np)
+            args = (xs_j, jnp.asarray(clocks),
+                    jnp.zeros((n_max + 1, B)),                  # ready
+                    jnp.full((n_max + 1, B), -1, dtype=jnp.int32),
+                    jnp.zeros((P_max, B)),                      # busy
+                    jnp.zeros((P_max, B), dtype=bool),          # seen
+                    kp_j, sk_j, jnp.asarray(eft))
+            exe = _load_runner(cc, impl, args)
+            makespan, busy, seen, placement, div = exe(*args)
+            div_np = np.asarray(div)
+            mk_np, busy_np = np.asarray(makespan), np.asarray(busy)
+            seen_np, place_np = np.asarray(seen), np.asarray(placement)
+            for li, (gi, pos) in enumerate(sl):
+                if div_np[li]:
+                    diverged[gi].append(pos)
+                    continue
+                acc, c = accs[gi], per[gi]
+                acc["kept"].append(pos)
+                acc["mk"].append(mk_np[li:li + 1])
+                acc["busy"].append(busy_np[:c["P"], li:li + 1])
+                acc["seen"].append(seen_np[:c["P"], li:li + 1])
+                acc["place"].append(place_np[:c["n"], li:li + 1])
 
-    if not kept:
-        return {}, diverged
-    done = lane_results(
-        fg, pool_names, lane_counts, kept, policy,
-        np.concatenate(cols_mk),
-        np.concatenate(cols_busy, axis=1),
-        np.concatenate(cols_seen, axis=1),
-        np.concatenate(cols_place, axis=1).astype(np.int64))
-    return done, diverged
+    results: List[Tuple[Dict[int, SimResult], List[int]]] = []
+    for gi, c in enumerate(per):
+        acc = accs[gi]
+        done: Dict[int, SimResult] = {}
+        if acc["kept"]:
+            done = lane_results(
+                c["fg"], c["pool_names"], c["lane_counts"], acc["kept"],
+                policy, np.concatenate(acc["mk"]),
+                np.concatenate(acc["busy"], axis=1),
+                np.concatenate(acc["seen"], axis=1),
+                np.concatenate(acc["place"], axis=1).astype(np.int64))
+        results.append((done, diverged[gi]))
+    return results
+
+
+def _scan_group(fg: FrozenGraph, order: Sequence[int],
+                layouts: Sequence[Layout], policy: str, *,
+                chunk: int = DEFAULT_CHUNK,
+                compile_cache: Optional[CompileCache] = None,
+                step_impl: str = "auto"
+                ) -> Tuple[Dict[int, SimResult], List[int]]:
+    """One-cohort form of :func:`_scan_cohorts` — the per-graph
+    :data:`repro.core.replay.LockstepFn`."""
+    (pair,) = _scan_cohorts([(fg, order, layouts)], policy, chunk=chunk,
+                            compile_cache=compile_cache,
+                            step_impl=step_impl)
+    return pair
 
 
 # ---------------------------------------------------------------------------
@@ -418,7 +802,9 @@ def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
                  stats: Optional[BatchStats] = None,
                  library: Optional[ReplayLibrary] = None,
                  max_rounds: int = MAX_RESCUE_ROUNDS,
-                 rescue_min: int = RESCUE_MIN) -> List[SimResult]:
+                 rescue_min: int = RESCUE_MIN,
+                 compile_cache: Optional[CompileCache] = None,
+                 step_impl: str = "auto") -> List[SimResult]:
     """Schedule-free :class:`SimResult` per system, in input order.
 
     The jax tier of :func:`repro.core.batchsim.simulate_batch`: equivalent
@@ -430,16 +816,59 @@ def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
     path and each lane re-validates in-scan, so a batch-warmed library
     serves this engine unchanged) and the per-lane exact fallback are the
     shared :mod:`repro.core.replay` protocol; ``chunk`` caps the compiled
-    lane-bucket width.
+    lane-bucket width (non-power-of-two caps round down to a power of
+    two).  ``compile_cache`` persists compiled executables (default: a
+    process-local in-memory cache); ``step_impl`` picks the step-commit
+    implementation (see :data:`STEP_IMPLS`).
     """
     require_jax()
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk!r}")
+    _resolve_step_impl(step_impl)               # fail fast on bad names
 
     def lockstep(fg, order, layouts, policy):
-        return _scan_group(fg, order, layouts, policy, chunk=chunk)
+        return _scan_group(fg, order, layouts, policy, chunk=chunk,
+                           compile_cache=compile_cache, step_impl=step_impl)
 
     return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
                             stats=stats, library=library,
                             max_rounds=max_rounds, rescue_min=rescue_min,
                             lockstep_fn=lockstep)
+
+
+def simulate_jax_many(items: Sequence[Tuple[FrozenGraph,
+                                            Sequence[SystemConfig]]],
+                      policy: str = "availability", *,
+                      min_lockstep: int = MIN_LOCKSTEP,
+                      chunk: Optional[int] = None,
+                      stats: Optional[BatchStats] = None,
+                      library: Optional[ReplayLibrary] = None,
+                      max_rounds: int = MAX_RESCUE_ROUNDS,
+                      compile_cache: Optional[CompileCache] = None,
+                      step_impl: str = "auto") -> List[List[SimResult]]:
+    """Multi-graph megabatch: every ``(graph, systems)`` family of a sweep
+    through **one** compiled scan.
+
+    Per family the results match ``simulate_jax(fg, systems, ...)`` at the
+    same :data:`~repro.core.replay.JAX_RTOL` tier — routing, discovery and
+    the exact serial fallback are
+    :func:`repro.core.replay.simulate_many` — but heterogeneous graphs
+    share the lane axis (task-axis padding, host-side lane-aligned
+    pre-gather, slot-bucketed slices), so a sweep pays a handful of
+    compiles and no per-graph remainder chunks.  ``chunk`` defaults to
+    the wider :data:`MEGABATCH_CHUNK`.
+    """
+    require_jax()
+    chunk = MEGABATCH_CHUNK if chunk is None else chunk
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk!r}")
+    _resolve_step_impl(step_impl)               # fail fast on bad names
+
+    def lockstep_many(cohorts):
+        return _scan_cohorts(cohorts, policy, chunk=chunk,
+                             compile_cache=compile_cache,
+                             step_impl=step_impl, slot_bucketed=True)
+
+    return simulate_many(items, policy, lockstep_many_fn=lockstep_many,
+                         min_lockstep=min_lockstep, stats=stats,
+                         library=library, max_rounds=max_rounds)

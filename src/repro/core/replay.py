@@ -107,6 +107,13 @@ Layout = Tuple[List[str], List[int], List[int]]
 # lane positions]).  Positions index the *layouts* sequence.
 LockstepFn = Callable[[FrozenGraph, Sequence[int], Sequence[Layout], str],
                       Tuple[Dict[int, SimResult], List[int]]]
+# One megabatch cohort: every lane replays `order` over `fg` (the lanes
+# share a pool template; slot counts vary per layout).
+CohortSpec = Tuple[FrozenGraph, Tuple[int, ...], List[Layout]]
+# A backend's megabatch sweep: all cohorts advance through ONE backend
+# call; one (done, diverged) pair per cohort, in the LockstepFn contract.
+LockstepManyFn = Callable[[Sequence[CohortSpec]],
+                          List[Tuple[Dict[int, SimResult], List[int]]]]
 
 
 @dataclasses.dataclass
@@ -642,6 +649,200 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
             pending = sweep(pending, position, from_cache=False)
             if len(pending) == before and rounds > 1:
                 rebatch_ok = False
+    return results  # type: ignore[return-value]
+
+
+def simulate_many(items: Sequence[Tuple[FrozenGraph,
+                                        Sequence[SystemConfig]]],
+                  policy: str, *, lockstep_many_fn: LockstepManyFn,
+                  min_lockstep: int = MIN_LOCKSTEP,
+                  stats: Optional[BatchStats] = None,
+                  library: Optional[ReplayLibrary] = None,
+                  max_rounds: int = MAX_RESCUE_ROUNDS,
+                  schedule_free: bool = True) -> List[List[SimResult]]:
+    """Every ``(graph, systems)`` family of a sweep through **one** backend
+    call — the megabatch form of :func:`simulate_grouped`.
+
+    :func:`simulate_grouped` hands each pool-template group of each graph
+    to its own ``lockstep_fn`` call, so a sweep over many graphs pays one
+    compiled sweep (and its remainder chunks) per group.  This protocol
+    instead *plans* every group of every family up front — the same
+    library routing as :func:`replay_group` phase 1, with the cheapest
+    possible phase-2/3 stand-ins — and dispatches all resulting
+    ``(fg, order, lanes)`` cohorts in a single ``lockstep_many_fn`` call,
+    letting a megabatch-capable backend (``jaxsim._scan_cohorts``) pad the
+    cohorts together and share one compiled scan across the whole sweep.
+
+    Protocol differences vs the per-group path, by design:
+
+    * Groups with no cached orders run **one** serial reference discovery
+      (their most-parallel lane, order recorded) and route the rest of the
+      group to that fresh order *within the same megabatch* — phase 3's
+      first re-batch, folded into the main sweep.
+    * Unrouted lanes with cached orders try position 0 only (phase 2's
+      first trial); there is **no rescue re-batching** — a diverged lane
+      is discovered serially (order + signature recorded, bounded by
+      ``max_rounds`` per group) or falls back serially.  The library still
+      ends the call warm, so the *next* sweep routes those lanes straight
+      to their own orders; ``rescued_lanes`` is therefore never counted
+      here.
+
+    Every completion is still either a validated lockstep lane or an exact
+    serial run, so the engine tiers are preserved by construction.
+    Returns one result list per family, each in its ``systems`` order.
+    """
+    if policy not in ("availability", "eft"):
+        raise ValueError(f"unknown policy {policy!r}")
+    lib = library if library is not None else ReplayLibrary()
+    with_schedule = not schedule_free
+    results: List[List[Optional[SimResult]]] = \
+        [[None] * len(systems) for _fg, systems in items]
+
+    def serial(gi: int, i: int, out: Optional[List[int]] = None
+               ) -> SimResult:
+        fg, systems = items[gi]
+        return simulate_fast(fg, systems[i], policy,
+                             with_schedule=with_schedule, order_out=out)
+
+    # ---- plan: route every group's lanes to (order, cohort) ------------
+    cohorts: List[Dict] = []
+    for gi, (fg, systems) in enumerate(items):
+        layouts = [pool_layout(fg.kinds, s) for s in systems]
+        fams: Dict[Tuple, List[int]] = {}
+        for i, lay in enumerate(layouts):
+            fams.setdefault((tuple(lay[0]), tuple(lay[2])), []).append(i)
+        for lanes in fams.values():
+            if stats is not None:
+                stats.groups += 1
+            if len(lanes) < min_lockstep:
+                for i in lanes:
+                    results[gi][i] = serial(gi, i)
+                if stats is not None:
+                    stats.small_group_lanes += len(lanes)
+                continue
+            key = lib.key(fg, layouts[lanes[0]], policy)
+            orders, sig_map, pins = lib.lookup(key)
+            grp = {"gi": gi, "fg": fg, "key": key, "layouts": layouts,
+                   "n_cached": len(orders), "discoveries": 0}
+            order_by_pos: Dict[int, Tuple[int, ...]] = dict(enumerate(orders))
+            routed: Dict[int, List[int]] = {}
+            unrouted: List[int] = []
+            for i in lanes:
+                sig = tuple(layouts[i][1])
+                if sig in pins:
+                    results[gi][i] = serial(gi, i)
+                    if stats is not None:
+                        stats.order_pinned_lanes += 1
+                        stats.order_hits += 1
+                    continue
+                pos = sig_map.get(sig)
+                if pos is not None and 0 <= pos < len(orders):
+                    routed.setdefault(pos, []).append(i)
+                else:
+                    unrouted.append(i)
+            if unrouted and not orders:
+                # cold group: one serial reference discovery (the
+                # most-parallel lane), everyone else rides its fresh order
+                # in the megabatch — replay_group's reference sweep folded
+                # into the main dispatch
+                if max_rounds <= 0:
+                    for i in unrouted:
+                        results[gi][i] = serial(gi, i)
+                        if stats is not None:
+                            stats.serial_fallback_lanes += 1
+                    unrouted = []
+                else:
+                    j = max(unrouted,
+                            key=lambda i: (sum(layouts[i][1]), i))
+                    unrouted.remove(j)
+                    out: List[int] = []
+                    results[gi][j] = serial(gi, j, out)
+                    grp["discoveries"] += 1
+                    pos = lib.record(key, out, tuple(layouts[j][1]))
+                    if stats is not None:
+                        if pos is None:
+                            stats.serial_fallback_lanes += 1
+                        else:
+                            stats.reference_lanes += 1
+                    if pos is None:         # key full (shared library)
+                        for i in unrouted:
+                            results[gi][i] = serial(gi, i)
+                            if stats is not None:
+                                stats.serial_fallback_lanes += 1
+                        unrouted = []
+                    else:
+                        order_by_pos[pos] = tuple(out)
+                        routed.setdefault(pos, []).extend(unrouted)
+                        unrouted = []
+            elif unrouted:
+                # untried signatures take the insertion-order first order
+                # (the original reference), like phase 2's first trial
+                routed.setdefault(0, []).extend(unrouted)
+            for pos, cl in routed.items():
+                cohorts.append({"grp": grp, "position": pos,
+                                "order": order_by_pos[pos], "lanes": cl})
+
+    # A megabatch below min_lockstep is a doomed sweep (the same economics
+    # as replay_group's thin routed cohorts): route its lanes straight to
+    # the exact serial path instead.
+    if cohorts and sum(len(c["lanes"]) for c in cohorts) < min_lockstep:
+        for c in cohorts:
+            grp = c["grp"]
+            gi = grp["gi"]
+            for i in c["lanes"]:
+                results[gi][i] = serial(gi, i)
+                if stats is not None:
+                    stats.order_pinned_lanes += 1
+                    if c["position"] < grp["n_cached"]:
+                        stats.order_hits += 1
+        cohorts = []
+
+    # ---- one megabatch dispatch for every cohort of every family -------
+    if cohorts:
+        outs = lockstep_many_fn(
+            [(c["grp"]["fg"], c["order"],
+              [c["grp"]["layouts"][i] for i in c["lanes"]])
+             for c in cohorts])
+        for c, (done, diverged) in zip(cohorts, outs):
+            grp = c["grp"]
+            gi, key, layouts = grp["gi"], grp["key"], grp["layouts"]
+            systems = items[gi][1]
+            from_cache = c["position"] < grp["n_cached"]
+            for pos_l, sim in done.items():
+                i = c["lanes"][pos_l]
+                results[gi][i] = dataclasses.replace(
+                    sim, system=systems[i].name)
+                lib.map_sig(key, tuple(layouts[i][1]), c["position"])
+                if stats is not None:
+                    stats.lockstep_lanes += 1
+                    if from_cache:
+                        stats.order_hits += 1
+            for pos_l in diverged:
+                i = c["lanes"][pos_l]
+                sig = tuple(layouts[i][1])
+                if stats is not None:
+                    stats.diverged_lanes += 1
+                if grp["discoveries"] >= max_rounds:
+                    results[gi][i] = serial(gi, i)
+                    if stats is not None:
+                        stats.serial_fallback_lanes += 1
+                    continue
+                # serial discovery: the lane's own order is recorded so
+                # the next sweep routes it (no rescue re-batch here)
+                out2: List[int] = []
+                results[gi][i] = serial(gi, i, out2)
+                grp["discoveries"] += 1
+                pos2 = lib.record(key, out2, sig)
+                if pos2 is None:
+                    if stats is not None:
+                        stats.serial_fallback_lanes += 1
+                    continue
+                if pos2 == c["position"]:
+                    # its own recorded order is the one it just failed:
+                    # provably a conservative false positive — pin it
+                    lib.pin_sig(key, sig)
+                if stats is not None:
+                    stats.reference_lanes += 1
     return results  # type: ignore[return-value]
 
 
