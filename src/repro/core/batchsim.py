@@ -63,6 +63,7 @@ from .replay import (BatchStats, MAX_RESCUE_ROUNDS, MIN_LOCKSTEP,
                      RESCUE_MIN, ReplayLibrary, graph_aux, lane_results,
                      simulate_grouped)
 from .simulator import SimResult
+from ..testing import faults
 
 # Steps between heap-key validations / makespan folds: big enough to
 # amortise the stacked checks, small enough to bound a diverged lane's
@@ -113,6 +114,8 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
     diverged lane's state is discarded, never resumed), so letting a bad
     lane run to the end of its window costs only its own wasted work.
     """
+    if faults.fire("fail_lockstep"):
+        raise RuntimeError("injected fault: fail_lockstep")
     eft = policy == "eft"
     kinds = fg.kinds
     smp_kid = kinds.index("smp") if "smp" in kinds else -1

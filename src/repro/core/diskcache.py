@@ -47,6 +47,19 @@ against the graph before it is ever replayed
 entry re-homed from another graph degrades to rediscovery; ``xla``
 payloads similarly must survive ``deserialize_and_load`` or they degrade
 to a fresh compile.
+
+**Quarantine.**  An entry that *exists* but fails the digest/decode check
+is not just a miss — left in place it would be re-read, re-hashed and
+re-rejected on every run forever.  The failed file is moved aside once
+into ``<root>/quarantine/`` (preserved for post-mortem, never re-read;
+the next ``put`` under the same key recreates a clean entry) and counted
+on :attr:`DiskCache.quarantined`, which the Explorer folds into
+``CacheStats.cache_quarantined``.  A *missing* file and a *stale* entry
+(digest fine, key text belongs to another key — a legitimate collision
+artifact) both remain plain misses.  Writes are crash-atomic: payload to
+a temp file, ``fsync``, then ``os.replace`` — a worker killed mid-write
+leaves at worst a ``.tmp`` orphan, which construction sweeps away once
+it is older than an hour (young orphans may belong to a live writer).
 """
 from __future__ import annotations
 
@@ -54,7 +67,14 @@ import hashlib
 import os
 import pickle
 import tempfile
+import time
 from typing import Any, Iterable, Optional
+
+from ..testing import faults
+
+#: Construction removes abandoned ``.tmp`` files older than this; younger
+#: ones may be in-flight writes of a concurrent process.
+TMP_MAX_AGE_S = 3600.0
 
 
 def sha256_text(text: str) -> str:
@@ -93,30 +113,67 @@ class DiskCache:
     def __init__(self, root: str):
         self.root = str(root)
         os.makedirs(self.root, exist_ok=True)
+        #: integrity-failed entries moved to ``quarantine/`` by this handle
+        self.quarantined = 0
+        self._sweep_tmp()
+
+    def _sweep_tmp(self) -> None:
+        """Remove ``.tmp`` orphans left by killed writers (age-gated so a
+        live writer's in-flight temp file is never yanked away)."""
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return
+        cutoff = time.time() - TMP_MAX_AGE_S
+        for name in names:
+            if not name.endswith(".tmp"):
+                continue
+            path = os.path.join(self.root, name)
+            try:
+                if os.path.getmtime(path) < cutoff:
+                    os.unlink(path)
+            except OSError:
+                pass
 
     def _path(self, key_text: str) -> str:
         return os.path.join(self.root, sha256_text(key_text) + ".pkl")
 
+    def _quarantine(self, path: str) -> None:
+        """Move an integrity-failed entry aside so it is never re-read;
+        the next ``put`` under its key writes a fresh file."""
+        qdir = os.path.join(self.root, "quarantine")
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            os.replace(path, os.path.join(qdir, os.path.basename(path)))
+        except OSError:
+            try:                                  # immovable: drop instead —
+                os.unlink(path)                   # never leave it live
+            except OSError:
+                return
+        self.quarantined += 1
+
     def _read_wrapper(self, path: str) -> Optional[dict]:
         """Integrity-checked ``{"key": ..., "value": ...}`` wrapper from an
         entry file, or ``None``: the single place that understands the
-        ``<64-hex digest>\\n<pickle>`` wire format and degrades truncation,
-        bit flips and undecodable payloads to a miss.  Callers add their
-        own staleness check (key text vs this entry's embedded key)."""
+        ``<64-hex digest>\\n<pickle>`` wire format.  Truncation, bit flips
+        and undecodable payloads degrade to a miss *and* quarantine the
+        file; a missing file is a plain miss.  Callers add their own
+        staleness check (key text vs this entry's embedded key)."""
         try:
             with open(path, "rb") as f:
                 blob = f.read()
         except OSError:
             return None
         try:
-            if len(blob) < 65 or blob[64:65] != b"\n":
-                return None
-            payload = blob[65:]
-            if hashlib.sha256(payload).hexdigest().encode("ascii") != blob[:64]:
-                return None                       # truncated / corrupted
-            return pickle.loads(payload)
+            if len(blob) >= 65 and blob[64:65] == b"\n":
+                payload = blob[65:]
+                digest = hashlib.sha256(payload).hexdigest().encode("ascii")
+                if digest == blob[:64]:
+                    return pickle.loads(payload)
         except Exception:                         # noqa: BLE001 — any decode
-            return None                           # failure is just a miss
+            pass                                  # failure quarantines below
+        self._quarantine(path)
+        return None
 
     # ------------------------------------------------------------------
     def get(self, key_text: str) -> Optional[Any]:
@@ -130,11 +187,18 @@ class DiskCache:
         payload = pickle.dumps({"key": key_text, "value": value},
                                protocol=pickle.HIGHEST_PROTOCOL)
         digest = hashlib.sha256(payload).hexdigest().encode("ascii")
+        if faults.fire("corrupt_cache"):
+            # digest of the clean payload over a flipped-byte body: the
+            # entry lands on disk looking complete but trips the read-side
+            # integrity check — the torn/bit-rotten entry, on demand.
+            payload = payload[:-1] + bytes([payload[-1] ^ 0xFF])
         fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(digest + b"\n" + payload)
-            os.replace(tmp, self._path(key_text))
+                f.flush()
+                os.fsync(f.fileno())              # crash-atomic: data is
+            os.replace(tmp, self._path(key_text))  # durable before rename
         except OSError:
             try:
                 os.unlink(tmp)

@@ -57,12 +57,17 @@ import dataclasses
 import itertools
 import json
 import multiprocessing
+import os
 import random
 import sys
 import threading
 import time
 import uuid
-from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+import warnings
+from concurrent.futures import (CancelledError, ProcessPoolExecutor,
+                                ThreadPoolExecutor)
+from concurrent.futures import TimeoutError as FuturesTimeout
+from concurrent.futures.process import BrokenProcessPool
 from typing import (Any, Callable, Dict, Iterator, List, Mapping,
                     Optional, Sequence, Tuple)
 
@@ -72,11 +77,21 @@ from .devices import SystemConfig
 from .diskcache import DiskCache, sha256_text, trace_fingerprint
 from .estimator import PerfEstimate
 from .fastsim import FrozenGraph, simulate_fast
-from .replay import MAX_RESCUE_ROUNDS, ReplayLibrary
+from .replay import ENGINE_FALLBACK, MAX_RESCUE_ROUNDS, ReplayLibrary
 from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
 from .simulator import SimResult, simulate
 from .taskgraph import TaskGraph
 from .trace import Trace
+from ..testing import faults
+
+# --- fault-tolerance bounds (see docs/architecture.md "Failure model") ---
+#: Re-submissions of a lost chunk after worker death before the chunk is
+#: broken apart and its candidates isolated in-parent.
+MAX_CHUNK_RETRIES = 2
+#: Capped exponential backoff between process-pool respawns: the n-th
+#: respawn of one explore call sleeps ``min(CAP, BASE * 2**(n-1))``.
+BACKOFF_BASE_S = 0.05
+BACKOFF_CAP_S = 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -277,6 +292,18 @@ class CacheStats:
     ``rescued_lanes`` were recovered by a later library order in lockstep,
     and ``serial_fallback_lanes`` degraded to a plain serial run with
     nothing recorded — the cost a warm order library drives to zero.
+
+    The fault counters account for the recovery machinery (see the
+    "Failure model" section of docs/architecture.md): ``worker_retries``
+    chunks re-submitted after worker death, ``pool_respawns`` process
+    pools replaced after breaking, ``chunk_timeouts`` chunk futures that
+    exceeded their ``candidate_timeout`` budget, ``quarantined``
+    candidates reported ``failed`` instead of killing the sweep,
+    ``engine_demotions`` steps taken down the
+    :data:`~repro.core.replay.ENGINE_FALLBACK` chain, and
+    ``cache_quarantined`` integrity-failed disk entries moved aside by
+    this Explorer's own :class:`~repro.core.diskcache.DiskCache` handle
+    (worker-side handles quarantine independently).
     """
 
     graph_hits: int = 0
@@ -288,16 +315,32 @@ class CacheStats:
     diverged_lanes: int = 0
     rescued_lanes: int = 0
     serial_fallback_lanes: int = 0
+    worker_retries: int = 0
+    pool_respawns: int = 0
+    chunk_timeouts: int = 0
+    quarantined: int = 0
+    engine_demotions: int = 0
+    cache_quarantined: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
 
     def __repr__(self) -> str:
-        return (f"CacheStats(graph {self.graph_hits}h/{self.graph_misses}m, "
+        base = (f"CacheStats(graph {self.graph_hits}h/{self.graph_misses}m, "
                 f"eval {self.eval_hits}h/{self.eval_misses}m, "
                 f"disk {self.disk_hits}h/{self.disk_misses}m, "
                 f"lanes {self.diverged_lanes}d/{self.rescued_lanes}r/"
-                f"{self.serial_fallback_lanes}f)")
+                f"{self.serial_fallback_lanes}f")
+        # fault telemetry appears only when something actually went wrong,
+        # so the clean-run repr (pinned by the README doctest) stays short
+        if any((self.worker_retries, self.pool_respawns,
+                self.chunk_timeouts, self.quarantined,
+                self.engine_demotions, self.cache_quarantined)):
+            base += (f", faults {self.worker_retries}rt/"
+                     f"{self.pool_respawns}rs/{self.chunk_timeouts}to/"
+                     f"{self.quarantined}q/{self.engine_demotions}d/"
+                     f"{self.cache_quarantined}cq")
+        return base + ")"
 
 
 def _eligibility_signature(elig: Eligibility) -> Tuple:
@@ -340,7 +383,7 @@ class CandidateOutcome:
     """Per-candidate record — serialisable, rich enough to re-rank offline."""
 
     name: str
-    status: str                            # "ok" | "infeasible" | "pruned"
+    status: str                  # "ok" | "infeasible" | "pruned" | "failed"
     makespan_s: Optional[float] = None
     critical_path_s: Optional[float] = None
     lower_bound_s: Optional[float] = None
@@ -349,6 +392,8 @@ class CandidateOutcome:
     cached_eval: bool = False
     bottleneck: str = ""
     rank: Optional[int] = None             # 0 = best; None if not ranked
+    # status == "failed" (quarantined) only: repr of the captured exception
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -387,6 +432,14 @@ class ExplorationResult:
     @property
     def pruned(self) -> List[str]:
         return [o.name for o in self.outcomes if o.status == "pruned"]
+
+    @property
+    def failed(self) -> List[CandidateOutcome]:
+        """Quarantined candidates: evaluation kept failing after every
+        retry/fallback, so they were excised from the ranking instead of
+        killing the sweep.  Each carries the captured exception repr in
+        ``error``."""
+        return [o for o in self.outcomes if o.status == "failed"]
 
     @property
     def best(self) -> Optional[PerfEstimate]:
@@ -429,12 +482,21 @@ class ExplorationResult:
             note = o.status if o.status != "pruned" else \
                 f"pruned(lb {o.lower_bound_s * 1e3:.2f}ms)"
             lines.append(f"{o.name:38s} {'—':>12s} {'—':>8s} {note:>12s}")
+            if o.status == "failed" and o.error:
+                lines.append(f"  ^ quarantined: {o.error}")
         c = self.cache
         if c:
             lines.append(f"cache: graph {c.get('graph_hits', 0)}h/"
                          f"{c.get('graph_misses', 0)}m, eval "
                          f"{c.get('eval_hits', 0)}h/{c.get('eval_misses', 0)}m"
                          f" · workers={self.n_workers}")
+            fault_keys = ("worker_retries", "pool_respawns", "chunk_timeouts",
+                          "quarantined", "engine_demotions",
+                          "cache_quarantined")
+            if any(c.get(k, 0) for k in fault_keys):
+                lines.append("faults: " + ", ".join(
+                    f"{k.replace('_', ' ')} {c[k]}"
+                    for k in fault_keys if c.get(k, 0)))
         lines.append(f"total analysis time: {self.wall_seconds:.3f}s")
         return lines
 
@@ -486,8 +548,15 @@ _WORKER_DISK: Optional[DiskCache] = None
 _WORKER_LIBRARY = ReplayLibrary()
 
 
-def _process_worker_init(cache_dir: Optional[str]) -> None:
+def _process_worker_init(cache_dir: Optional[str],
+                         fault_spec: Optional[str] = None,
+                         fault_state: Optional[str] = None) -> None:
     global _WORKER_DISK, _WORKER_LIBRARY
+    # the fault plan rides the initializer (not just the environment): a
+    # forkserver's server process is started once and never re-reads the
+    # parent's later environment changes, so env inheritance alone would
+    # miss plans activated after the first pool ever spawned
+    faults.activate(fault_spec, fault_state)
     _WORKER_DISK = DiskCache(cache_dir) if cache_dir else None
     _WORKER_GRAPHS.clear()
     _WORKER_LIBRARY = ReplayLibrary()
@@ -542,7 +611,11 @@ def _pool_mp_context() -> "multiprocessing.context.BaseContext":
 def _shared_executor(procs: int,
                      cache_dir: Optional[str]) -> ProcessPoolExecutor:
     ctx = _pool_mp_context()
-    key = (procs, cache_dir, ctx.get_start_method())
+    # the active fault plan is part of the key: a changed plan must get
+    # fresh workers, because the plan only reaches a worker through its
+    # initializer (see _process_worker_init)
+    key = (procs, cache_dir, ctx.get_start_method(), faults.token())
+    fault_spec, fault_state = faults.current()
     with _EXECUTORS_LOCK:
         ex = _EXECUTORS.get(key)
         if ex is not None and getattr(ex, "_broken", False):
@@ -553,13 +626,30 @@ def _shared_executor(procs: int,
             ex = ProcessPoolExecutor(max_workers=procs,
                                      mp_context=ctx,
                                      initializer=_process_worker_init,
-                                     initargs=(cache_dir,))
+                                     initargs=(cache_dir, fault_spec,
+                                               fault_state))
             _EXECUTORS[key] = ex
         else:
             _EXECUTORS.move_to_end(key)
         while len(_EXECUTORS) > _EXECUTORS_CAP:
             _EXECUTORS.popitem(last=False)[1].shutdown(wait=False)
     return ex
+
+
+def _retire_executor(ex: ProcessPoolExecutor) -> None:
+    """Drop a broken executor from the shared registry and shut it down;
+    the next :func:`_shared_executor` call spawns a fresh pool (whose
+    workers re-seed their graph registries and order libraries through the
+    normal chunk protocol)."""
+    with _EXECUTORS_LOCK:
+        for k, v in list(_EXECUTORS.items()):
+            if v is ex:
+                del _EXECUTORS[k]
+                break
+    try:
+        ex.shutdown(wait=False, cancel_futures=True)
+    except Exception:           # noqa: BLE001 — a pool so broken shutdown
+        pass                    # itself raises is still retired
 
 
 @atexit.register
@@ -588,6 +678,15 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
     batch_stats_dict)``: the worker's full order set for the graph rides
     back so the parent can merge discoveries into the sweep library.
     Must stay module-level picklable."""
+    # fault sites (no-ops without an active plan): a delayed chunk models a
+    # straggling worker; a kill models a hard crash — os._exit skips every
+    # finally/atexit, exactly like the OOM-killer, so the parent sees a
+    # BrokenProcessPool with nothing salvageable
+    faults.sleep_if_injected("delay_chunk")
+    for _, system in items:
+        if faults.fire("kill_worker") or \
+                faults.fire("kill_candidate", getattr(system, "name", "")):
+            os._exit(99)
     g = _WORKER_GRAPHS.get(ghash)
     if g is None:
         if fg is None and _WORKER_DISK is not None:
@@ -645,7 +744,10 @@ class Explorer:
                  jax_megabatch: Optional[bool] = None,
                  compile_cache: Optional["CompileCache"] = None,
                  order_library: Optional[ReplayLibrary] = None,
-                 max_rescue_rounds: int = MAX_RESCUE_ROUNDS):
+                 max_rescue_rounds: int = MAX_RESCUE_ROUNDS,
+                 candidate_timeout: Optional[float] = None,
+                 sweep_deadline: Optional[float] = None,
+                 max_retries: int = MAX_CHUNK_RETRIES):
         """``engine`` names the evaluation engine directly — one of
         :data:`ENGINE_NAMES` — and overrides the legacy ``fast``/``batch``
         booleans (kept for compatibility: ``fast=False`` is
@@ -680,7 +782,24 @@ class Explorer:
         graph content hash + policy, so repeat sweeps and worker
         processes start warm.  ``max_rescue_rounds`` bounds the serial
         order discoveries per candidate group (see
-        :func:`repro.core.replay.replay_group`)."""
+        :func:`repro.core.replay.replay_group`).
+
+        Fault tolerance (see docs/architecture.md "Failure model"):
+        ``candidate_timeout`` is the per-candidate evaluation deadline —
+        a process chunk of *n* candidates gets ``n × candidate_timeout``
+        seconds before it is cancelled, retried once serially in-parent,
+        and quarantined if the serial retry also blows the budget.
+        ``sweep_deadline`` bounds the whole ``explore()`` call; once it
+        expires, every not-yet-evaluated candidate is quarantined
+        (status ``"failed"``) instead of wedging the sweep.
+        ``max_retries`` caps chunk re-submissions after a worker crash
+        (capped exponential backoff between pool respawns) before the
+        chunk is broken apart to isolate the poisoned candidate.  Engine
+        faults (jax import/compile failure, a lockstep engine error)
+        demote the engine down the
+        :data:`~repro.core.replay.ENGINE_FALLBACK` chain — one warning
+        per step, counted on ``stats.engine_demotions`` — instead of
+        raising."""
         if engine is not None:
             if engine not in ENGINE_NAMES:
                 raise ValueError(
@@ -719,9 +838,8 @@ class Explorer:
         self.jax_megabatch = (engine == "jax") if jax_megabatch is None \
             else bool(jax_megabatch)
         self._sim_tier = "jax" if engine == "jax" else "exact"
+        pending_demotion: Optional[BaseException] = None
         if engine == "jax":
-            from .jaxsim import require_jax
-            require_jax()                      # fail at construction time
             if self.processes:
                 raise ValueError(
                     "engine='jax' is in-process (the compile cache makes "
@@ -729,6 +847,11 @@ class Explorer:
                     "fan-out would still pay per-worker executable loads "
                     "and device transfers); use engine='batch' with "
                     "processes=N for process-parallel sweeps")
+            from .jaxsim import require_jax
+            try:
+                require_jax()
+            except Exception as exc:    # noqa: BLE001 — a missing/broken
+                pending_demotion = exc  # jax backend degrades, never raises
         if not fast:
             if self.batch:
                 raise ValueError("batch=True requires the fast engine "
@@ -742,6 +865,18 @@ class Explorer:
         if max_rescue_rounds < 0:
             raise ValueError(f"max_rescue_rounds must be >= 0, got "
                              f"{max_rescue_rounds!r}")
+        if candidate_timeout is not None and candidate_timeout <= 0:
+            raise ValueError(f"candidate_timeout must be > 0, got "
+                             f"{candidate_timeout!r}")
+        if sweep_deadline is not None and sweep_deadline <= 0:
+            raise ValueError(f"sweep_deadline must be > 0, got "
+                             f"{sweep_deadline!r}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{max_retries!r}")
+        self.candidate_timeout = candidate_timeout
+        self.sweep_deadline = sweep_deadline
+        self.max_retries = int(max_retries)
         self._disk = DiskCache(cache_dir) if cache_dir is not None else None
         if compile_cache is not None:
             self.compile_cache: Optional["CompileCache"] = compile_cache
@@ -771,6 +906,11 @@ class Explorer:
         self._smp_tok: Optional[str] = None
         self._rep_tok: Optional[str] = None
         self._disk_texts: Dict[Tuple, str] = {}
+        self._deadline: Optional[float] = None  # set per explore() call
+        self._respawns = 0          # pool respawns this explore() call
+        self._disk_q_seen = 0       # DiskCache.quarantined already folded
+        if pending_demotion is not None:
+            self._demote(pending_demotion)
 
     # --------------------------------------------------------- disk keys
     def _trace_fingerprint(self) -> str:
@@ -872,6 +1012,128 @@ class Explorer:
             export = self.order_library.export(token, self.policy)
             if export:
                 self._disk.put(self._orders_disk_text(token), export)
+
+    # ------------------------------------------------- fault tolerance
+    def _demote(self, exc: BaseException) -> None:
+        """Step the sweep down the :data:`ENGINE_FALLBACK` chain after an
+        engine fault — one warning, one counter tick — or re-raise when
+        the chain is exhausted (``reference`` has nothing below it).
+
+        Demotion is sticky for the Explorer's lifetime: an engine that
+        faulted once is never trusted again by this instance.  Every tier
+        at or below ``batch`` is exact, so the demoted sweep's results
+        stay bit-identical to a healthy exact-engine run."""
+        nxt = ENGINE_FALLBACK.get(self.engine)
+        if nxt is None:
+            raise exc
+        warnings.warn(f"engine {self.engine!r} degraded to {nxt!r} for the "
+                      f"rest of the sweep: {exc!r}", UserWarning,
+                      stacklevel=3)
+        self.stats.engine_demotions += 1
+        self.engine = nxt
+        self.fast = nxt != "reference"
+        self.batch = nxt == "batch"
+        self.jax_megabatch = False
+        self._sim_tier = "exact"
+        if not self.fast:
+            # cached FrozenGraph payloads are the wrong shape for the
+            # reference engine; misses rebuild as TaskGraphs from here on
+            with self._lock:
+                self._graphs.clear()
+
+    def _deadline_left(self) -> Optional[float]:
+        """Seconds until this explore() call's sweep deadline (``None``
+        without one; ``0.0`` once it has expired)."""
+        if self._deadline is None:
+            return None
+        return max(0.0, self._deadline - time.perf_counter())
+
+    def _unit_timeout(self, n_items: int) -> Optional[float]:
+        """Wall budget for one chunk future: per-candidate timeout scaled
+        by the chunk width, clipped to the remaining sweep deadline."""
+        t = None
+        if self.candidate_timeout is not None:
+            t = self.candidate_timeout * max(1, n_items)
+        left = self._deadline_left()
+        if left is not None:
+            t = left if t is None else min(t, left)
+        return t
+
+    def _reference_sim(self, cand: Candidate) -> SimResult:
+        """The bottom of the fallback chain: rebuild the candidate's graph
+        as plain objects and run the reference engine — no FrozenGraph, no
+        lockstep, no jax anywhere on the path."""
+        g = build_graph(self.trace, cand.system, self.reports,
+                        cand.eligibility, smp_scale=self.smp_scale,
+                        smp_cost="mean", smp_seconds_fn=self.smp_seconds_fn)
+        return simulate(g, cand.system, policy=self.policy)
+
+    def _fire_inline_kills(self, name: str) -> None:
+        """The worker kill sites, honoured during in-parent isolation: a
+        candidate poisonous enough to kill every worker that touches it
+        must also fail its serial retry — in the parent that is a raise
+        (captured and quarantined), never ``os._exit``."""
+        if faults.fire("kill_worker") or faults.fire("kill_candidate", name):
+            raise RuntimeError(
+                f"injected fault: kill during serial isolation of {name!r}")
+
+    def _failed_outcome(self, cand: Candidate, exc: BaseException,
+                        t0: float) -> Tuple[None, CandidateOutcome]:
+        self.stats.quarantined += 1
+        return None, CandidateOutcome(
+            name=cand.name, status="failed",
+            analysis_seconds=time.perf_counter() - t0, error=repr(exc))
+
+    def _safe_outcome(self, cand: Candidate) \
+            -> Tuple[Optional[PerfEstimate], CandidateOutcome]:
+        """The per-candidate (serial / thread-pool) path inside the fault
+        envelope: expired sweep deadline and any evaluation exception
+        quarantine the candidate instead of killing the sweep."""
+        tc = time.perf_counter()
+        if self._deadline_left() == 0.0:
+            return self._failed_outcome(
+                cand, FuturesTimeout("sweep deadline exceeded"), tc)
+        try:
+            self._fire_inline_kills(cand.name)
+            return self._evaluate_outcome(cand)
+        except Exception as exc:            # noqa: BLE001 — quarantine
+            return self._failed_outcome(cand, exc, tc)
+
+    def _isolate_candidates(self, payload: object, ginfo: Tuple,
+                            items: Sequence[Tuple], results: List) -> None:
+        """Bisection taken to its fixpoint: each candidate of a failed or
+        timed-out chunk is re-evaluated *alone*, in-parent, on the exact
+        per-candidate path (the only environment that survives a worker
+        kill).  Survivors keep bit-identical results; repeat offenders are
+        quarantined with the captured exception.  An expired sweep
+        deadline quarantines the remainder without evaluating."""
+        _, stats, crit, lb = ginfo
+        for pos, cand, key, text, ghit in items:
+            tc = time.perf_counter()
+            if self._deadline_left() == 0.0:
+                results[pos] = self._failed_outcome(
+                    cand, FuturesTimeout("sweep deadline exceeded"), tc)
+                continue
+            try:
+                self._fire_inline_kills(cand.name)
+                faults.sleep_if_injected("delay_chunk")
+                if self.fast:
+                    sim = simulate_fast(payload, cand.system, self.policy)
+                else:
+                    sim = self._reference_sim(cand)
+                dt = time.perf_counter() - tc
+                if self.candidate_timeout is not None \
+                        and dt > self.candidate_timeout:
+                    raise FuturesTimeout(
+                        f"serial retry took {dt:.3f}s > candidate_timeout="
+                        f"{self.candidate_timeout}")
+            except Exception as exc:        # noqa: BLE001 — quarantine
+                results[pos] = self._failed_outcome(cand, exc, tc)
+                continue
+            self._sim_store(key, text, sim)
+            results[pos] = self._outcome_from_sim(
+                cand, stats, crit, lb, ghit, False, sim,
+                time.perf_counter() - tc)
 
     # ------------------------------------------------------------------
     def _graph_for(self, cand: Candidate,
@@ -1039,11 +1301,14 @@ class Explorer:
         deterministic chunks, so results do not depend on worker timing.
         """
         t0 = time.perf_counter()
+        self._deadline = None if self.sweep_deadline is None \
+            else t0 + self.sweep_deadline
+        self._respawns = 0
         stats_before = self.stats.as_dict()
         bstats_before = self.batch_stats.as_dict()
         cands = list(candidates)
-        procs = self.processes if self.fast else 0
-        n_workers = procs if procs > 0 \
+        use_procs = self.fast and self.processes > 0 and len(cands) > 1
+        n_workers = self.processes if use_procs \
             else _resolve_workers(self.max_workers, len(cands))
         outcomes: List[Optional[CandidateOutcome]] = [None] * len(cands)
         estimates: Dict[str, PerfEstimate] = {}
@@ -1055,21 +1320,14 @@ class Explorer:
                 return None
             return sorted(ok_makespans)[kk - 1]
 
-        ppool = _shared_executor(
-            procs, self._disk.root if self._disk is not None else None) \
-            if procs > 0 and len(cands) > 1 else None
         pool = ThreadPoolExecutor(max_workers=n_workers) \
-            if ppool is None and n_workers > 1 else None
+            if not use_procs and n_workers > 1 else None
         self._shipped = {}          # payload-seeding ledger, per executor
-        # the lockstep batch engine wants the whole graph-sharing family in
-        # one chunk; pruning wants chunk boundaries to re-test the cut —
-        # serial+prune therefore stays on the per-candidate path
-        use_batch = self.batch and ppool is None and pool is None \
-            and not prune
         try:
-            chunk = self._chunk_size(len(cands), prune,
-                                     procs if ppool is not None else 0,
-                                     use_batch, n_workers)
+            chunk = self._chunk_size(
+                len(cands), prune, self.processes if use_procs else 0,
+                self.batch and not use_procs and pool is None and not prune,
+                n_workers)
             for base in range(0, len(cands), chunk):
                 batch: List[Tuple[int, Candidate]] = []
                 for i in range(base, min(base + chunk, len(cands))):
@@ -1091,13 +1349,21 @@ class Explorer:
                                 analysis_seconds=time.perf_counter() - tc)
                             continue
                     batch.append((i, cand))
-                if ppool is not None or use_batch:
-                    results = self._evaluate_batch_grouped(ppool, batch)
+                # engine demotion may have dropped self.fast / self.batch
+                # since the last chunk — re-resolve the dispatch each time.
+                # the lockstep batch engine wants the whole graph-sharing
+                # family in one chunk; pruning wants chunk boundaries to
+                # re-test the cut — serial+prune stays per-candidate
+                procs_now = use_procs and self.fast
+                use_batch = self.batch and not procs_now and pool is None \
+                    and not prune
+                if procs_now or use_batch:
+                    results = self._evaluate_batch_grouped(procs_now, batch)
                 elif pool is not None:
                     results = list(pool.map(
-                        lambda ic: self._evaluate_outcome(ic[1]), batch))
+                        lambda ic: self._safe_outcome(ic[1]), batch))
                 else:
-                    results = [self._evaluate_outcome(c) for _, c in batch]
+                    results = [self._safe_outcome(c) for _, c in batch]
                 for (i, cand), (est, out) in zip(batch, results):
                     outcomes[i] = out
                     if est is not None:
@@ -1106,8 +1372,10 @@ class Explorer:
         finally:
             if pool is not None:
                 pool.shutdown()
-            # ppool is the shared, worker-persistent executor — it outlives
-            # this call so repeat sweeps reuse the workers' graph registries
+            self._deadline = None
+            # the process pool is the shared, worker-persistent executor —
+            # it outlives this call so repeat sweeps reuse the workers'
+            # graph registries
 
         done = [o for o in outcomes if o is not None]
         assert len(done) == len(cands)
@@ -1123,6 +1391,12 @@ class Explorer:
         self.stats.serial_fallback_lanes += \
             bstats["serial_fallback_lanes"] \
             - bstats_before["serial_fallback_lanes"]
+        # fold integrity-failed disk entries this Explorer's own DiskCache
+        # handle moved aside (worker-side handles quarantine independently)
+        if self._disk is not None:
+            self.stats.cache_quarantined += \
+                self._disk.quarantined - self._disk_q_seen
+            self._disk_q_seen = self._disk.quarantined
         # per-call delta, not the Explorer's lifetime totals — a stored
         # sweep must account for its own batch only
         cache = {k: v - stats_before[k]
@@ -1172,7 +1446,7 @@ class Explorer:
             self._ghashes[gkey] = h
         return h
 
-    def _evaluate_batch_grouped(self, ppool: Optional[ProcessPoolExecutor],
+    def _evaluate_batch_grouped(self, use_procs: bool,
                                 batch: Sequence[Tuple[int, Candidate]]) \
             -> List[Tuple[Optional[PerfEstimate], CandidateOutcome]]:
         """One deterministic chunk, grouped by shared graph.
@@ -1180,12 +1454,17 @@ class Explorer:
         Graphs are built (or fetched) in the parent so cache accounting
         stays per candidate and cache hits never reach a worker; the
         remaining misses are evaluated per graph-sharing family — locally
-        through the lockstep batch engine (``ppool is None``), or sliced
+        through the lockstep batch engine (``use_procs=False``), or sliced
         across worker processes that resolve the graph from their
         persistent registry (payload pickled at most once per worker, or
         not at all when the disk store already holds it).  Results are
         reassembled by batch position, so the outcome is bit-identical to
-        the per-candidate serial path."""
+        the per-candidate serial path.
+
+        Failures never escape this method: engine faults demote down the
+        fallback chain, worker crashes and timeouts retry and then isolate
+        per candidate, and candidates that keep failing come back with
+        status ``"failed"`` (see docs/architecture.md "Failure model")."""
         results: List = [None] * len(batch)
         # graph_key -> [(pos, cand, mem_key, disk_text, ghit)]
         pending: Dict[Tuple, List[Tuple]] = {}
@@ -1203,34 +1482,73 @@ class Explorer:
             graph_info[gkey] = (payload, stats, crit, lb)
             pending.setdefault(gkey, []).append((pos, cand, key, text, ghit))
 
-        if ppool is None:                      # serial lockstep evaluation
+        if not use_procs:                      # serial lockstep evaluation
             if self.engine == "jax" and self.jax_megabatch and pending:
-                return self._evaluate_megabatch(pending, graph_info, results)
+                try:
+                    return self._evaluate_megabatch(pending, graph_info,
+                                                    results)
+                except Exception as exc:    # noqa: BLE001 — jax fault:
+                    self._demote(exc)       # re-run below, demoted tier
             for gkey, items in pending.items():
                 payload, stats, crit, lb = graph_info[gkey]
+                if self._deadline_left() == 0.0:
+                    self._isolate_candidates(payload, graph_info[gkey],
+                                             items, results)
+                    continue
                 t0 = time.perf_counter()
-                sims = self._lockstep_family(
-                    payload, [cand.system for _, cand, _, _, _ in items])
+                try:
+                    sims = self._lockstep_family(
+                        payload, [cand for _, cand, _, _, _ in items])
+                except Exception:   # noqa: BLE001 — fallback chain
+                    # exhausted mid-family: isolate (quarantines repeaters)
+                    self._isolate_candidates(payload, graph_info[gkey],
+                                             items, results)
+                    continue
                 share = (time.perf_counter() - t0) / max(len(items), 1)
                 for (pos, cand, key, text, ghit), sim in zip(items, sims):
                     self._sim_store(key, text, sim)
                     results[pos] = self._outcome_from_sim(
                         cand, stats, crit, lb, ghit, False, sim, share)
             return results
+        return self._evaluate_process_chunks(pending, graph_info, results)
 
-        futures = []
+    def _evaluate_process_chunks(self, pending: Mapping[Tuple,
+                                                        Sequence[Tuple]],
+                                 graph_info: Mapping[Tuple, Tuple],
+                                 results: List) -> List:
+        """The process-pool path as a unit-based retry state machine.
+
+        Each *unit* is one (graph, candidate-slice) worker chunk.  Units
+        are submitted eagerly and drained in submission order; a unit's
+        failure mode decides its path:
+
+        * **worker crash** (``BrokenProcessPool``): the pool is retired
+          and respawned (capped exponential backoff), every unfinished
+          unit is re-submitted with its payload re-seeded (fresh workers
+          have empty registries), and one retry is charged to the unit
+          observed failing — we cannot know *which* chunk's worker died,
+          so the charge is a heuristic that only shapes retry order, never
+          correctness.  A unit out of retries is broken apart and its
+          candidates isolated in-parent: only candidates that *keep*
+          failing are quarantined, so innocents caught in a crashing
+          chunk always get their (bit-identical) results.
+        * **timeout**: counted on ``chunk_timeouts``, the future is
+          cancelled (a no-op once running — the straggling worker keeps
+          its slot and its eventual result is discarded) and the unit
+          goes straight to in-parent isolation: one serial retry per
+          candidate, quarantine on a second offence.
+        * **in-worker exception**: an engine fault — demote once, guarded
+          by the engine active at submit time so parallel same-tier
+          failures demote a single step, then isolate the unit in-parent
+          on the demoted tier.
+        * **expired sweep deadline**: every remaining unit is cancelled
+          and its candidates quarantined without evaluation.
+        """
+        cache_dir = self._disk.root if self._disk is not None else None
+        ppool = _shared_executor(self.processes, cache_dir)
+        units: "collections.deque" = collections.deque()
         n_groups = max(len(pending), 1)
         for gkey, items in pending.items():
-            payload = graph_info[gkey][0]
-            ghash = self._graph_hash(gkey)
-            orders_arg = None
-            if self.batch:
-                # ship the sweep's known orders for this graph so worker
-                # chunks replay warm (the workers' own registry persists
-                # across chunks too; discoveries ride back on the result)
-                self._load_orders(payload)
-                orders_arg = self.order_library.export(
-                    payload.content_hash(), self.policy) or None
             # a single-eligibility sweep must still use every worker: split
             # each graph key's items across the pool (deterministic slices,
             # reassembled by position)
@@ -1238,52 +1556,144 @@ class Explorer:
                                   len(items)))
             step = -(-len(items) // n_slices)
             for lo in range(0, len(items), step):
-                part = items[lo:lo + step]
-                work = [(pos, cand.system) for pos, cand, _, _, _ in part]
-                fg_arg = None
-                if self._disk is None and \
-                        self._shipped.get(ghash, 0) < self.processes:
-                    # no disk store to self-serve from: seed the first
-                    # `processes` slices with the payload so every worker
-                    # (whichever slices it draws) is likely covered
-                    fg_arg = payload
-                    self._shipped[ghash] = self._shipped.get(ghash, 0) + 1
-                futures.append((gkey, ghash, part, time.perf_counter(),
-                                ppool.submit(_process_eval_chunk, ghash,
-                                             fg_arg, work, self.policy,
-                                             self.batch, orders_arg,
-                                             self.max_rescue_rounds)))
-        for gkey, ghash, items, t_submit, fut in futures:
-            got = fut.result()
-            payload = graph_info[gkey][0]
+                units.append({"gkey": gkey,
+                              "ghash": self._graph_hash(gkey),
+                              "items": items[lo:lo + step],
+                              "tries": 0, "seed": False})
+        for u in units:
+            self._submit_unit(ppool, u, graph_info)
+        while units:
+            unit = units[0]
+            if self._deadline_left() == 0.0:
+                for u in units:
+                    u["fut"].cancel()
+                while units:
+                    u = units.popleft()
+                    self._isolate_candidates(graph_info[u["gkey"]][0],
+                                             graph_info[u["gkey"]],
+                                             u["items"], results)
+                break
+            try:
+                got = unit["fut"].result(
+                    timeout=self._unit_timeout(len(unit["items"])))
+            except (FuturesTimeout, CancelledError):
+                self.stats.chunk_timeouts += 1
+                unit["fut"].cancel()
+                units.popleft()
+                self._isolate_candidates(graph_info[unit["gkey"]][0],
+                                         graph_info[unit["gkey"]],
+                                         unit["items"], results)
+                continue
+            except BrokenProcessPool:
+                ppool = self._respawn_pool(ppool, units, graph_info,
+                                           results)
+                continue
+            except Exception as exc:    # noqa: BLE001 — in-worker raise
+                units.popleft()
+                if unit["engine"] == self.engine:
+                    try:
+                        self._demote(exc)
+                    except Exception:   # noqa: BLE001 — chain exhausted:
+                        pass            # isolation below quarantines
+                self._isolate_candidates(graph_info[unit["gkey"]][0],
+                                         graph_info[unit["gkey"]],
+                                         unit["items"], results)
+                continue
             if got is None:
                 # the worker drew a hash-only chunk before any seeding
                 # chunk reached it: one re-submission with the payload
-                work = [(pos, cand.system) for pos, cand, _, _, _ in items]
-                orders_arg = self.order_library.export(
-                    payload.content_hash(), self.policy) or None \
-                    if self.batch else None
-                got = ppool.submit(_process_eval_chunk, ghash, payload,
-                                   work, self.policy, self.batch,
-                                   orders_arg,
-                                   self.max_rescue_rounds).result()
-            pairs, worker_orders, worker_stats = got
-            if worker_orders:
-                # validated merge: the worker's discoveries warm this
-                # sweep's library (and, with a store, tomorrow's)
-                self.order_library.merge(payload, self.policy,
-                                         worker_orders)
-            if worker_stats:
-                self.batch_stats.add_dict(worker_stats)
-            sims = dict(pairs)
-            share = (time.perf_counter() - t_submit) / max(len(items), 1)
-            _, stats, crit, lb = graph_info[gkey]
-            for pos, cand, key, text, ghit in items:
-                sim = sims[pos]
-                self._sim_store(key, text, sim)
-                results[pos] = self._outcome_from_sim(
-                    cand, stats, crit, lb, ghit, False, sim, share)
+                unit["seed"] = True
+                self._submit_unit(ppool, unit, graph_info)
+                continue
+            units.popleft()
+            self._finish_unit(unit, got, graph_info, results)
         return results
+
+    def _submit_unit(self, ppool: ProcessPoolExecutor, unit: Dict,
+                     graph_info: Mapping[Tuple, Tuple]) -> None:
+        """(Re-)submit one unit; records the future, the submit time and
+        the engine active at submission (the demotion guard) on it."""
+        payload = graph_info[unit["gkey"]][0]
+        orders_arg = None
+        if self.batch:
+            # ship the sweep's known orders for this graph so worker
+            # chunks replay warm (the workers' own registry persists
+            # across chunks too; discoveries ride back on the result)
+            self._load_orders(payload)
+            orders_arg = self.order_library.export(
+                payload.content_hash(), self.policy) or None
+        ghash = unit["ghash"]
+        fg_arg = None
+        if unit["seed"] or (self._disk is None and
+                            self._shipped.get(ghash, 0) < self.processes):
+            # no disk store to self-serve from: seed the first `processes`
+            # slices with the payload so every worker (whichever slices it
+            # draws) is likely covered.  Retries always re-ship it — a
+            # respawned pool's workers have empty registries, and the disk
+            # entry may be the very thing that is corrupt
+            fg_arg = payload
+            self._shipped[ghash] = self._shipped.get(ghash, 0) + 1
+        work = [(pos, cand.system) for pos, cand, _, _, _ in unit["items"]]
+        unit["engine"] = self.engine
+        unit["t0"] = time.perf_counter()
+        unit["fut"] = ppool.submit(_process_eval_chunk, ghash, fg_arg, work,
+                                   self.policy, self.batch, orders_arg,
+                                   self.max_rescue_rounds)
+
+    def _respawn_pool(self, ppool: ProcessPoolExecutor,
+                      units: "collections.deque",
+                      graph_info: Mapping[Tuple, Tuple],
+                      results: List) -> ProcessPoolExecutor:
+        """Replace a broken pool: retire it, back off, spawn a fresh one,
+        and re-submit every unfinished unit (their futures died with the
+        pool).  One retry is charged to ``units[0]`` — the unit whose
+        result surfaced the break; out of retries it is isolated
+        in-parent instead of re-submitted."""
+        self.stats.pool_respawns += 1
+        self._respawns += 1
+        _retire_executor(ppool)
+        self._shipped = {}          # fresh workers: re-seed payloads
+        time.sleep(min(BACKOFF_CAP_S,
+                       BACKOFF_BASE_S * 2 ** (self._respawns - 1)))
+        ppool = _shared_executor(
+            self.processes,
+            self._disk.root if self._disk is not None else None)
+        unit = units[0]
+        unit["tries"] += 1
+        if unit["tries"] > self.max_retries:
+            units.popleft()
+            self._isolate_candidates(graph_info[unit["gkey"]][0],
+                                     graph_info[unit["gkey"]],
+                                     unit["items"], results)
+        for u in units:
+            f = u.get("fut")
+            if f is not None and not f.cancelled() and f.done() \
+                    and f.exception() is None:
+                continue        # completed before the break: result intact
+            self.stats.worker_retries += 1
+            u["seed"] = True
+            self._submit_unit(ppool, u, graph_info)
+        return ppool
+
+    def _finish_unit(self, unit: Dict, got: Tuple,
+                     graph_info: Mapping[Tuple, Tuple],
+                     results: List) -> None:
+        pairs, worker_orders, worker_stats = got
+        payload, stats, crit, lb = graph_info[unit["gkey"]]
+        if worker_orders:
+            # validated merge: the worker's discoveries warm this
+            # sweep's library (and, with a store, tomorrow's)
+            self.order_library.merge(payload, self.policy, worker_orders)
+        if worker_stats:
+            self.batch_stats.add_dict(worker_stats)
+        sims = dict(pairs)
+        share = (time.perf_counter() - unit["t0"]) \
+            / max(len(unit["items"]), 1)
+        for pos, cand, key, text, ghit in unit["items"]:
+            sim = sims[pos]
+            self._sim_store(key, text, sim)
+            results[pos] = self._outcome_from_sim(
+                cand, stats, crit, lb, ghit, False, sim, share)
 
     def _evaluate_megabatch(self, pending: Mapping[Tuple, Sequence[Tuple]],
                             graph_info: Mapping[Tuple, Tuple],
@@ -1318,23 +1728,42 @@ class Explorer:
         return results
 
     def _lockstep_family(self, payload: FrozenGraph,
-                         systems: Sequence[SystemConfig]) -> List[SimResult]:
+                         cands: Sequence[Candidate]) -> List[SimResult]:
         """One graph-sharing candidate family through the configured
         candidate-axis backend (numpy lockstep or the jax scan), replaying
-        orders from the sweep's (disk-warmed) library."""
-        self._load_orders(payload)
-        if self.engine == "jax":
-            from .jaxsim import simulate_jax
-            kw = {} if self.jax_chunk is None else {"chunk": self.jax_chunk}
-            return simulate_jax(payload, systems, self.policy,
-                                stats=self.batch_stats,
-                                library=self.order_library,
-                                max_rounds=self.max_rescue_rounds,
-                                compile_cache=self.compile_cache, **kw)
-        return simulate_batch(payload, systems, self.policy,
-                              stats=self.batch_stats,
-                              library=self.order_library,
-                              max_rounds=self.max_rescue_rounds)
+        orders from the sweep's (disk-warmed) library.
+
+        An engine fault demotes down :data:`~repro.core.replay.
+        ENGINE_FALLBACK` and re-runs the *whole family* on the next tier
+        (results so far are per-family, so nothing partial leaks); only an
+        exhausted chain lets the exception out to the caller's isolation
+        path."""
+        systems = [c.system for c in cands]
+        while True:
+            try:
+                if self.engine == "jax":
+                    self._load_orders(payload)
+                    from .jaxsim import simulate_jax
+                    kw = {} if self.jax_chunk is None \
+                        else {"chunk": self.jax_chunk}
+                    return simulate_jax(payload, systems, self.policy,
+                                        stats=self.batch_stats,
+                                        library=self.order_library,
+                                        max_rounds=self.max_rescue_rounds,
+                                        compile_cache=self.compile_cache,
+                                        **kw)
+                if self.engine == "batch":
+                    self._load_orders(payload)
+                    return simulate_batch(payload, systems, self.policy,
+                                          stats=self.batch_stats,
+                                          library=self.order_library,
+                                          max_rounds=self.max_rescue_rounds)
+                if self.engine == "fast":
+                    return [simulate_fast(payload, s, self.policy)
+                            for s in systems]
+                return [self._reference_sim(c) for c in cands]
+            except Exception as exc:    # noqa: BLE001 — engine fault
+                self._demote(exc)       # raises when chain is exhausted
 
     def _materialise_schedules(self, result: ExplorationResult,
                                cands: Sequence[Candidate],

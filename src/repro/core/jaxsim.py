@@ -87,6 +87,7 @@ from .replay import (BatchStats, JAX_RTOL, Layout,  # noqa: F401
                      simulate_many)
 from .simulator import SimResult
 from .xlacache import CompileCache
+from ..testing import faults
 
 # The jax import is deferred until the engine is actually used: importing
 # repro.core (which re-exports simulate_jax) must stay cheap and must not
@@ -153,6 +154,11 @@ def have_jax() -> bool:
 
 
 def require_jax() -> None:
+    # The fault site lives HERE and not inside _jax(): _jax() caches its
+    # failure in _JAX_ERROR forever, so injecting there would poison jax
+    # for the rest of the process instead of failing one activation.
+    if faults.fire("fail_jax_import"):
+        raise RuntimeError("injected fault: fail_jax_import")
     _jax()
 
 

@@ -100,6 +100,20 @@ ENGINE_TOLERANCE: Mapping[str, float] = {
 #: The jax engine's tier (``ENGINE_TOLERANCE["jax"]``), importable by name.
 JAX_RTOL = ENGINE_TOLERANCE["jax"]
 
+#: The declared degradation chain: when an engine *itself* faults (jax
+#: import/compile failure, a pallas kernel error, a lockstep engine bug)
+#: the sweep demotes to the next engine and keeps going instead of dying —
+#: each step moves toward fewer moving parts, and every step at or below
+#: ``batch`` stays on the exact (bit-identical) tier, so a demoted sweep
+#: can only *tighten* its equivalence tier, never relax it.  ``reference``
+#: has no fallback: a failure there is a real error and propagates.
+ENGINE_FALLBACK: Mapping[str, Optional[str]] = {
+    "jax": "batch",
+    "batch": "fast",
+    "fast": "reference",
+    "reference": None,
+}
+
 # A layout as produced by fastsim.pool_layout: (names, counts, kind_pool).
 Layout = Tuple[List[str], List[int], List[int]]
 # A backend's inner sweep: (fg, order, layouts, policy) ->

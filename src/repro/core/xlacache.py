@@ -37,6 +37,7 @@ import threading
 from typing import Any, Callable, Dict, Optional
 
 from .diskcache import DiskCache
+from ..testing import faults
 
 #: In-memory executables kept per cache (LRU).  Executables are a few MB
 #: at most and a sweep touches a handful of shapes, so this is a backstop
@@ -131,6 +132,10 @@ class CompileCache:
         """``get`` or else ``lower().compile()`` + ``put`` — the one-call
         form the scan driver uses.  ``lower`` returns a ``jax.stages.
         Lowered`` (i.e. ``jax.jit(fn).lower(*args)``)."""
+        if faults.fire("fail_compile"):
+            # ahead of the mem-tier check so a warm cache can't mask the
+            # injected failure; callers demote the engine on any raise here
+            raise RuntimeError("injected fault: fail_compile")
         exe = self.get(signature)
         if exe is None:
             exe = lower().compile()

@@ -38,7 +38,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .core.augment import Eligibility
 from .core.devices import zynq_system
-from .core.explore import Candidate, ENGINE_NAMES, Explorer
+from .core.explore import (Candidate, ENGINE_NAMES, Explorer,
+                           MAX_CHUNK_RETRIES)
 from .core.hlsreport import KernelReport
 from .core.replay import MAX_RESCUE_ROUNDS
 from .core.trace import Trace
@@ -126,31 +127,56 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     default=MAX_RESCUE_ROUNDS, metavar="N",
                     help="order discoveries per candidate group "
                          "(default %(default)s)")
+    ap.add_argument("--candidate-timeout", type=float, default=None,
+                    metavar="S",
+                    help="per-candidate evaluation deadline in seconds; "
+                         "offenders retry once serially, then quarantine")
+    ap.add_argument("--sweep-deadline", type=float, default=None,
+                    metavar="S",
+                    help="whole-sweep wall deadline in seconds; candidates "
+                         "left when it expires are quarantined, not ranked")
+    ap.add_argument("--max-retries", type=int, default=MAX_CHUNK_RETRIES,
+                    metavar="N",
+                    help="chunk re-submissions after a worker crash before "
+                         "per-candidate isolation (default %(default)s)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the result document here instead of stdout")
     args = ap.parse_args(argv)
 
-    if args.trace.startswith("synth:"):
-        from .testing.synth import synth_reports, synth_trace
-        trace = synth_trace(int(args.trace.split(":", 1)[1]))
-        reports = _load_reports(args.reports) if args.reports \
-            else synth_reports()
-    else:
-        trace = Trace.load(args.trace)
-        if not args.reports:
-            ap.error("--reports is required for a file trace")
-        reports = _load_reports(args.reports)
+    # operational failures (bad paths, corrupt inputs, invalid specs) are
+    # one-line diagnostics on stderr + exit 2, never a traceback — this is
+    # the sweep driver CI and scripts call in a loop
+    try:
+        if args.trace.startswith("synth:"):
+            from .testing.synth import synth_reports, synth_trace
+            trace = synth_trace(int(args.trace.split(":", 1)[1]))
+            reports = _load_reports(args.reports) if args.reports \
+                else synth_reports()
+        else:
+            trace = Trace.load(args.trace)
+            if not args.reports:
+                ap.error("--reports is required for a file trace")
+            reports = _load_reports(args.reports)
+        cands = _build_candidates(reports, _parse_accs(args.accs),
+                                  smp=not args.no_smp)
+        ex = Explorer(trace, reports, policy=args.policy,
+                      engine=args.engine, processes=args.processes,
+                      cache_dir=args.cache_dir,
+                      max_rescue_rounds=args.max_rescue_rounds,
+                      candidate_timeout=args.candidate_timeout,
+                      sweep_deadline=args.sweep_deadline,
+                      max_retries=args.max_retries)
+    except (OSError, ValueError, KeyError, TypeError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
 
-    cands = _build_candidates(reports, _parse_accs(args.accs),
-                              smp=not args.no_smp)
-    ex = Explorer(trace, reports, policy=args.policy, engine=args.engine,
-                  processes=args.processes, cache_dir=args.cache_dir,
-                  max_rescue_rounds=args.max_rescue_rounds)
     result = ex.explore(cands, top_k=args.top_k, prune=args.prune)
 
     doc = {
         "trace": args.trace,
         "engine": args.engine,
+        # engine demotion is sticky; != args.engine when the sweep degraded
+        "engine_final": ex.engine,
         "policy": args.policy,
         "candidates": len(cands),
         "wall_seconds": result.wall_seconds,
@@ -160,9 +186,26 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                 for o in result.top(args.top_k)],
         "infeasible": result.infeasible,
         "pruned": result.pruned,
+        "failed": [{"name": o.name, "error": o.error}
+                   for o in result.failed],
         "cache": dict(result.cache),
         "replay": ex.batch_stats.as_dict(),
+        # lifetime fault counters (includes construction-time demotions,
+        # which per-sweep result.cache deltas cannot see)
+        "faults": {k: v for k, v in ex.stats.as_dict().items()
+                   if k in ("worker_retries", "pool_respawns",
+                            "chunk_timeouts", "quarantined",
+                            "engine_demotions", "cache_quarantined")},
     }
+    if result.failed:
+        print(f"quarantined {len(result.failed)} candidate(s):",
+              file=sys.stderr)
+        for o in result.failed:
+            print(f"  {o.name}: {o.error}", file=sys.stderr)
+    if ex.engine != args.engine:
+        print(f"engine degraded: {args.engine} -> {ex.engine} "
+              f"({doc['faults']['engine_demotions']} demotion(s))",
+              file=sys.stderr)
     text = json.dumps(doc, indent=2)
     if args.json:
         with open(args.json, "w") as f:

@@ -1,8 +1,11 @@
 # Test-support utilities that ship with the package (no external deps):
 # a deterministic fallback implementation of the hypothesis API surface the
 # test suite uses, installed by tests/conftest.py when hypothesis is absent,
-# and the shared synthetic workloads the engine tests and README doctest
-# both build on (imported lazily by consumers to keep this package light).
+# the shared synthetic workloads the engine tests and README doctest
+# both build on, and the deterministic fault injector the core modules
+# hook into (both imported lazily by consumers to keep this package light;
+# `faults` in particular is imported by repro.core and must stay free of
+# repro.core imports itself).
 from . import minihypothesis
 
-__all__ = ["minihypothesis", "synth"]
+__all__ = ["minihypothesis", "synth", "faults"]

@@ -140,12 +140,15 @@ def test_cache_hit_miss_counters(trace, reports_and_rep):
     # (disk counters stay zero: no cache_dir configured)
     lanes = {"diverged_lanes": 0, "rescued_lanes": 0,
              "serial_fallback_lanes": 0}
+    faults = {"worker_retries": 0, "pool_respawns": 0, "chunk_timeouts": 0,
+              "quarantined": 0, "engine_demotions": 0,
+              "cache_quarantined": 0}
     assert res.cache == {"graph_hits": 2, "graph_misses": 2,
                          "eval_hits": 0, "eval_misses": 4,
-                         "disk_hits": 0, "disk_misses": 0, **lanes}
+                         "disk_hits": 0, "disk_misses": 0, **lanes, **faults}
     assert res2.cache == {"graph_hits": 4, "graph_misses": 0,
                           "eval_hits": 4, "eval_misses": 0,
-                          "disk_hits": 0, "disk_misses": 0, **lanes}
+                          "disk_hits": 0, "disk_misses": 0, **lanes, **faults}
     assert [(o.name, o.makespan_s) for o in res2.ranked] == \
         [(o.name, o.makespan_s) for o in res.ranked]
     assert all(o.cached_eval for o in res2.outcomes)

@@ -372,6 +372,8 @@ def world():
 
 def _entry_kind(path):
     """First element of the stored key-text JSON ("graph"/"sim"/"orders")."""
+    if not os.path.isfile(path):           # e.g. the quarantine/ directory
+        return None
     blob = open(path, "rb").read()
     try:
         wrapper = pickle.loads(blob[65:])
