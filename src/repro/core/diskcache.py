@@ -198,6 +198,9 @@ class DiskCache:
                 f.write(digest + b"\n" + payload)
                 f.flush()
                 os.fsync(f.fileno())              # crash-atomic: data is
+            # deterministic race widener: holds the written-but-unrenamed
+            # window open so concurrent-writer tests can overlap it at will
+            faults.sleep_if_injected("delay_put", 0.05)
             os.replace(tmp, self._path(key_text))  # durable before rename
         except OSError:
             try:

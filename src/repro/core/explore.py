@@ -550,13 +550,16 @@ _WORKER_LIBRARY = ReplayLibrary()
 
 def _process_worker_init(cache_dir: Optional[str],
                          fault_spec: Optional[str] = None,
-                         fault_state: Optional[str] = None) -> None:
+                         fault_state: Optional[str] = None,
+                         fault_token: Optional[str] = None) -> None:
     global _WORKER_DISK, _WORKER_LIBRARY
     # the fault plan rides the initializer (not just the environment): a
     # forkserver's server process is started once and never re-reads the
     # parent's later environment changes, so env inheritance alone would
-    # miss plans activated after the first pool ever spawned
-    faults.activate(fault_spec, fault_state)
+    # miss plans activated after the first pool ever spawned.  The run
+    # token rides along so the worker claims against the parent's one-shot
+    # scope instead of minting (and sweeping) its own.
+    faults.activate(fault_spec, fault_state, fault_token)
     _WORKER_DISK = DiskCache(cache_dir) if cache_dir else None
     _WORKER_GRAPHS.clear()
     _WORKER_LIBRARY = ReplayLibrary()
@@ -598,8 +601,20 @@ def _pool_mp_context() -> "multiprocessing.context.BaseContext":
     Evaluated per pool acquisition (the method is part of the executor
     key): an Explorer created before jax loads and used after gets a fresh,
     correctly-started pool instead of the stale fork-method one.
+
+    ``REPRO_POOL_START`` overrides the choice outright (``fork`` /
+    ``forkserver`` / ``spawn``): a long-lived *multi-threaded* parent — the
+    sweep server — must never fork, jax or not, because a forked child
+    inherits every other thread's locks mid-state.  ``sweepd`` sets it to
+    ``forkserver`` before its first pool.
     """
     methods = multiprocessing.get_all_start_methods()
+    forced = os.environ.get("REPRO_POOL_START")
+    if forced:
+        if forced not in methods:
+            raise ValueError(f"REPRO_POOL_START={forced!r}: not an "
+                             f"available start method {methods}")
+        return multiprocessing.get_context(forced)
     if "jax" in sys.modules or "jaxlib" in sys.modules:
         for m in ("forkserver", "spawn"):
             if m in methods:
@@ -615,7 +630,7 @@ def _shared_executor(procs: int,
     # fresh workers, because the plan only reaches a worker through its
     # initializer (see _process_worker_init)
     key = (procs, cache_dir, ctx.get_start_method(), faults.token())
-    fault_spec, fault_state = faults.current()
+    fault_spec, fault_state, fault_token = faults.current()
     with _EXECUTORS_LOCK:
         ex = _EXECUTORS.get(key)
         if ex is not None and getattr(ex, "_broken", False):
@@ -627,7 +642,7 @@ def _shared_executor(procs: int,
                                      mp_context=ctx,
                                      initializer=_process_worker_init,
                                      initargs=(cache_dir, fault_spec,
-                                               fault_state))
+                                               fault_state, fault_token))
             _EXECUTORS[key] = ex
         else:
             _EXECUTORS.move_to_end(key)
@@ -723,6 +738,19 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
 ENGINE_NAMES = ("reference", "fast", "batch", "jax")
 
 
+def orders_disk_text(graph_token: str, policy: str) -> str:
+    """On-disk key for one graph's order-library entry.
+
+    Keyed by the FrozenGraph *content* hash + policy — nothing else:
+    orders are engine-agnostic (recorded by the exact path, re-validated
+    per lane by every backend), so one entry serves every engine tier,
+    but never a different policy (the heap keys differ).  Module-level so
+    anything holding a shared :class:`~repro.core.replay.ReplayLibrary`
+    (the sweep server's drain flush) can persist dirty orders with the
+    exact key every Explorer reads back."""
+    return json.dumps(["orders", 1, graph_token, policy])
+
+
 class Explorer:
     """Cached, parallel candidate evaluator bound to one trace.
 
@@ -747,7 +775,8 @@ class Explorer:
                  max_rescue_rounds: int = MAX_RESCUE_ROUNDS,
                  candidate_timeout: Optional[float] = None,
                  sweep_deadline: Optional[float] = None,
-                 max_retries: int = MAX_CHUNK_RETRIES):
+                 max_retries: int = MAX_CHUNK_RETRIES,
+                 family_runner: Optional[Callable] = None):
         """``engine`` names the evaluation engine directly — one of
         :data:`ENGINE_NAMES` — and overrides the legacy ``fast``/``batch``
         booleans (kept for compatibility: ``fast=False`` is
@@ -799,7 +828,18 @@ class Explorer:
         demote the engine down the
         :data:`~repro.core.replay.ENGINE_FALLBACK` chain — one warning
         per step, counted on ``stats.engine_demotions`` — instead of
-        raising."""
+        raising.
+
+        ``family_runner`` delegates the in-process ``batch``-engine family
+        evaluation to an external executor: called as ``family_runner(
+        payload, systems, deadline_left_s)`` and expected to return one
+        :class:`~repro.core.simulator.SimResult` per system, bit-identical
+        to :func:`~repro.core.batchsim.simulate_batch` (the sweep server's
+        cross-request coalescer is the intended runner).  Exceptions it
+        raises demote the engine exactly like a local engine fault, except
+        :class:`concurrent.futures.TimeoutError` — a missed deadline, not
+        an engine fault — which quarantines via the isolation path without
+        demoting.  Mutually exclusive with ``processes``."""
         if engine is not None:
             if engine not in ENGINE_NAMES:
                 raise ValueError(
@@ -874,9 +914,13 @@ class Explorer:
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got "
                              f"{max_retries!r}")
+        if family_runner is not None and self.processes:
+            raise ValueError("family_runner and processes are mutually "
+                             "exclusive (the runner owns the fan-out)")
         self.candidate_timeout = candidate_timeout
         self.sweep_deadline = sweep_deadline
         self.max_retries = int(max_retries)
+        self.family_runner = family_runner
         self._disk = DiskCache(cache_dir) if cache_dir is not None else None
         if compile_cache is not None:
             self.compile_cache: Optional["CompileCache"] = compile_cache
@@ -908,6 +952,11 @@ class Explorer:
         self._disk_texts: Dict[Tuple, str] = {}
         self._deadline: Optional[float] = None  # set per explore() call
         self._respawns = 0          # pool respawns this explore() call
+        # explore() mutates per-call state on self (_deadline, _respawns,
+        # _shipped), so concurrent calls on ONE instance serialize here;
+        # concurrent sweeps want one Explorer each, sharing order_library /
+        # cache_dir / the process-pool registry (the sweep server's shape)
+        self._explore_lock = threading.RLock()
         self._disk_q_seen = 0       # DiskCache.quarantined already folded
         if pending_demotion is not None:
             self._demote(pending_demotion)
@@ -980,13 +1029,8 @@ class Explorer:
              pools, shared, self.policy])
 
     def _orders_disk_text(self, graph_token: str) -> str:
-        """On-disk key for one graph's order-library entry.
-
-        Keyed by the FrozenGraph *content* hash + policy — nothing else:
-        orders are engine-agnostic (recorded by the exact path, re-validated
-        per lane by every backend), so one entry serves every engine tier,
-        but never a different policy (the heap keys differ)."""
-        return json.dumps(["orders", 1, graph_token, self.policy])
+        """See :func:`orders_disk_text` (shared with the sweep server)."""
+        return orders_disk_text(graph_token, self.policy)
 
     def _load_orders(self, payload: FrozenGraph) -> None:
         """Warm the order library from disk, once per graph per Explorer.
@@ -1289,7 +1333,8 @@ class Explorer:
     # ------------------------------------------------------------------
     def explore(self, candidates: Sequence[Candidate], *,
                 top_k: Optional[int] = None,
-                prune: bool = False) -> ExplorationResult:
+                prune: bool = False,
+                deadline_s: Optional[float] = None) -> ExplorationResult:
         """Evaluate a candidate batch → ranked :class:`ExplorationResult`.
 
         ``prune=True`` enables the lower-bound cut: a candidate whose
@@ -1299,10 +1344,28 @@ class Explorer:
         full top-k set) is never discarded; only the tail of the ranking
         loses its exact makespans.  Pruning decisions are taken between
         deterministic chunks, so results do not depend on worker timing.
+
+        ``deadline_s`` overrides the constructor's ``sweep_deadline`` for
+        this call only — the sweep server derives it per request from the
+        client budget minus the admission queue wait.  Concurrent calls
+        on one instance serialize on an internal lock (per-call state
+        lives on ``self``); concurrent *sweeps* should use one Explorer
+        each and share ``order_library``/``cache_dir`` instead.
         """
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s!r}")
+        with self._explore_lock:
+            return self._explore(candidates, top_k=top_k, prune=prune,
+                                 deadline_s=deadline_s)
+
+    def _explore(self, candidates: Sequence[Candidate], *,
+                 top_k: Optional[int], prune: bool,
+                 deadline_s: Optional[float]) -> ExplorationResult:
         t0 = time.perf_counter()
-        self._deadline = None if self.sweep_deadline is None \
-            else t0 + self.sweep_deadline
+        eff_deadline = deadline_s if deadline_s is not None \
+            else self.sweep_deadline
+        self._deadline = None if eff_deadline is None \
+            else t0 + eff_deadline
         self._respawns = 0
         stats_before = self.stats.as_dict()
         bstats_before = self.batch_stats.as_dict()
@@ -1754,6 +1817,9 @@ class Explorer:
                                         **kw)
                 if self.engine == "batch":
                     self._load_orders(payload)
+                    if self.family_runner is not None:
+                        return self.family_runner(payload, systems,
+                                                  self._deadline_left())
                     return simulate_batch(payload, systems, self.policy,
                                           stats=self.batch_stats,
                                           library=self.order_library,
@@ -1762,6 +1828,11 @@ class Explorer:
                     return [simulate_fast(payload, s, self.policy)
                             for s in systems]
                 return [self._reference_sim(c) for c in cands]
+            except FuturesTimeout:
+                # a missed deadline out of the family runner is not an
+                # engine fault: let the caller's isolation path quarantine
+                # (or rescue) per candidate without burning a demotion
+                raise
             except Exception as exc:    # noqa: BLE001 — engine fault
                 self._demote(exc)       # raises when chain is exhausted
 

@@ -344,6 +344,21 @@ class ReplayLibrary:
         with self._lock:
             return sum(len(e.orders) for e in self._entries.values())
 
+    def counts(self) -> Dict[str, int]:
+        """One consistent telemetry snapshot — distinct graphs, library
+        keys, total orders, pending dirty flushes — for health surfaces
+        (the sweep server's ``/healthz``).  Every public method takes the
+        same internal lock, so a library shared across server request
+        threads needs no external synchronisation."""
+        with self._lock:
+            return {
+                "graphs": len({k[0] for k in self._entries}),
+                "keys": len(self._entries),
+                "orders": sum(len(e.orders)
+                              for e in self._entries.values()),
+                "dirty": len(self._dirty),
+            }
+
     # ----------------------------------------------------- wire payloads
     def export(self, graph_hash: str, policy: str) -> Dict[Tuple, Dict]:
         """Picklable ``{template: {"orders": [...], "sigs": {...}}}`` for

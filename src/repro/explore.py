@@ -9,6 +9,12 @@ ramp, pick an engine, dump the ranking.  This module is that glue, once:
 
     python -m repro.explore synth:40 --engine jax --top-k 3 --json out.json
 
+Two subcommands wrap the same machinery as a long-lived service
+(:mod:`repro.serve.sweepd` — warm caches, admission control, coalescing):
+
+    python -m repro.explore serve --port 8787 --cache-dir .sweeps
+    python -m repro.explore client synth:40 --engine batch --top-k 3
+
 The positional trace is either a JSONL file written by
 :meth:`repro.core.trace.Trace.save` or ``synth:N`` — the deterministic
 :func:`repro.testing.synth.synth_trace` workload with its built-in report
@@ -23,85 +29,65 @@ Candidates are the CEDR-style ramp every engine groups into one
 ``FrozenGraph`` family per eligibility: one candidate per (slot count ×
 ±SMP), slot counts from ``--accs`` (``1-8`` or ``1,2,4``).  Output is a
 single JSON document (stdout, or ``--json PATH``): the ranked top-k with
-makespans and bottlenecks, cache counters, and the batch engines' replay
-telemetry (order hits, diverged / rescued / serial-fallback lanes) —
-with ``--cache-dir`` a repeat invocation starts warm from the on-disk
-graph, sim and dispatch-order stores.
+makespans and bottlenecks, cache counters, wall-time ``timings``, and the
+batch engines' replay telemetry (order hits, diverged / rescued /
+serial-fallback lanes) — with ``--cache-dir`` a repeat invocation starts
+warm from the on-disk graph, sim and dispatch-order stores.
+
+The request/response shapes and candidate-ramp construction live in
+:mod:`repro.serve.protocol` so the CLI and the server can never drift.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .core.augment import Eligibility
-from .core.devices import zynq_system
 from .core.explore import (Candidate, ENGINE_NAMES, Explorer,
                            MAX_CHUNK_RETRIES)
 from .core.hlsreport import KernelReport
 from .core.replay import MAX_RESCUE_ROUNDS
 from .core.trace import Trace
+from .serve.protocol import (build_candidates, parse_accs,
+                             reports_from_entries, sweep_doc, timings_block)
 
 
 def _parse_accs(spec: str) -> List[int]:
     """``"1-8"`` or ``"1,2,4"`` (or a mix) -> sorted distinct counts."""
-    out = set()
-    for part in spec.split(","):
-        part = part.strip()
-        if not part:
-            continue
-        if "-" in part:
-            lo, hi = part.split("-", 1)
-            out.update(range(int(lo), int(hi) + 1))
-        else:
-            out.add(int(part))
-    counts = sorted(c for c in out if c >= 1)
-    if not counts:
-        raise ValueError(f"no slot counts in --accs {spec!r}")
-    return counts
+    return parse_accs(spec)
 
 
 def _load_reports(path: str) -> Dict[Tuple[str, str], KernelReport]:
     with open(path) as f:
         entries = json.load(f)
-    if not isinstance(entries, list):
-        raise ValueError(f"{path}: expected a JSON list of kernel reports")
-    fields = {f.name for f in dataclasses.fields(KernelReport)}
-    reports: Dict[Tuple[str, str], KernelReport] = {}
-    for e in entries:
-        rep = KernelReport(**{k: v for k, v in e.items() if k in fields})
-        reports[(rep.kernel, rep.device_kind)] = rep
-    if not reports:
-        raise ValueError(f"{path}: no kernel reports")
-    return reports
+    try:
+        return reports_from_entries(entries)
+    except ValueError as exc:
+        raise ValueError(f"{path}: {exc}")
 
 
 def _build_candidates(reports: Dict[Tuple[str, str], KernelReport],
                       accs: Sequence[int], smp: bool) -> List[Candidate]:
-    kinds_by_kernel = {}
-    for kernel, kind in reports:
-        kinds_by_kernel.setdefault(kernel, []).append(kind)
-    acc_kinds = sorted({kind for _, kind in reports})
-    out: List[Candidate] = []
-    for n_acc in accs:
-        for with_smp in (False, True) if smp else (False,):
-            name = f"{n_acc}acc" + ("+smp" if with_smp else "")
-            elig = Eligibility({
-                kernel: tuple(kinds) + (("smp",) if with_smp else ())
-                for kernel, kinds in kinds_by_kernel.items()})
-            out.append(Candidate(
-                name=name,
-                system=zynq_system(name, {k: n_acc for k in acc_kinds}),
-                eligibility=elig))
-    return out
+    return build_candidates(reports, accs, smp)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # service subcommands ride the same entry point; lazy import keeps the
+    # one-shot path free of the server machinery
+    if argv and argv[0] == "serve":
+        from .serve.sweepd import main as serve_main
+        return serve_main(argv[1:])
+    if argv and argv[0] == "client":
+        from .serve.sweepd import client_main
+        return client_main(argv[1:])
+
     ap = argparse.ArgumentParser(
         prog="python -m repro.explore",
-        description="Rank co-design candidates for one trace.")
+        description="Rank co-design candidates for one trace "
+                    "(subcommands: serve, client).")
     ap.add_argument("trace", help="Trace JSONL (Trace.save) or synth:N")
     ap.add_argument("--reports", metavar="PATH",
                     help="JSON list of kernel cost reports "
@@ -143,6 +129,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write the result document here instead of stdout")
     args = ap.parse_args(argv)
 
+    t0 = time.perf_counter()
     # operational failures (bad paths, corrupt inputs, invalid specs) are
     # one-line diagnostics on stderr + exit 2, never a traceback — this is
     # the sweep driver CI and scripts call in a loop
@@ -172,31 +159,12 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     result = ex.explore(cands, top_k=args.top_k, prune=args.prune)
 
-    doc = {
-        "trace": args.trace,
-        "engine": args.engine,
-        # engine demotion is sticky; != args.engine when the sweep degraded
-        "engine_final": ex.engine,
-        "policy": args.policy,
-        "candidates": len(cands),
-        "wall_seconds": result.wall_seconds,
-        "best": result.best_name,
-        "top": [{"rank": o.rank, "name": o.name, "makespan_s": o.makespan_s,
-                 "bottleneck": o.bottleneck}
-                for o in result.top(args.top_k)],
-        "infeasible": result.infeasible,
-        "pruned": result.pruned,
-        "failed": [{"name": o.name, "error": o.error}
-                   for o in result.failed],
-        "cache": dict(result.cache),
-        "replay": ex.batch_stats.as_dict(),
-        # lifetime fault counters (includes construction-time demotions,
-        # which per-sweep result.cache deltas cannot see)
-        "faults": {k: v for k, v in ex.stats.as_dict().items()
-                   if k in ("worker_retries", "pool_respawns",
-                            "chunk_timeouts", "quarantined",
-                            "engine_demotions", "cache_quarantined")},
-    }
+    doc = sweep_doc(args.trace, args.engine, ex, result, len(cands),
+                    args.top_k)
+    # one-shot runs have no admission queue; queue_s stays 0.0 so the
+    # block means the same thing here and in a sweepd response
+    doc["timings"] = timings_block(0.0, result.wall_seconds,
+                                   time.perf_counter() - t0)
     if result.failed:
         print(f"quarantined {len(result.failed)} candidate(s):",
               file=sys.stderr)

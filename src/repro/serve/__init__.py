@@ -1,4 +1,22 @@
-# Serving substrate: KV-cache management + prefill/decode engine.
-from . import engine
+# Serving substrate: the KV-cache prefill/decode engine plus the sweep
+# service (sweepd + its wire protocol and cross-request coalescer).
+#
+# Submodules load lazily (PEP 562): `engine` imports jax eagerly, and the
+# sweep-service modules must stay importable without it — a server parent
+# that never runs a jax request keeps the cheap fork start method, and the
+# pytest config promotes the fork-after-jax RuntimeWarning to an error.
+import importlib
 
-__all__ = ["engine"]
+__all__ = ["engine", "protocol", "coalesce", "sweepd"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,331 @@
+"""Wire protocol for the sweep service — and the CLI's shared glue.
+
+One JSON document in (:class:`SweepRequest`), one JSON document out
+(:func:`sweep_doc`).  The request names a trace (``synth:N`` or inline
+JSONL-style events), a kernel-report list, the candidate ramp
+(``accs`` × ±SMP — the same CEDR-style ramp ``python -m repro.explore``
+builds), the engine/policy, and the client's latency budget; the
+response is the CLI's report document plus service telemetry (queue /
+sweep / total timings, granted engine, coalescing counters).
+
+The candidate-construction helpers (:func:`parse_accs`,
+:func:`build_candidates`, :func:`reports_from_entries`) live here and
+are re-used by ``repro.explore`` so the CLI and the server can never
+drift apart on what a request means.  This module must stay importable
+without jax (the server decides its pool start method before any jax
+engine runs) and without a running server (the CLI imports it for the
+``timings`` block of one-shot runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import urllib.error
+import urllib.request
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core.augment import Eligibility
+from ..core.devices import zynq_system
+from ..core.explore import Candidate, ENGINE_NAMES
+from ..core.hlsreport import KernelReport
+from ..core.trace import Trace, TraceEvent
+
+#: Default whole-request latency budget (queue wait + sweep) in seconds.
+DEFAULT_BUDGET_S = 120.0
+POLICIES = ("availability", "eft")
+
+#: The CacheStats failure counters every telemetry surface exposes
+#: (the CLI ``faults`` block, ``/healthz``, chaos CI assertions).
+FAULT_KEYS = ("worker_retries", "pool_respawns", "chunk_timeouts",
+              "quarantined", "engine_demotions", "cache_quarantined")
+
+
+class ProtocolError(ValueError):
+    """Malformed request — the server answers HTTP 400, never a 500."""
+
+
+# ---------------------------------------------------------------------------
+# Candidate-ramp construction (shared with the repro.explore CLI)
+# ---------------------------------------------------------------------------
+
+
+def parse_accs(spec: str) -> List[int]:
+    """``"1-8"`` or ``"1,2,4"`` (or a mix) -> sorted distinct counts."""
+    out = set()
+    for part in str(spec).split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "-" in part:
+            lo, hi = part.split("-", 1)
+            out.update(range(int(lo), int(hi) + 1))
+        else:
+            out.add(int(part))
+    counts = sorted(c for c in out if c >= 1)
+    if not counts:
+        raise ValueError(f"no slot counts in accs spec {spec!r}")
+    return counts
+
+
+def reports_from_entries(entries: Sequence[dict]
+                         ) -> Dict[Tuple[str, str], KernelReport]:
+    """A JSON list of kernel cost reports -> ReportMap (unknown keys are
+    dropped so clients may carry annotations)."""
+    if not isinstance(entries, list):
+        raise ValueError("expected a JSON list of kernel reports")
+    fields = {f.name for f in dataclasses.fields(KernelReport)}
+    reports: Dict[Tuple[str, str], KernelReport] = {}
+    for e in entries:
+        if not isinstance(e, dict):
+            raise ValueError(f"kernel report entries must be objects, "
+                             f"got {type(e).__name__}")
+        rep = KernelReport(**{k: v for k, v in e.items() if k in fields})
+        reports[(rep.kernel, rep.device_kind)] = rep
+    if not reports:
+        raise ValueError("no kernel reports")
+    return reports
+
+
+def build_candidates(reports: Dict[Tuple[str, str], KernelReport],
+                     accs: Sequence[int], smp: bool) -> List[Candidate]:
+    """The CEDR-style ramp: one candidate per (slot count × ±SMP), every
+    engine groups them into one FrozenGraph family per eligibility."""
+    kinds_by_kernel: Dict[str, List[str]] = {}
+    for kernel, kind in reports:
+        kinds_by_kernel.setdefault(kernel, []).append(kind)
+    acc_kinds = sorted({kind for _, kind in reports})
+    out: List[Candidate] = []
+    for n_acc in accs:
+        for with_smp in (False, True) if smp else (False,):
+            name = f"{n_acc}acc" + ("+smp" if with_smp else "")
+            elig = Eligibility({
+                kernel: tuple(kinds) + (("smp",) if with_smp else ())
+                for kernel, kinds in kinds_by_kernel.items()})
+            out.append(Candidate(
+                name=name,
+                system=zynq_system(name, {k: n_acc for k in acc_kinds}),
+                eligibility=elig))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SweepRequest:
+    """One sweep query, validated; raw field errors are ProtocolErrors."""
+
+    trace: str = ""                 # "synth:N", or "inline" with events
+    events: Optional[List[dict]] = None   # TraceEvent.to_json-style dicts
+    reports: Optional[List[dict]] = None  # kernel report entries
+    accs: str = "1-8"
+    smp: bool = True
+    engine: str = "batch"
+    policy: str = "availability"
+    top_k: int = 5
+    prune: bool = False
+    budget_s: float = DEFAULT_BUDGET_S
+    candidate_timeout_s: Optional[float] = None
+
+    @staticmethod
+    def from_json(raw: Any) -> "SweepRequest":
+        if isinstance(raw, bytes):
+            raw = raw.decode("utf-8", "replace")
+        if isinstance(raw, str):
+            try:
+                raw = json.loads(raw or "{}")
+            except ValueError as exc:
+                raise ProtocolError(f"request body is not JSON: {exc}")
+        if not isinstance(raw, dict):
+            raise ProtocolError("request body must be a JSON object")
+        known = {f.name for f in dataclasses.fields(SweepRequest)}
+        unknown = sorted(set(raw) - known)
+        if unknown:
+            raise ProtocolError(f"unknown request fields: "
+                                f"{', '.join(unknown)}")
+        req = SweepRequest(**raw)
+        req.validate()
+        return req
+
+    def validate(self) -> None:
+        if self.engine not in ENGINE_NAMES:
+            raise ProtocolError(f"unknown engine {self.engine!r} "
+                                f"(valid: {', '.join(ENGINE_NAMES)})")
+        if self.policy not in POLICIES:
+            raise ProtocolError(f"unknown policy {self.policy!r} "
+                                f"(valid: {', '.join(POLICIES)})")
+        if not isinstance(self.trace, str) or not self.trace:
+            raise ProtocolError("trace must be 'synth:N' or 'inline'")
+        if self.trace.startswith("synth:"):
+            try:
+                n = int(self.trace.split(":", 1)[1])
+            except ValueError:
+                raise ProtocolError(f"bad trace spec {self.trace!r}")
+            if not 1 <= n <= 100_000:
+                raise ProtocolError(f"synth trace size {n} out of range")
+        elif self.trace == "inline":
+            if not isinstance(self.events, list) or not self.events:
+                raise ProtocolError("trace 'inline' needs a non-empty "
+                                    "'events' list")
+        else:
+            raise ProtocolError(f"bad trace spec {self.trace!r} (the "
+                                f"service takes 'synth:N' or 'inline' "
+                                f"events, never a server-side path)")
+        try:
+            parse_accs(self.accs)
+        except (ValueError, TypeError) as exc:
+            raise ProtocolError(str(exc))
+        if not isinstance(self.top_k, int) or self.top_k < 1:
+            raise ProtocolError(f"top_k must be a positive int, "
+                                f"got {self.top_k!r}")
+        try:
+            self.budget_s = float(self.budget_s)
+        except (TypeError, ValueError):
+            raise ProtocolError(f"budget_s must be a number, "
+                                f"got {self.budget_s!r}")
+        if not 0 < self.budget_s <= 3600:
+            raise ProtocolError(f"budget_s must be in (0, 3600], "
+                                f"got {self.budget_s}")
+        if self.candidate_timeout_s is not None:
+            try:
+                self.candidate_timeout_s = float(self.candidate_timeout_s)
+            except (TypeError, ValueError):
+                raise ProtocolError("candidate_timeout_s must be a number")
+            if self.candidate_timeout_s <= 0:
+                raise ProtocolError("candidate_timeout_s must be > 0")
+
+    # ------------------------------------------------------- materialize
+    def materialize(self) -> Tuple[Trace, Dict[Tuple[str, str],
+                                               KernelReport],
+                                   List[Candidate]]:
+        """Build the (trace, reports, candidates) triple this request
+        describes.  Input-shaped failures surface as ProtocolError."""
+        try:
+            if self.trace.startswith("synth:"):
+                from ..testing.synth import synth_reports, synth_trace
+                trace = synth_trace(int(self.trace.split(":", 1)[1]))
+                reports = reports_from_entries(self.reports) \
+                    if self.reports else synth_reports()
+            else:
+                trace = trace_from_events(self.events)
+                if not self.reports:
+                    raise ProtocolError("reports are required for an "
+                                        "inline trace")
+                reports = reports_from_entries(self.reports)
+            cands = build_candidates(reports, parse_accs(self.accs),
+                                     smp=self.smp)
+        except ProtocolError:
+            raise
+        except (ValueError, KeyError, TypeError) as exc:
+            raise ProtocolError(str(exc))
+        return trace, reports, cands
+
+
+def trace_from_events(events: Sequence[dict]) -> Trace:
+    """Inline events (the ``TraceEvent.to_json`` dict shape — what a
+    ``Trace.save`` JSONL body holds per line) -> a Trace."""
+    out = []
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            raise ProtocolError(f"events[{i}] must be an object")
+        try:
+            out.append(TraceEvent.from_json(json.dumps(e)))
+        except (TypeError, ValueError, KeyError) as exc:
+            raise ProtocolError(f"events[{i}]: {exc}")
+    return Trace(events=out)
+
+
+# ---------------------------------------------------------------------------
+# Responses
+# ---------------------------------------------------------------------------
+
+
+def timings_block(queue_s: float, sweep_s: float,
+                  total_s: float) -> Dict[str, float]:
+    """The deadline-math block: ``queue_s`` admission wait (0.0 for the
+    one-shot CLI), ``sweep_s`` the explore() wall time, ``total_s`` the
+    whole request including parse/build/report."""
+    return {"queue_s": round(float(queue_s), 6),
+            "sweep_s": round(float(sweep_s), 6),
+            "total_s": round(float(total_s), 6)}
+
+
+def sweep_doc(trace_label: str, engine_requested: str, ex,
+              result, n_candidates: int,
+              top_k: Optional[int]) -> Dict[str, Any]:
+    """The sweep report document — one shape for the CLI and the server.
+
+    ``ex`` is the Explorer after the sweep (``ex.engine`` is the final,
+    possibly demoted engine), ``result`` its ExplorationResult.
+    """
+    return {
+        "trace": trace_label,
+        "engine": engine_requested,
+        # engine demotion is sticky; != requested when the sweep degraded
+        "engine_final": ex.engine,
+        "policy": ex.policy,
+        "candidates": n_candidates,
+        "wall_seconds": result.wall_seconds,
+        "best": result.best_name,
+        "top": [{"rank": o.rank, "name": o.name,
+                 "makespan_s": o.makespan_s, "bottleneck": o.bottleneck}
+                for o in result.top(top_k)],
+        "infeasible": result.infeasible,
+        "pruned": result.pruned,
+        "failed": [{"name": o.name, "error": o.error}
+                   for o in result.failed],
+        "cache": dict(result.cache),
+        "replay": ex.batch_stats.as_dict(),
+        # lifetime fault counters (includes construction-time demotions,
+        # which per-sweep result.cache deltas cannot see)
+        "faults": {k: v for k, v in ex.stats.as_dict().items()
+                   if k in FAULT_KEYS},
+    }
+
+
+def error_doc(message: str, **extra: Any) -> Dict[str, Any]:
+    doc: Dict[str, Any] = {"error": str(message)}
+    doc.update(extra)
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# Client side
+# ---------------------------------------------------------------------------
+
+
+def post_json(url: str, doc: Dict[str, Any],
+              timeout: float = DEFAULT_BUDGET_S + 30.0
+              ) -> Tuple[int, Dict[str, Any]]:
+    """POST ``doc`` as JSON; return ``(status, response_doc)``.  Error
+    statuses come back as documents too (the server always answers JSON);
+    transport failures raise ``URLError``."""
+    body = json.dumps(doc).encode()
+    req = urllib.request.Request(
+        url, data=body, headers={"Content-Type": "application/json"},
+        method="POST")
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as exc:
+        try:
+            payload = json.loads(exc.read().decode())
+        except ValueError:
+            payload = error_doc(f"HTTP {exc.code}")
+        return exc.code, payload
+
+
+def get_json(url: str, timeout: float = 10.0
+             ) -> Tuple[int, Dict[str, Any]]:
+    """GET a JSON endpoint (healthz/readyz); same contract as post_json."""
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read().decode())
+    except urllib.error.HTTPError as exc:
+        try:
+            payload = json.loads(exc.read().decode())
+        except ValueError:
+            payload = error_doc(f"HTTP {exc.code}")
+        return exc.code, payload

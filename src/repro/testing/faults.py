@@ -33,6 +33,15 @@ recovery could never be demonstrated.  ``occ="*"`` rules skip the claim
 and fire every time — that is how a *poisoned* candidate (one that kills
 any worker that touches it) is modelled.
 
+Marker files are scoped to a *run token* (``{site}.{idx}.{token}.fired``)
+minted by the first activation of a plan and inherited — via
+``REPRO_FAULTS_TOKEN`` or the worker-initializer arguments — by every
+process that shares the plan.  A fresh activation (new token) sweeps
+every stale marker out of a reused state directory first, so claims can
+never leak across pytest runs or CI retries that point
+``REPRO_FAULTS_STATE`` at the same path; an *inherited* token never
+sweeps (a worker must not destroy its parent's claims).
+
 **Known sites** (:data:`SITES`):
 
 ============== ============================================== ==========
@@ -42,6 +51,7 @@ kill_worker    worker, per candidate in a chunk               os._exit
 kill_candidate worker, per candidate; arg = name substring    os._exit
 delay_chunk    worker, chunk entry; arg = seconds (def. 0.5)  sleep
 corrupt_cache  DiskCache.put; payload written corrupted       bad entry
+delay_put      DiskCache.put, pre-rename; arg = seconds       sleep
 fail_jax_import jaxsim.require_jax                            raise
 fail_compile   xlacache.CompileCache.load_or_compile          raise
 fail_lockstep  batchsim._run_lockstep entry                   raise
@@ -59,14 +69,16 @@ import shutil
 import tempfile
 import time
 import random
+import uuid
 from typing import Dict, List, Optional, Tuple, Union
 
 ENV_SPEC = "REPRO_FAULTS"
 ENV_STATE = "REPRO_FAULTS_STATE"
+ENV_TOKEN = "REPRO_FAULTS_TOKEN"
 
 #: Site names production code may fire; unknown sites in a spec fail fast.
 SITES = ("kill_worker", "kill_candidate", "delay_chunk", "corrupt_cache",
-         "fail_jax_import", "fail_compile", "fail_lockstep")
+         "delay_put", "fail_jax_import", "fail_compile", "fail_lockstep")
 
 
 class _Rule:
@@ -109,9 +121,17 @@ def _parse(spec: str) -> Tuple[Dict[str, List[_Rule]], int]:
 
 
 class FaultInjector:
-    """One activated fault plan: parsed rules + the shared claim dir."""
+    """One activated fault plan: parsed rules + the shared claim dir.
 
-    def __init__(self, spec: str, state_dir: Optional[str] = None):
+    ``run_token`` scopes the one-shot markers: processes sharing a plan
+    (parent + its pool workers) must share the token so a claim in one
+    blocks the others, while a *fresh* activation (token minted here)
+    starts from a clean slate — it sweeps any stale markers a previous
+    run left in a reused state directory.
+    """
+
+    def __init__(self, spec: str, state_dir: Optional[str] = None,
+                 run_token: Optional[str] = None):
         self.spec = spec
         self._rules, seed = _parse(spec)
         self.rng = random.Random(seed)
@@ -119,11 +139,31 @@ class FaultInjector:
             state_dir = tempfile.mkdtemp(prefix="repro-faults-")
         self.state_dir = state_dir
         os.makedirs(self.state_dir, exist_ok=True)
+        if run_token is None:
+            # activation root: fresh scope — stale markers (any token,
+            # including pre-token legacy names) must not shadow our claims
+            self.run_token = uuid.uuid4().hex[:12]
+            self._sweep_stale()
+        else:
+            self.run_token = run_token
+
+    def _sweep_stale(self) -> None:
+        try:
+            names = os.listdir(self.state_dir)
+        except OSError:
+            return
+        for n in names:
+            if n.endswith(".fired"):
+                try:
+                    os.unlink(os.path.join(self.state_dir, n))
+                except OSError:
+                    pass
 
     def _claim(self, site: str, idx: int) -> bool:
         """Atomically claim rule ``idx`` of ``site`` across every process
-        sharing the state dir; True exactly once per rule."""
-        path = os.path.join(self.state_dir, f"{site}.{idx}.fired")
+        sharing the state dir and run token; True exactly once per rule."""
+        path = os.path.join(self.state_dir,
+                            f"{site}.{idx}.{self.run_token}.fired")
         try:
             os.close(os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY))
             return True
@@ -135,13 +175,15 @@ class FaultInjector:
 
     def fired(self, site: str) -> int:
         """How many of ``site``'s integer-occurrence rules have been
-        claimed (by any process) — the assertion helper for tests/CI."""
+        claimed (by any process sharing this plan's token) — the
+        assertion helper for tests/CI."""
         try:
             names = os.listdir(self.state_dir)
         except OSError:
             return 0
+        suffix = f".{self.run_token}.fired"
         return sum(1 for n in names
-                   if n.startswith(site + ".") and n.endswith(".fired"))
+                   if n.startswith(site + ".") and n.endswith(suffix))
 
     def fire(self, site: str, match: Optional[str] = None
              ) -> Union[None, bool, str]:
@@ -165,18 +207,22 @@ _INJECTOR: Optional[FaultInjector] = None
 
 
 def activate(spec: Optional[str],
-             state_dir: Optional[str] = None) -> Optional[FaultInjector]:
+             state_dir: Optional[str] = None,
+             run_token: Optional[str] = None) -> Optional[FaultInjector]:
     """(Re)activate a plan in this process — the worker-initializer entry
-    point.  Exports the state dir to the environment so processes spawned
-    *after* activation share the one-shot claims.  ``spec`` falsy
-    deactivates."""
+    point.  Exports the state dir and run token to the environment so
+    processes spawned *after* activation share the one-shot claims.
+    ``run_token=None`` mints a fresh token (and sweeps stale markers);
+    workers must pass the parent's token through so they inherit its
+    claim scope instead of resetting it.  ``spec`` falsy deactivates."""
     global _INJECTOR
     if not spec:
         _INJECTOR = None
         return None
-    _INJECTOR = FaultInjector(spec, state_dir)
+    _INJECTOR = FaultInjector(spec, state_dir, run_token)
     os.environ[ENV_SPEC] = spec
     os.environ[ENV_STATE] = _INJECTOR.state_dir
+    os.environ[ENV_TOKEN] = _INJECTOR.run_token
     return _INJECTOR
 
 
@@ -189,12 +235,12 @@ def active() -> Optional[FaultInjector]:
     return _INJECTOR
 
 
-def current() -> Tuple[Optional[str], Optional[str]]:
-    """``(spec, state_dir)`` to ship to a worker initializer, or
-    ``(None, None)`` when no plan is active."""
+def current() -> Tuple[Optional[str], Optional[str], Optional[str]]:
+    """``(spec, state_dir, run_token)`` to ship to a worker initializer,
+    or ``(None, None, None)`` when no plan is active."""
     if _INJECTOR is None:
-        return None, None
-    return _INJECTOR.spec, _INJECTOR.state_dir
+        return None, None, None
+    return _INJECTOR.spec, _INJECTOR.state_dir, _INJECTOR.run_token
 
 
 def token() -> Optional[str]:
@@ -202,7 +248,7 @@ def token() -> Optional[str]:
     plan must get fresh workers so it reaches their initializers)."""
     if _INJECTOR is None:
         return None
-    return f"{_INJECTOR.spec}@{_INJECTOR.state_dir}"
+    return f"{_INJECTOR.spec}@{_INJECTOR.state_dir}@{_INJECTOR.run_token}"
 
 
 def fire(site: str, match: Optional[str] = None) -> Union[None, bool, str]:
@@ -233,7 +279,8 @@ def install(spec: str, state_dir: Optional[str] = None):
     unless given), yield the injector, then restore the previous plan and
     environment and remove the temp dir."""
     prev = _INJECTOR
-    prev_env = {k: os.environ.get(k) for k in (ENV_SPEC, ENV_STATE)}
+    prev_env = {k: os.environ.get(k)
+                for k in (ENV_SPEC, ENV_STATE, ENV_TOKEN)}
     made_dir = state_dir is None
     inj = activate(spec, state_dir)
     try:
@@ -250,6 +297,9 @@ def install(spec: str, state_dir: Optional[str] = None):
 
 
 # Environment-driven activation (CLI / CI chaos runs): the plan is live
-# from the first import, before any pool exists.
+# from the first import, before any pool exists.  A token already in the
+# environment means some ancestor process is the activation root — inherit
+# its claim scope instead of minting (and sweeping) a fresh one.
 if os.environ.get(ENV_SPEC):
-    activate(os.environ[ENV_SPEC], os.environ.get(ENV_STATE))
+    activate(os.environ[ENV_SPEC], os.environ.get(ENV_STATE),
+             os.environ.get(ENV_TOKEN))

@@ -31,6 +31,11 @@ def test_synth_trace_end_to_end(capsys):
     spans = [t["makespan_s"] for t in doc["top"]]
     assert spans == sorted(spans)
     assert "serial_fallback_lanes" in doc["replay"]
+    # timings: no admission queue in one-shot mode, sweep <= total
+    t = doc["timings"]
+    assert t["queue_s"] == 0.0
+    assert 0.0 < t["sweep_s"] <= t["total_s"]
+    assert t["sweep_s"] == pytest.approx(doc["wall_seconds"], abs=1e-6)
 
 
 def test_file_trace_with_reports_and_warm_cache(tmp_path, capsys):

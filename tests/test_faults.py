@@ -62,9 +62,33 @@ def test_fire_is_deterministic_and_one_shot(tmp_path):
     assert [bool(inj.fire("kill_worker")) for _ in range(5)] == \
         [False, False, True, False, False]
     assert inj.fired("kill_worker") == 1
-    # a second process sharing the state dir can never claim it again
-    inj2 = faults.FaultInjector("kill_worker:3", state_dir=str(tmp_path))
+    # a second process sharing the state dir AND the run token (a pool
+    # worker) can never claim it again
+    inj2 = faults.FaultInjector("kill_worker:3", state_dir=str(tmp_path),
+                                run_token=inj.run_token)
     assert [bool(inj2.fire("kill_worker")) for _ in range(5)] == [False] * 5
+    assert inj2.fired("kill_worker") == 1
+
+
+def test_fresh_activation_sweeps_stale_markers(tmp_path):
+    # run 1 claims its rule in a shared, reused state dir...
+    inj = faults.FaultInjector("kill_worker:1", state_dir=str(tmp_path))
+    assert bool(inj.fire("kill_worker"))
+    assert inj.fired("kill_worker") == 1
+    legacy = tmp_path / "kill_worker.0.fired"      # pre-token marker name
+    legacy.write_bytes(b"")
+    # ...run 2 (a fresh install, new token) must not be shadowed by run
+    # 1's markers: they are swept and the rule fires again
+    inj2 = faults.FaultInjector("kill_worker:1", state_dir=str(tmp_path))
+    assert not legacy.exists()
+    assert inj2.fired("kill_worker") == 0
+    assert bool(inj2.fire("kill_worker"))
+    assert inj2.fired("kill_worker") == 1
+    # workers inheriting the token never sweep their parent's claims
+    worker = faults.FaultInjector("kill_worker:1", state_dir=str(tmp_path),
+                                  run_token=inj2.run_token)
+    assert worker.fired("kill_worker") == 1
+    assert [bool(worker.fire("kill_worker"))] == [False]
 
 
 def test_star_rules_fire_every_time_and_match_filters():
@@ -80,9 +104,13 @@ def test_install_restores_previous_plan_and_env():
     with faults.install("delay_chunk:1:0.01") as inj:
         assert faults.active() is inj
         assert os.environ[faults.ENV_SPEC] == "delay_chunk:1:0.01"
-        assert faults.token() == f"{inj.spec}@{inj.state_dir}"
+        assert os.environ[faults.ENV_TOKEN] == inj.run_token
+        assert faults.token() == \
+            f"{inj.spec}@{inj.state_dir}@{inj.run_token}"
+        assert faults.current() == (inj.spec, inj.state_dir, inj.run_token)
     assert faults.active() is None
     assert faults.ENV_SPEC not in os.environ
+    assert faults.ENV_TOKEN not in os.environ
     assert not os.path.isdir(inj.state_dir)
 
 
@@ -394,6 +422,7 @@ def _run_cli(args, env_extra=None):
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop(faults.ENV_SPEC, None)
     env.pop(faults.ENV_STATE, None)
+    env.pop(faults.ENV_TOKEN, None)
     env.update(env_extra or {})
     return subprocess.run(
         [sys.executable, "-m", "repro.explore", *args],

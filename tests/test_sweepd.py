@@ -1,0 +1,499 @@
+"""The sweep service: protocol validation, admission control, deadline
+propagation, cross-request coalescing, the engine circuit breaker, HTTP
+round-trips, and concurrent DiskCache writers.
+
+Everything here runs in-process — :class:`repro.serve.sweepd.SweepService`
+is designed to be testable without a socket (``submit`` takes a raw body,
+returns ``(status, doc)``); one test binds a real port-0 server to cover
+the HTTP layer itself.
+"""
+import json
+import threading
+import time
+from concurrent.futures import TimeoutError as FuturesTimeout
+
+import pytest
+
+from repro.core.diskcache import DiskCache
+from repro.serve import coalesce as coalesce_mod
+from repro.serve.coalesce import Coalescer
+from repro.serve.protocol import (ProtocolError, SweepRequest, parse_accs,
+                                  post_json, get_json)
+from repro.serve.sweepd import CircuitBreaker, SweepService, serve
+from repro.testing import faults
+
+
+def body(**kw):
+    doc = {"trace": "synth:24", "engine": "batch", "top_k": 3}
+    doc.update(kw)
+    return json.dumps(doc)
+
+
+# ---------------------------------------------------------------------------
+# Protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("raw", [
+    "not json at all",
+    json.dumps(["a", "list"]),
+    body(engine="gpu"),
+    body(policy="fifo"),
+    body(trace="trace.jsonl"),              # server takes no paths
+    body(trace="synth:nope"),
+    body(trace="synth:0"),
+    body(trace="inline"),                   # inline needs events
+    body(accs="0"),
+    body(top_k=0),
+    body(budget_s=-1),
+    body(budget_s="soon"),
+    body(candidate_timeout_s=0),
+    body(surprise_field=1),
+])
+def test_request_validation_rejects(raw):
+    with pytest.raises(ProtocolError):
+        SweepRequest.from_json(raw)
+
+
+def test_request_defaults_and_parse():
+    req = SweepRequest.from_json(body())
+    assert (req.engine, req.policy, req.top_k) == ("batch",
+                                                   "availability", 3)
+    assert req.budget_s > 0 and req.smp
+    assert parse_accs(req.accs) == list(range(1, 9))
+    trace, reports, cands = req.materialize()
+    assert len(cands) == 16 and len(trace.events) == 24 and reports
+
+
+def test_bad_request_is_400_not_500():
+    svc = SweepService()
+    status, doc = svc.submit(b'{"trace": "synth:8", "engine": "warp"}')
+    assert status == 400 and "error" in doc
+    # the server survives and still serves
+    status, doc = svc.submit(body(trace="synth:8"))
+    assert status == 200
+
+
+# ---------------------------------------------------------------------------
+# Service vs one-shot Explorer: same answers, plus timings
+# ---------------------------------------------------------------------------
+
+
+def one_shot_doc(capsys_none=None, **kw):
+    from repro.explore import main as cli_main
+    import io
+    import contextlib
+    buf = io.StringIO()
+    args = [kw.pop("trace", "synth:24"), "--top-k", "3"]
+    with contextlib.redirect_stdout(buf):
+        assert cli_main(args) == 0
+    return json.loads(buf.getvalue())
+
+
+def test_service_matches_one_shot_ranking():
+    svc = SweepService(coalesce_window=0.0)
+    status, doc = svc.submit(body())
+    assert status == 200
+    ref = one_shot_doc()
+    # exact engine, same request -> bit-identical ranking and makespans
+    assert doc["top"] == ref["top"] and doc["best"] == ref["best"]
+    assert doc["engine_final"] == "batch" and not doc["failed"]
+    t = doc["timings"]
+    assert 0.0 <= t["queue_s"] and 0.0 < t["sweep_s"] <= t["total_s"]
+    assert doc["engine_granted"] == "batch"
+    assert svc.health_doc()["requests"]["done"] == 1
+
+
+def test_repeat_requests_reuse_warm_library():
+    svc = SweepService(coalesce_window=0.0)
+    assert svc.submit(body())[0] == 200
+    orders_after_first = svc.library.counts()["orders"]
+    assert orders_after_first > 0              # first sweep discovered
+    s, doc = svc.submit(body())
+    assert s == 200
+    assert svc.library.counts()["orders"] == orders_after_first
+    # coalesced batches own the replay counters service-wide: the second
+    # request's lanes rode the library orders the first one discovered
+    assert svc.coalescer.replay_stats()["order_hits"] > 0
+    assert svc.health_doc()["replay"]["order_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_same_graph_requests_coalesce_bit_identical():
+    ref = SweepService(coalesce_window=0.0).submit(body())[1]
+    svc = SweepService(max_concurrent=4, coalesce_window=0.3)
+    results = [None, None]
+    barrier = threading.Barrier(2)
+
+    def go(i):
+        barrier.wait()
+        results[i] = svc.submit(body())
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for status, doc in results:
+        assert status == 200
+        assert doc["top"] == ref["top"] and doc["best"] == ref["best"]
+    st = svc.coalescer.stats
+    assert st.coalesced_lanes > 0, "no lanes were merged"
+    assert st.batches < st.requests        # fewer dispatches than queries
+    # per-request telemetry surfaced in at least one response
+    assert any(doc["coalesce"]["coalesced_lanes"] > 0
+               for _s, doc in results)
+    assert svc.health_doc()["coalesce"]["hit_rate"] > 0
+
+
+class _FakeGraph:
+    def content_hash(self):
+        return "g0"
+
+
+def test_coalescer_follower_deadline_raises_timeout(monkeypatch):
+    done = threading.Event()
+
+    def slow_batch(fg, systems, policy, **kw):
+        time.sleep(0.3)
+        done.set()
+        return ["r"] * len(systems)
+
+    monkeypatch.setattr(coalesce_mod, "simulate_batch", slow_batch)
+    co = Coalescer(window_s=0.15)
+    fg = _FakeGraph()
+    out = {}
+
+    def lead():
+        out["lead"] = co.run_family(fg, ["a", "b"], "availability", None)
+
+    t = threading.Thread(target=lead)
+    t.start()
+    time.sleep(0.05)                    # land inside the leader's window
+    with pytest.raises(FuturesTimeout):
+        co.run_family(fg, ["c"], "availability", 0.05)
+    t.join()
+    # the follower's missed deadline never hurt the leader
+    assert out["lead"] == ["r", "r"] and done.is_set()
+    with pytest.raises(FuturesTimeout):
+        co.run_family(fg, ["d"], "availability", 0.0)   # spent budget
+
+
+def test_coalescer_error_broadcasts_to_all_participants(monkeypatch):
+    def broken_batch(fg, systems, policy, **kw):
+        time.sleep(0.1)
+        raise ValueError("engine exploded")
+
+    monkeypatch.setattr(coalesce_mod, "simulate_batch", broken_batch)
+    co = Coalescer(window_s=0.2)
+    fg = _FakeGraph()
+    errors = []
+
+    def run(systems):
+        try:
+            co.run_family(fg, systems, "availability", None)
+        except RuntimeError as exc:
+            errors.append(str(exc))
+
+    threads = [threading.Thread(target=run, args=(["a"],)),
+               threading.Thread(target=run, args=(["b"],))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(errors) == 2
+    assert all("engine exploded" in e for e in errors)
+
+
+def test_coalescer_fans_slices_back_correctly(monkeypatch):
+    # results must come back by slice even when a follower merges midway
+    def echo_batch(fg, systems, policy, **kw):
+        time.sleep(0.1)
+        return [f"sim:{s}" for s in systems]
+
+    monkeypatch.setattr(coalesce_mod, "simulate_batch", echo_batch)
+    co = Coalescer(window_s=0.25)
+    fg = _FakeGraph()
+    got = {}
+
+    def run(name, systems):
+        got[name] = co.run_family(fg, systems, "availability", None)
+
+    a = threading.Thread(target=run, args=("a", ["s1", "s2"]))
+    b = threading.Thread(target=run, args=("b", ["s3"]))
+    a.start()
+    time.sleep(0.05)
+    b.start()
+    a.join()
+    b.join()
+    assert got["a"] == ["sim:s1", "sim:s2"]
+    assert got["b"] == ["sim:s3"]
+    assert co.stats.batches == 1 and co.stats.coalesced_lanes == 1
+
+
+def test_coalescer_dedups_identical_lanes(monkeypatch):
+    # identical concurrent requests collapse to one evaluated lane set,
+    # with the shared results fanned out bit-identically to every owner
+    evaluated = []
+
+    def echo_batch(fg, systems, policy, **kw):
+        time.sleep(0.1)
+        evaluated.append(list(systems))
+        return [f"sim:{s}" for s in systems]
+
+    monkeypatch.setattr(coalesce_mod, "simulate_batch", echo_batch)
+    co = Coalescer(window_s=0.25)
+    fg = _FakeGraph()
+    got = {}
+
+    def run(name):
+        got[name] = co.run_family(fg, ["s1", "s2", "s3"], "availability",
+                                  None)
+
+    threads = [threading.Thread(target=run, args=(f"r{i}",))
+               for i in range(3)]
+    threads[0].start()
+    time.sleep(0.05)
+    for t in threads[1:]:
+        t.start()
+    for t in threads:
+        t.join()
+    assert evaluated == [["s1", "s2", "s3"]]        # one deduped lane set
+    for name in got:
+        assert got[name] == ["sim:s1", "sim:s2", "sim:s3"]
+    assert co.stats.batches == 1
+    assert co.stats.dedup_lanes == 6                # 2 followers x 3 lanes
+    assert co.stats.lanes == 9 and co.stats.coalesced_lanes == 6
+
+
+# ---------------------------------------------------------------------------
+# Admission control and deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_sheds_with_retry_after():
+    svc = SweepService(queue_limit=0)
+    status, doc = svc.submit(body())
+    assert status == 429
+    assert doc["retry_after_s"] > 0
+    assert svc.health_doc()["requests"]["shed"] == 1
+
+
+def test_budget_expiring_in_queue_is_504():
+    svc = SweepService(max_concurrent=1, queue_limit=4)
+    with svc._cond:
+        svc.running = 1                     # saturate without a real sweep
+    try:
+        t0 = time.perf_counter()
+        status, doc = svc.submit(body(budget_s=0.2))
+        waited = time.perf_counter() - t0
+    finally:
+        with svc._cond:
+            svc.running = 0
+            svc._cond.notify_all()
+    assert status == 504
+    assert waited >= 0.2
+    assert doc["timings"]["queue_s"] >= 0.2
+    assert doc["timings"]["sweep_s"] == 0.0
+
+
+def test_draining_rejects_and_unreadies():
+    svc = SweepService()
+    assert svc.ready()
+    svc.begin_drain()
+    assert not svc.ready()
+    assert svc.submit(body())[0] == 503
+    assert svc.health_doc()["status"] == "draining"
+    assert svc.drained(timeout=0.5)         # nothing in flight
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_unit_trip_cap_probe_close():
+    br = CircuitBreaker(threshold=2, reset_s=60.0)
+    assert br.admit("jax") == "jax"
+    br.observe("jax", "jax", "batch")       # demotion 1
+    br.observe("jax", "jax", "batch")       # demotion 2 -> open
+    assert br.as_dict()["state"] == "open" and br.pinned == "batch"
+    assert br.admit("jax") == "batch"       # capped
+    assert br.admit("fast") == "fast"       # below the pin: untouched
+    # capped requests finishing clean must not close an open breaker
+    br.observe("jax", "batch", "batch")
+    assert br.as_dict()["state"] == "open"
+    # cool-down elapses -> one probe at full fidelity
+    br._opened_at -= 120.0
+    assert br.admit("jax") == "jax"
+    assert br.admit("jax") == "batch"       # second concurrent: still capped
+    br.observe("jax", "batch", "batch")     # the capped one resolves first
+    assert br.as_dict()["state"] == "half_open"
+    br.observe("jax", "jax", "jax")         # clean probe -> closed
+    assert br.as_dict()["state"] == "closed" and br.pinned is None
+    assert br.admit("jax") == "jax"
+
+
+def test_breaker_probe_failure_reopens():
+    br = CircuitBreaker(threshold=1, reset_s=60.0)
+    br.observe("jax", "jax", "batch")
+    assert br.as_dict()["state"] == "open" and br.trips == 1
+    br._opened_at -= 120.0
+    assert br.admit("jax") == "jax"         # probe
+    br.observe("jax", "jax", "fast")        # probe demoted -> reopen, deeper
+    d = br.as_dict()
+    assert d["state"] == "open" and d["trips"] == 2 and br.pinned == "fast"
+
+
+def test_breaker_pins_engine_after_repeated_demotions():
+    svc = SweepService(breaker_threshold=2, breaker_reset_s=600.0,
+                      coalesce_window=0.0)
+    with faults.install("fail_lockstep:*"):
+        s1, d1 = svc.submit(body())
+        s2, d2 = svc.submit(body())
+        s3, d3 = svc.submit(body())
+    assert (s1, s2, s3) == (200, 200, 200)
+    # first two demote batch -> fast inside the sweep...
+    assert d1["engine_final"] == "fast" and d2["engine_final"] == "fast"
+    assert d1["faults"]["engine_demotions"] == 1
+    # ...tripping the breaker: the third is *granted* fast up front and
+    # burns no demotion rediscovering the broken tier
+    assert d3["breaker"]["state"] == "open"
+    assert d3["engine_granted"] == "fast"
+    assert d3["faults"]["engine_demotions"] == 0
+    # rankings stay identical across tiers (both exact engines)
+    assert d3["top"] == d1["top"]
+    # cool-down passed + fault gone -> probe succeeds and the breaker closes
+    svc.breaker._opened_at -= 1200.0
+    s4, d4 = svc.submit(body())
+    assert s4 == 200 and d4["engine_granted"] == "batch"
+    assert d4["engine_final"] == "batch"
+    assert d4["breaker"]["state"] == "closed"
+    assert d4["top"] == d1["top"]
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer
+# ---------------------------------------------------------------------------
+
+
+def test_http_roundtrip_health_drain():
+    svc = SweepService(coalesce_window=0.0)
+    httpd = serve(svc, port=0)
+    port = httpd.server_address[1]
+    base = f"http://127.0.0.1:{port}"
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        assert get_json(base + "/readyz") == (200, {"ready": True})
+        status, doc = post_json(base + "/sweep",
+                                {"trace": "synth:24", "top_k": 3})
+        assert status == 200 and doc["best"] == doc["top"][0]["name"]
+        assert doc["timings"]["total_s"] > 0
+        status, health = get_json(base + "/healthz")
+        assert status == 200 and health["requests"]["done"] == 1
+        assert set(health["faults"]) == {
+            "worker_retries", "pool_respawns", "chunk_timeouts",
+            "quarantined", "engine_demotions", "cache_quarantined"}
+        assert get_json(base + "/nope")[0] == 404
+        assert post_json(base + "/sweep", {"trace": "x"})[0] == 400
+        svc.begin_drain()
+        assert get_json(base + "/readyz")[0] == 503
+        assert post_json(base + "/sweep", {"trace": "synth:8"})[0] == 503
+        assert svc.drained(timeout=2.0)
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+def test_drain_flushes_dirty_orders(tmp_path):
+    cache = str(tmp_path / "store")
+    svc = SweepService(cache_dir=cache, coalesce_window=0.0)
+    assert svc.submit(body())[0] == 200
+    # per-request Explorers flush as they finish; dirty the library again
+    # behind their back to prove the drain-path flush catches stragglers
+    store = DiskCache(cache)
+    import_count = len(store.entries())
+    assert import_count > 0                 # orders + graphs + sims landed
+    svc.begin_drain()
+    assert svc.drained(timeout=2.0)
+    svc.flush_orders()                      # idempotent when nothing dirty
+    warm = SweepService(cache_dir=cache, coalesce_window=0.0)
+    s, doc = warm.submit(body())
+    assert s == 200 and doc["cache"]["disk_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Concurrent DiskCache writers (satellite: crash-atomicity under load)
+# ---------------------------------------------------------------------------
+
+
+def test_diskcache_concurrent_writers_race_free(tmp_path):
+    """8 threads hammer 4 shared keys (reads + writes interleaved) while
+    the delay_put fault holds every write's written-but-unrenamed window
+    open: every read must see a complete value some writer put (or a
+    clean miss) — never an exception, a torn entry, or a quarantine."""
+    with faults.install("delay_put:*:0.002"):
+        dc = DiskCache(tmp_path)
+        keys = [f"key-{i}" for i in range(4)]
+        stop = threading.Event()
+        failures = []
+
+        def writer(wid):
+            try:
+                for i in range(25):
+                    k = keys[(wid + i) % len(keys)]
+                    dc.put(k, {"writer": wid, "i": i, "key": k})
+            except Exception as exc:        # noqa: BLE001
+                failures.append(f"writer {wid}: {exc!r}")
+
+        def reader(rid):
+            try:
+                while not stop.is_set():
+                    for k in keys:
+                        got = dc.get(k)
+                        if got is not None and got["key"] != k:
+                            failures.append(f"reader {rid}: "
+                                            f"cross-key value {got}")
+            except Exception as exc:        # noqa: BLE001
+                failures.append(f"reader {rid}: {exc!r}")
+
+        writers = [threading.Thread(target=writer, args=(w,))
+                   for w in range(8)]
+        readers = [threading.Thread(target=reader, args=(r,))
+                   for r in range(4)]
+        for t in readers + writers:
+            t.start()
+        for t in writers:
+            t.join()
+        stop.set()
+        for t in readers:
+            t.join()
+    assert not failures, failures
+    assert dc.quarantined == 0
+    for k in keys:                          # last writer won, intact
+        got = dc.get(k)
+        assert got is not None and got["key"] == k
+    # crash-atomic protocol leaves no stray temp files once writers exit
+    leftovers = [f for f in __import__("os").listdir(tmp_path)
+                 if f.endswith(".tmp")]
+    assert not leftovers
+
+
+def test_diskcache_corruption_amid_writers_quarantines_only_victim(
+        tmp_path):
+    with faults.install("corrupt_cache:5"):
+        dc = DiskCache(tmp_path)
+        for i in range(10):
+            dc.put(f"k{i}", i)
+        hits = sum(dc.get(f"k{i}") == i for i in range(10))
+    # exactly one write was corrupted; its read degraded to a miss + one
+    # quarantined file, every other entry unharmed
+    assert hits == 9
+    assert dc.quarantined == 1
+    qdir = tmp_path / "quarantine"
+    assert qdir.is_dir() and len(list(qdir.iterdir())) == 1
