@@ -34,6 +34,13 @@ from ..core.trace import Trace, TraceEvent
 DEFAULT_BUDGET_S = 120.0
 POLICIES = ("availability", "eft")
 
+#: Largest per-kind accelerator slot count a request may ask for.  The
+#: accs spec is server-reachable, so the bound is checked *before* any
+#: range materializes: an uncapped ``"1-99999999999"`` would be a
+#: remote OOM lever (tens of GB in one set build), breaking the "the
+#: server never dies with a request" contract.
+MAX_ACC_SLOTS = 1024
+
 #: The CacheStats failure counters every telemetry surface exposes
 #: (the CLI ``faults`` block, ``/healthz``, chaos CI assertions).
 FAULT_KEYS = ("worker_retries", "pool_respawns", "chunk_timeouts",
@@ -50,17 +57,27 @@ class ProtocolError(ValueError):
 
 
 def parse_accs(spec: str) -> List[int]:
-    """``"1-8"`` or ``"1,2,4"`` (or a mix) -> sorted distinct counts."""
+    """``"1-8"`` or ``"1,2,4"`` (or a mix) -> sorted distinct counts,
+    each capped at :data:`MAX_ACC_SLOTS` (checked before the range is
+    materialized — see the constant's note)."""
     out = set()
     for part in str(spec).split(","):
         part = part.strip()
         if not part:
             continue
         if "-" in part:
-            lo, hi = part.split("-", 1)
-            out.update(range(int(lo), int(hi) + 1))
+            lo_s, hi_s = part.split("-", 1)
+            lo, hi = int(lo_s), int(hi_s)
+            if hi > MAX_ACC_SLOTS:
+                raise ValueError(f"accs range {part!r} exceeds the "
+                                 f"{MAX_ACC_SLOTS}-slot cap")
+            out.update(range(max(lo, 1), hi + 1))
         else:
-            out.add(int(part))
+            n = int(part)
+            if n > MAX_ACC_SLOTS:
+                raise ValueError(f"acc count {n} exceeds the "
+                                 f"{MAX_ACC_SLOTS}-slot cap")
+            out.add(n)
     counts = sorted(c for c in out if c >= 1)
     if not counts:
         raise ValueError(f"no slot counts in accs spec {spec!r}")

@@ -51,7 +51,8 @@ import signal
 import sys
 import threading
 import time
-from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from http.server import (BaseHTTPRequestHandler, HTTPServer,
+                         ThreadingHTTPServer)
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 from ..core.diskcache import DiskCache
@@ -100,8 +101,11 @@ class CircuitBreaker:
         self.trips = 0
         self._consecutive = 0
         self._opened_at = 0.0
-        self._probe_out = False
-        self._probe_engine: Optional[str] = None
+        # the outstanding half-open probe, identified by a unique token
+        # handed to the probe request at admit() time — never by engine
+        # name (a stale pre-trip request granted the same engine must
+        # not resolve the probe)
+        self._probe_token: Optional[object] = None
 
     @staticmethod
     def _rank(engine: str) -> int:
@@ -112,36 +116,39 @@ class CircuitBreaker:
             return requested
         return min(requested, self.pinned, key=self._rank)
 
-    def admit(self, requested: str) -> str:
-        """The engine this request is granted (may be the pinned tier)."""
+    def admit(self, requested: str) -> Tuple[str, Optional[object]]:
+        """``(granted_engine, probe_token)`` for this request.  The
+        token is non-None only when this request *is* the half-open
+        probe; the caller must hand it back — to :meth:`observe` when
+        the sweep produced a final engine, or to :meth:`release_probe`
+        when the request died before one."""
         with self._lock:
             if self.state == "open" and \
                     time.monotonic() - self._opened_at >= self.reset_s:
                 self.state = "half_open"
-                self._probe_out = False
+                self._probe_token = None
             if self.state == "closed":
-                return requested
-            if self.state == "half_open" and not self._probe_out \
+                return requested, None
+            if self.state == "half_open" and self._probe_token is None \
                     and self._rank(requested) > self._rank(self.pinned
                                                            or requested):
                 # the one probe: full fidelity, resolves the state below
-                self._probe_out = True
-                self._probe_engine = requested
-                return requested
-            return self._cap(requested)
+                self._probe_token = object()
+                return requested, self._probe_token
+            return self._cap(requested), None
 
-    def observe(self, requested: str, granted: str, final: str) -> None:
+    def observe(self, requested: str, granted: str, final: str,
+                token: Optional[object] = None) -> None:
         """Fold one finished request in.  ``final`` is the Explorer's
-        engine after the sweep; ``final != granted`` means it demoted."""
+        engine after the sweep; ``final != granted`` means it demoted.
+        ``token`` is whatever :meth:`admit` returned for this request —
+        only the holder of the live probe token resolves the half-open
+        state; concurrent or stale requests can never close the breaker
+        on the probe's behalf."""
         demoted = final != granted
         with self._lock:
-            # only the request that was actually granted above the pin is
-            # the probe — capped requests finishing concurrently must not
-            # resolve the half-open state
-            if self.state == "half_open" and self._probe_out \
-                    and granted == self._probe_engine:
-                self._probe_out = False
-                self._probe_engine = None
+            if token is not None and token is self._probe_token:
+                self._probe_token = None
                 if demoted:
                     self.state = "open"
                     self._opened_at = time.monotonic()
@@ -167,11 +174,27 @@ class CircuitBreaker:
                 self._consecutive = 0
                 self.pinned = None
 
+    def release_probe(self, token: Optional[object]) -> None:
+        """The probe request died without producing a final engine
+        (bad input after admission, a coalescer fault, an unexpected
+        500).  Treat it as a failed probe — re-open and restart the
+        cool-down — instead of leaking the probe slot and wedging the
+        breaker half-open (capped) forever.  A ``None`` or stale token
+        is a no-op, so non-probe failures may call this untested."""
+        with self._lock:
+            if token is None or token is not self._probe_token:
+                return
+            self._probe_token = None
+            self.state = "open"
+            self._opened_at = time.monotonic()
+            self.trips += 1
+
     def as_dict(self) -> Dict[str, Any]:
         with self._lock:
             return {"state": self.state, "pinned": self.pinned,
                     "trips": self.trips,
-                    "consecutive_demotions": self._consecutive}
+                    "consecutive_demotions": self._consecutive,
+                    "probe_in_flight": self._probe_token is not None}
 
 
 class SweepService:
@@ -243,7 +266,11 @@ class SweepService:
         with self._cond:
             if self.draining:
                 return 503, error_doc("draining: not admitting requests")
-            if self.waiting >= self.queue_limit:
+            # the queue bound only applies when no run slot is free: an
+            # idle server always admits (queue_limit=0 means "never
+            # wait", not "never serve")
+            if self.running >= self.max_concurrent \
+                    and self.waiting >= self.queue_limit:
                 self.shed += 1
                 retry = round(max(0.5, self._ema_sweep_s), 3)
                 return 429, error_doc(
@@ -292,29 +319,39 @@ class SweepService:
             return 504, error_doc(
                 "budget expired while queued",
                 timings=timings_block(queue_s, 0.0, queue_s))
-        granted = self.breaker.admit(req.engine)
+        # materialize before touching the breaker: a malformed request
+        # must answer 400 without ever consuming the half-open probe
         trace, reports, cands = req.materialize()
+        granted, probe = self.breaker.admit(req.engine)
 
-        # engine-conditional plumbing: jax never fans out to processes,
-        # the reference engine takes no disk cache, and the coalescer is
-        # exact-batch + in-process only (see repro.serve.coalesce)
-        procs = self.processes if granted in ("fast", "batch") else 0
-        cache_dir = self.cache_dir if granted != "reference" else None
-        runner = None
-        if granted == "batch" and procs == 0:
-            policy = req.policy
-            runner = (lambda fg, systems, deadline_left:
-                      self.coalescer.run_family(fg, systems, policy,
-                                                deadline_left))
-        ex = Explorer(trace, reports, policy=req.policy, engine=granted,
-                      processes=procs, cache_dir=cache_dir,
-                      order_library=self.library,
-                      candidate_timeout=req.candidate_timeout_s,
-                      family_runner=runner)
-        with self.coalescer.context() as co:
-            result = ex.explore(cands, top_k=req.top_k, prune=req.prune,
-                                deadline_s=remaining)
-        self.breaker.observe(req.engine, granted, ex.engine)
+        try:
+            # engine-conditional plumbing: jax never fans out to
+            # processes, the reference engine takes no disk cache, and
+            # the coalescer is exact-batch + in-process only (see
+            # repro.serve.coalesce)
+            procs = self.processes if granted in ("fast", "batch") else 0
+            cache_dir = self.cache_dir if granted != "reference" else None
+            runner = None
+            if granted == "batch" and procs == 0:
+                policy = req.policy
+                runner = (lambda fg, systems, deadline_left:
+                          self.coalescer.run_family(fg, systems, policy,
+                                                    deadline_left))
+            ex = Explorer(trace, reports, policy=req.policy,
+                          engine=granted, processes=procs,
+                          cache_dir=cache_dir,
+                          order_library=self.library,
+                          candidate_timeout=req.candidate_timeout_s,
+                          family_runner=runner)
+            with self.coalescer.context() as co:
+                result = ex.explore(cands, top_k=req.top_k,
+                                    prune=req.prune, deadline_s=remaining)
+        except BaseException:
+            # a probe that dies mid-flight re-opens the breaker rather
+            # than leaking the probe slot (no-op for non-probe requests)
+            self.breaker.release_probe(probe)
+            raise
+        self.breaker.observe(req.engine, granted, ex.engine, probe)
 
         ex_faults = ex.stats.as_dict()
         with self._cond:
@@ -386,7 +423,9 @@ class SweepService:
 
     def ready(self) -> bool:
         with self._cond:
-            return not self.draining and self.waiting < self.queue_limit
+            return not self.draining \
+                and (self.running < self.max_concurrent
+                     or self.waiting < self.queue_limit)
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -437,17 +476,32 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 class SweepServer(ThreadingHTTPServer):
-    """Threaded HTTP front — non-daemon handler threads with
-    ``block_on_close`` so ``server_close()`` joins them: a drained
-    server's in-flight responses are always fully written before exit."""
+    """Threaded HTTP front.  ``block_on_close`` makes ``server_close()``
+    join the handler threads, so a cleanly drained server's in-flight
+    responses are always fully written before exit.  When the drain
+    *times out* (``--drain-timeout``) the handlers are instead abandoned
+    via :meth:`abandon_in_flight` — ``server_close()`` skips the join
+    and, the threads being daemonic, they cannot hold up interpreter
+    exit either: the drain timeout is a hard deadline."""
 
-    daemon_threads = False
+    daemon_threads = True
     block_on_close = True
     allow_reuse_address = True
 
     def __init__(self, addr: Tuple[str, int], service: SweepService):
         super().__init__(addr, _Handler)
         self.service = service
+        self.abandoned = False
+
+    def abandon_in_flight(self) -> None:
+        """Hard-deadline drain: give up on wedged in-flight handlers."""
+        self.abandoned = True
+
+    def server_close(self) -> None:
+        if self.abandoned:
+            HTTPServer.server_close(self)   # skip ThreadingMixIn's join
+        else:
+            super().server_close()
 
 
 def serve(service: SweepService, host: str = "127.0.0.1",
@@ -474,7 +528,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="persistent graph/sim/order store")
     ap.add_argument("--queue-limit", type=int,
                     default=DEFAULT_QUEUE_LIMIT, metavar="N",
-                    help="waiting requests before load shedding "
+                    help="waiting requests before load shedding, applied "
+                         "only while every run slot is busy "
                          "(default %(default)s)")
     ap.add_argument("--max-concurrent", type=int,
                     default=DEFAULT_MAX_CONCURRENT, metavar="N",
@@ -507,7 +562,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     def _drain_then_stop() -> None:
         service.begin_drain()
-        service.drained(args.drain_timeout)
+        clean = service.drained(args.drain_timeout)
+        if not clean:
+            # the timeout is a hard deadline: abandon wedged handlers so
+            # server_close() cannot re-introduce an unbounded join
+            httpd.abandon_in_flight()
+            print(f"sweepd: drain timed out after "
+                  f"{args.drain_timeout}s with sweeps still in flight — "
+                  f"abandoning them", file=sys.stderr, flush=True)
         flushed = service.flush_orders()
         print(f"sweepd: drained ({service.done} request(s) served, "
               f"{flushed} order payload(s) flushed)", file=sys.stderr,
@@ -526,7 +588,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     try:
         httpd.serve_forever()
     finally:
-        httpd.server_close()    # joins in-flight handler threads
+        httpd.server_close()    # joins in-flight handlers unless abandoned
+        # catch orders dirtied between the drain handler's early flush
+        # and the last handler thread finishing (a post-timeout abandoned
+        # sweep may still lose its orders — that is the hard deadline)
+        service.flush_orders()
     return 0
 
 

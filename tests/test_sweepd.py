@@ -44,6 +44,9 @@ def body(**kw):
     body(trace="synth:0"),
     body(trace="inline"),                   # inline needs events
     body(accs="0"),
+    body(accs="1-99999999999"),             # OOM lever: capped pre-range
+    body(accs="2048"),                      # above MAX_ACC_SLOTS
+    body(accs="5,1-99999999999"),
     body(top_k=0),
     body(budget_s=-1),
     body(budget_s="soon"),
@@ -276,11 +279,24 @@ def test_coalescer_dedups_identical_lanes(monkeypatch):
 
 
 def test_queue_full_sheds_with_retry_after():
-    svc = SweepService(queue_limit=0)
-    status, doc = svc.submit(body())
+    svc = SweepService(queue_limit=0, max_concurrent=1,
+                       coalesce_window=0.0)
+    # queue_limit=0 means "never wait" — an idle server still serves
+    assert svc.ready()
+    assert svc.submit(body(trace="synth:8"))[0] == 200
+    with svc._cond:
+        svc.running = 1                     # saturate without a real sweep
+    try:
+        assert not svc.ready()
+        status, doc = svc.submit(body())
+    finally:
+        with svc._cond:
+            svc.running = 0
+            svc._cond.notify_all()
     assert status == 429
     assert doc["retry_after_s"] > 0
     assert svc.health_doc()["requests"]["shed"] == 1
+    assert svc.ready()
 
 
 def test_budget_expiring_in_queue_is_504():
@@ -318,24 +334,31 @@ def test_draining_rejects_and_unreadies():
 
 def test_breaker_unit_trip_cap_probe_close():
     br = CircuitBreaker(threshold=2, reset_s=60.0)
-    assert br.admit("jax") == "jax"
+    assert br.admit("jax") == ("jax", None)
     br.observe("jax", "jax", "batch")       # demotion 1
     br.observe("jax", "jax", "batch")       # demotion 2 -> open
     assert br.as_dict()["state"] == "open" and br.pinned == "batch"
-    assert br.admit("jax") == "batch"       # capped
-    assert br.admit("fast") == "fast"       # below the pin: untouched
+    assert br.admit("jax") == ("batch", None)   # capped
+    assert br.admit("fast") == ("fast", None)   # below the pin: untouched
     # capped requests finishing clean must not close an open breaker
     br.observe("jax", "batch", "batch")
     assert br.as_dict()["state"] == "open"
     # cool-down elapses -> one probe at full fidelity
     br._opened_at -= 120.0
-    assert br.admit("jax") == "jax"
-    assert br.admit("jax") == "batch"       # second concurrent: still capped
+    granted, probe = br.admit("jax")
+    assert granted == "jax" and probe is not None
+    assert br.admit("jax") == ("batch", None)   # second concurrent: capped
+    # a stale pre-trip request that was granted the same engine carries
+    # no token and must not resolve the probe on its behalf
+    br.observe("jax", "jax", "jax")
+    assert br.as_dict()["state"] == "half_open"
     br.observe("jax", "batch", "batch")     # the capped one resolves first
     assert br.as_dict()["state"] == "half_open"
-    br.observe("jax", "jax", "jax")         # clean probe -> closed
+    assert br.as_dict()["probe_in_flight"]
+    br.observe("jax", "jax", "jax", token=probe)    # clean probe -> closed
     assert br.as_dict()["state"] == "closed" and br.pinned is None
-    assert br.admit("jax") == "jax"
+    assert not br.as_dict()["probe_in_flight"]
+    assert br.admit("jax") == ("jax", None)
 
 
 def test_breaker_probe_failure_reopens():
@@ -343,10 +366,33 @@ def test_breaker_probe_failure_reopens():
     br.observe("jax", "jax", "batch")
     assert br.as_dict()["state"] == "open" and br.trips == 1
     br._opened_at -= 120.0
-    assert br.admit("jax") == "jax"         # probe
-    br.observe("jax", "jax", "fast")        # probe demoted -> reopen, deeper
+    granted, probe = br.admit("jax")        # probe
+    assert granted == "jax" and probe is not None
+    br.observe("jax", "jax", "fast", token=probe)   # demoted -> reopen deep
     d = br.as_dict()
     assert d["state"] == "open" and d["trips"] == 2 and br.pinned == "fast"
+
+
+def test_breaker_probe_crash_releases_and_reopens():
+    # a probe that dies without a final engine (500, bad input after
+    # admission) must re-open the breaker, not wedge it half-open
+    br = CircuitBreaker(threshold=1, reset_s=60.0)
+    br.observe("jax", "jax", "batch")
+    br._opened_at -= 120.0
+    granted, probe = br.admit("jax")
+    assert granted == "jax" and probe is not None
+    br.release_probe(probe)
+    d = br.as_dict()
+    assert d["state"] == "open" and not d["probe_in_flight"]
+    # after another cool-down a fresh probe is available again
+    br._opened_at -= 120.0
+    granted2, probe2 = br.admit("jax")
+    assert granted2 == "jax" and probe2 is not None
+    # stale/None tokens are no-ops (non-probe failure paths call this)
+    br.release_probe(probe)
+    br.release_probe(None)
+    assert br.as_dict()["state"] == "half_open"
+    assert br.as_dict()["probe_in_flight"]
 
 
 def test_breaker_pins_engine_after_repeated_demotions():
@@ -374,6 +420,50 @@ def test_breaker_pins_engine_after_repeated_demotions():
     assert d4["engine_final"] == "batch"
     assert d4["breaker"]["state"] == "closed"
     assert d4["top"] == d1["top"]
+
+
+def test_service_probe_crash_reopens_breaker(monkeypatch):
+    """An unexpected 500 during the half-open probe must release the
+    probe slot (breaker back to open) — not wedge every future request
+    at the pinned tier until restart."""
+    import repro.serve.sweepd as sweepd_mod
+    svc = SweepService(breaker_threshold=1, breaker_reset_s=0.0,
+                       coalesce_window=0.0)
+    with faults.install("fail_lockstep:*"):
+        s1, d1 = svc.submit(body())
+    assert s1 == 200 and d1["engine_final"] == "fast"
+    assert svc.breaker.as_dict()["state"] == "open"
+
+    real_explorer = sweepd_mod.Explorer
+
+    class Boom(real_explorer):
+        def explore(self, *a, **kw):
+            raise RuntimeError("probe exploded")
+
+    monkeypatch.setattr(sweepd_mod, "Explorer", Boom)
+    s2, d2 = svc.submit(body())             # the half-open probe: 500s
+    assert s2 == 500 and "probe exploded" in d2["error"]
+    d = svc.breaker.as_dict()
+    assert d["state"] == "open" and not d["probe_in_flight"]
+
+    # fault gone + cool-down passed: the next probe heals the tier
+    monkeypatch.setattr(sweepd_mod, "Explorer", real_explorer)
+    s3, d3 = svc.submit(body())
+    assert s3 == 200 and d3["engine_granted"] == "batch"
+    assert d3["breaker"]["state"] == "closed"
+
+
+def test_bad_request_never_consumes_probe():
+    # materialize runs before breaker.admit: a 400 burns no probe slot
+    svc = SweepService(breaker_threshold=1, breaker_reset_s=0.0,
+                       coalesce_window=0.0)
+    with faults.install("fail_lockstep:*"):
+        assert svc.submit(body())[0] == 200
+    assert svc.breaker.as_dict()["state"] == "open"
+    # passes validate() (non-empty events) but dies in materialize()
+    s, _doc = svc.submit(body(trace="inline", events=[{"bogus": 1}]))
+    assert s == 400
+    assert not svc.breaker.as_dict()["probe_in_flight"]
 
 
 # ---------------------------------------------------------------------------
@@ -408,6 +498,38 @@ def test_http_roundtrip_health_drain():
     finally:
         httpd.shutdown()
         httpd.server_close()
+
+
+def test_drain_timeout_abandons_wedged_handlers():
+    """--drain-timeout is a hard deadline: once the drain gives up,
+    server_close() must return promptly instead of joining a wedged
+    in-flight handler thread forever."""
+    svc = SweepService(coalesce_window=0.0)
+    release = threading.Event()
+
+    def wedged(_body):
+        release.wait(10.0)
+        return 503, {"error": "wedged"}
+
+    svc.submit = wedged
+    httpd = serve(svc, port=0)
+    port = httpd.server_address[1]
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    client = threading.Thread(
+        target=post_json,
+        args=(f"http://127.0.0.1:{port}/sweep", {"trace": "synth:8"}),
+        daemon=True)
+    client.start()
+    time.sleep(0.2)                 # let the handler wedge inside submit
+    try:
+        httpd.abandon_in_flight()
+        httpd.shutdown()
+        t0 = time.perf_counter()
+        httpd.server_close()        # must NOT join the wedged handler
+        assert time.perf_counter() - t0 < 2.0
+    finally:
+        release.set()
 
 
 def test_drain_flushes_dirty_orders(tmp_path):
