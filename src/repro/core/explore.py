@@ -46,6 +46,15 @@ into a subsystem:
   :class:`CandidateOutcome` per candidate (status, makespan, lower bound,
   per-candidate analysis time, cache provenance), a ranked top-k table, and
   JSON round-trip serialisation for storing sweeps as artifacts.
+* **Multi-objective PPA ranking** — ``Explorer(objectives=, budgets=)``
+  annotates every simulated candidate with area/peak-power/energy from a
+  :class:`~repro.core.hwspec.SpecLibrary` (derived from the sweep's own
+  kernel reports unless one is passed in), rejects budget violations as
+  ``infeasible`` (area/power before any graph is built; energy after the
+  sim, plus an exact ``static_w × lower_bound`` pre-cut), and exposes the
+  Pareto frontier on :class:`ExplorationResult` as a first-class
+  alternative to scalar top-k.  See docs/architecture.md
+  "Multi-objective ranking".
 
 ``explore()`` keeps the seed signature as a thin front-end.
 """
@@ -69,7 +78,7 @@ from concurrent.futures import (CancelledError, ProcessPoolExecutor,
 from concurrent.futures import TimeoutError as FuturesTimeout
 from concurrent.futures.process import BrokenProcessPool
 from typing import (Any, Callable, Dict, Iterator, List, Mapping,
-                    Optional, Sequence, Tuple)
+                    Optional, Sequence, Tuple, Union)
 
 from .augment import Eligibility, build_graph, lower_bound_cost
 from .batchsim import BatchStats, simulate_batch
@@ -77,6 +86,8 @@ from .devices import SystemConfig
 from .diskcache import DiskCache, sha256_text, trace_fingerprint
 from .estimator import PerfEstimate
 from .fastsim import FrozenGraph, simulate_fast
+from .hwspec import (Budgets, OBJECTIVE_NAMES, SpecLibrary,
+                     normalize_objectives, pareto_indices)
 from .replay import ENGINE_FALLBACK, MAX_RESCUE_ROUNDS, ReplayLibrary
 from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
 from .simulator import SimResult, simulate
@@ -363,14 +374,17 @@ def _graph_key(system: SystemConfig, elig: Eligibility) -> Tuple:
 
 
 def _sim_key(graph_key: Tuple, system: SystemConfig, policy: str,
-             tier: str = "exact") -> Tuple:
+             tier: str = "exact", ppa: Optional[str] = None) -> Tuple:
     pools = tuple((p.name, tuple(p.kinds), p.count) for p in system.pools)
     shared = tuple((r.name, r.count) for r in system.shared)
     # the tier keeps rtol-level (jax) results out of the exact engines'
     # cache namespace: a bit-identity contract must never be satisfied by
-    # a cached rtol result
-    return (graph_key, pools, shared, policy) if tier == "exact" \
+    # a cached rtol result.  The ppa token does the same for the
+    # objective/budget configuration: a makespan-only entry must never
+    # satisfy a PPA-annotated sweep's lookup (and vice versa)
+    key = (graph_key, pools, shared, policy) if tier == "exact" \
         else (graph_key, pools, shared, policy, tier)
+    return key if ppa is None else key + (ppa,)
 
 
 # ---------------------------------------------------------------------------
@@ -392,8 +406,13 @@ class CandidateOutcome:
     cached_eval: bool = False
     bottleneck: str = ""
     rank: Optional[int] = None             # 0 = best; None if not ranked
-    # status == "failed" (quarantined) only: repr of the captured exception
+    # status == "failed" (quarantined): repr of the captured exception;
+    # status == "infeasible" under a PPA budget: the violated-axis reason
     error: Optional[str] = None
+    # PPA mode only: all four objective values (makespan_s/area_mm2/
+    # power_w/energy_j) and the per-pool component breakdown
+    objectives: Optional[Dict[str, float]] = None
+    ppa: Optional[Dict[str, Any]] = None
 
 
 @dataclasses.dataclass
@@ -411,6 +430,10 @@ class ExplorationResult:
     n_workers: int = 1
     top_k: Optional[int] = None
     cache: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # PPA mode only: the effective objective axes (canonical order) and
+    # the budget bounds the sweep ran under
+    objectives: Optional[List[str]] = None
+    budgets: Optional[Dict[str, float]] = None
     # live estimates by candidate name; empty after JSON deserialisation
     estimates: Dict[str, PerfEstimate] = dataclasses.field(default_factory=dict)
 
@@ -455,6 +478,29 @@ class ExplorationResult:
         k = k if k is not None else (self.top_k or len(self.outcomes))
         return self.ranked[:k]
 
+    @property
+    def frontier(self) -> List[CandidateOutcome]:
+        """The Pareto frontier over this sweep's objective axes, in
+        ``ranked`` (makespan) order.
+
+        Membership depends only on the candidates' objective *values*
+        (equal points both survive), so the frontier set is invariant
+        under candidate permutation.  Without objectives it degenerates
+        to the candidates tied for best makespan.  Derived from the
+        outcomes, so it also works on a ``from_json``-restored result.
+        """
+        axes = list(self.objectives) if self.objectives else ["makespan_s"]
+        ok = self.ranked
+        pts = [o.objectives if o.objectives is not None
+               else {"makespan_s": o.makespan_s} for o in ok]
+        return [ok[i] for i in pareto_indices(pts, axes)]
+
+    @property
+    def dominated_count(self) -> int:
+        """How many ``ok`` candidates some frontier member strictly
+        dominates — the size of the trade-off the frontier summarises."""
+        return len(self.ranked) - len(self.frontier)
+
     def speedups(self, baseline: Optional[str] = None) -> Dict[str, float]:
         # computed from outcomes (not live PerfEstimates) so it also works
         # on a from_json-restored result; same semantics as speedup_table
@@ -497,12 +543,22 @@ class ExplorationResult:
                 lines.append("faults: " + ", ".join(
                     f"{k.replace('_', ' ')} {c[k]}"
                     for k in fault_keys if c.get(k, 0)))
+        if self.objectives:
+            front = self.frontier
+            lines.append(f"pareto frontier ({', '.join(self.objectives)}): "
+                         f"{len(front)} of {len(self.ranked)} "
+                         f"({self.dominated_count} dominated)")
+            for o in front:
+                vals = o.objectives or {"makespan_s": o.makespan_s}
+                lines.append("  " + o.name + ": " + ", ".join(
+                    f"{a}={vals[a]:.6g}" for a in (self.objectives or [])
+                    if a in vals))
         lines.append(f"total analysis time: {self.wall_seconds:.3f}s")
         return lines
 
     # ----------------------------------------------------------------- JSON
     def to_json(self) -> str:
-        return json.dumps({
+        doc = {
             "version": 2,
             "wall_seconds": self.wall_seconds,
             "policy": self.policy,
@@ -510,7 +566,14 @@ class ExplorationResult:
             "top_k": self.top_k,
             "cache": dict(self.cache),
             "outcomes": [dataclasses.asdict(o) for o in self.outcomes],
-        })
+        }
+        # additive, PPA-mode only: scalar-mode documents stay byte-
+        # identical to the pre-PPA format
+        if self.objectives is not None:
+            doc["objectives"] = list(self.objectives)
+        if self.budgets is not None:
+            doc["budgets"] = dict(self.budgets)
+        return json.dumps(doc)
 
     @staticmethod
     def from_json(text: str) -> "ExplorationResult":
@@ -522,7 +585,8 @@ class ExplorationResult:
             outcomes=[CandidateOutcome(**o) for o in d["outcomes"]],
             wall_seconds=d["wall_seconds"], policy=d["policy"],
             n_workers=d["n_workers"], top_k=d["top_k"],
-            cache=dict(d["cache"]))
+            cache=dict(d["cache"]),
+            objectives=d.get("objectives"), budgets=d.get("budgets"))
 
 
 # ---------------------------------------------------------------------------
@@ -738,17 +802,24 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
 ENGINE_NAMES = ("reference", "fast", "batch", "jax")
 
 
-def orders_disk_text(graph_token: str, policy: str) -> str:
+def orders_disk_text(graph_token: str, policy: str,
+                     ppa_token: Optional[str] = None) -> str:
     """On-disk key for one graph's order-library entry.
 
-    Keyed by the FrozenGraph *content* hash + policy — nothing else:
-    orders are engine-agnostic (recorded by the exact path, re-validated
-    per lane by every backend), so one entry serves every engine tier,
-    but never a different policy (the heap keys differ).  Module-level so
-    anything holding a shared :class:`~repro.core.replay.ReplayLibrary`
-    (the sweep server's drain flush) can persist dirty orders with the
-    exact key every Explorer reads back."""
-    return json.dumps(["orders", 1, graph_token, policy])
+    Keyed by the FrozenGraph *content* hash + policy — plus, in PPA mode,
+    the objective/budget configuration token: orders are engine-agnostic
+    (recorded by the exact path, re-validated per lane by every backend),
+    so one entry serves every engine tier, but never a different policy
+    (the heap keys differ) and never a different objective configuration
+    (a budgeted sweep prunes/simulates a different candidate population,
+    so its discovered orders live in their own namespace).  Module-level
+    so anything holding a shared
+    :class:`~repro.core.replay.ReplayLibrary` (the sweep server's drain
+    flush, which runs scalar-mode with ``ppa_token=None``) can persist
+    dirty orders with the exact key every Explorer reads back."""
+    if ppa_token is None:
+        return json.dumps(["orders", 1, graph_token, policy])
+    return json.dumps(["orders", 1, graph_token, policy, ppa_token])
 
 
 class Explorer:
@@ -776,7 +847,11 @@ class Explorer:
                  candidate_timeout: Optional[float] = None,
                  sweep_deadline: Optional[float] = None,
                  max_retries: int = MAX_CHUNK_RETRIES,
-                 family_runner: Optional[Callable] = None):
+                 family_runner: Optional[Callable] = None,
+                 objectives: Optional[Sequence[str]] = None,
+                 budgets: Optional[Union[Budgets, Mapping[str,
+                                                          float]]] = None,
+                 hwspec: Optional[SpecLibrary] = None):
         """``engine`` names the evaluation engine directly — one of
         :data:`ENGINE_NAMES` — and overrides the legacy ``fast``/``batch``
         booleans (kept for compatibility: ``fast=False`` is
@@ -839,7 +914,28 @@ class Explorer:
         raises demote the engine exactly like a local engine fault, except
         :class:`concurrent.futures.TimeoutError` — a missed deadline, not
         an engine fault — which quarantines via the isolation path without
-        demoting.  Mutually exclusive with ``processes``."""
+        demoting.  Mutually exclusive with ``processes``.
+
+        Multi-objective PPA ranking (docs/architecture.md
+        "Multi-objective ranking"): ``objectives`` names the ranked axes
+        (a subset of :data:`~repro.core.hwspec.OBJECTIVE_NAMES`;
+        ``makespan_s`` is always included) and ``budgets`` bounds them
+        (a :class:`~repro.core.hwspec.Budgets` or a strict mapping —
+        unknown axes and non-positive values raise; budgeted axes join
+        the objective set, which is what makes budget tightening
+        monotone).  Either one switches the sweep into PPA mode: every
+        simulated candidate is annotated with
+        area/peak-power/energy from ``hwspec`` (default: a
+        :class:`~repro.core.hwspec.SpecLibrary` derived from this
+        sweep's kernel reports), budget violations come back
+        ``infeasible`` with the violated axis in ``error``, and
+        ``ExplorationResult.frontier`` holds the Pareto set.  With more
+        than one effective axis, the scalar lower-bound pruner is
+        disabled (a makespan cut would discard slow-but-frugal frontier
+        members); the exact energy pre-cut
+        (``static_w × lower_bound > energy_j``) still applies.  All
+        sim-cache and order-library keys are namespaced by the
+        objective/budget configuration."""
         if engine is not None:
             if engine not in ENGINE_NAMES:
                 raise ValueError(
@@ -921,6 +1017,22 @@ class Explorer:
         self.sweep_deadline = sweep_deadline
         self.max_retries = int(max_retries)
         self.family_runner = family_runner
+        # ----- multi-objective PPA configuration -----
+        self.budgets = budgets if isinstance(budgets, (Budgets,
+                                                       type(None))) \
+            else Budgets.from_mapping(budgets)
+        if objectives is not None or self.budgets is not None:
+            self.objectives: Optional[Tuple[str, ...]] = \
+                normalize_objectives(objectives, self.budgets)
+            self.hwspec = hwspec if hwspec is not None \
+                else SpecLibrary.from_reports(reports)
+            self._ppa_token: Optional[str] = sha256_text(json.dumps(
+                ["ppa", 1, self.hwspec.signature(), list(self.objectives),
+                 self.budgets.as_dict() if self.budgets else None]))[:16]
+        else:
+            self.objectives = None
+            self.hwspec = hwspec
+            self._ppa_token = None
         self._disk = DiskCache(cache_dir) if cache_dir is not None else None
         if compile_cache is not None:
             self.compile_cache: Optional["CompileCache"] = compile_cache
@@ -1024,13 +1136,17 @@ class Explorer:
         # rtol-level entry can never satisfy an exact engine's lookup
         tier = self._sim_tier if tier is None else tier
         tag = "sim" if tier == "exact" else f"sim-{tier}"
-        return json.dumps(
-            [tag, 1, sha256_text(self._graph_disk_text(graph_key)),
-             pools, shared, self.policy])
+        doc = [tag, 1, sha256_text(self._graph_disk_text(graph_key)),
+               pools, shared, self.policy]
+        if self._ppa_token is not None:
+            # PPA mode gets its own namespace (see _sim_key): a
+            # makespan-only entry must never satisfy this sweep's lookup
+            doc.append(self._ppa_token)
+        return json.dumps(doc)
 
     def _orders_disk_text(self, graph_token: str) -> str:
         """See :func:`orders_disk_text` (shared with the sweep server)."""
-        return orders_disk_text(graph_token, self.policy)
+        return orders_disk_text(graph_token, self.policy, self._ppa_token)
 
     def _load_orders(self, payload: FrozenGraph) -> None:
         """Warm the order library from disk, once per graph per Explorer.
@@ -1227,10 +1343,11 @@ class Explorer:
         Unlike batch exploration (schedule-free, top-k records only), the
         single-candidate API always returns a full schedule — callers feed
         it straight to ``ascii_gantt`` / ``write_prv``."""
-        est, _ = self._evaluate_outcome(cand)
+        est, out = self._evaluate_outcome(cand)
         if est is None:
-            raise ValueError(f"candidate {cand.name!r} does not fit the "
-                             f"fabric budget")
+            reason = out.error or "does not fit the fabric budget"
+            raise ValueError(f"candidate {cand.name!r} is infeasible: "
+                             f"{reason}")
         if self.fast and not est.sim.schedule:
             est.sim = self._full_schedule_sim(cand)
         return est
@@ -1248,6 +1365,19 @@ class Explorer:
             return CandidateOutcome(
                 name=cand.name, status="infeasible",
                 analysis_seconds=time.perf_counter() - t0)
+        if self.budgets is not None and (
+                self.budgets.area_mm2 is not None
+                or self.budgets.power_w is not None):
+            # area and peak power are spec arithmetic on the pool layout —
+            # simulation-free, so over-budget candidates are rejected
+            # before any graph is built
+            ppa0 = self.hwspec.annotate(cand.system, 0.0, {})
+            reason = self.budgets.violation(
+                {"area_mm2": ppa0.area_mm2, "power_w": ppa0.power_w})
+            if reason is not None:
+                return CandidateOutcome(
+                    name=cand.name, status="infeasible", error=reason,
+                    analysis_seconds=time.perf_counter() - t0)
         return None
 
     def _evaluate_outcome(self, cand: Candidate) \
@@ -1265,7 +1395,29 @@ class Explorer:
     def _outcome_from_sim(self, cand: Candidate, stats: Dict[str, object],
                           crit: float, lb: float, ghit: bool, ehit: bool,
                           sim: SimResult, dt: float) \
-            -> Tuple[PerfEstimate, CandidateOutcome]:
+            -> Tuple[Optional[PerfEstimate], CandidateOutcome]:
+        objs = ppa_doc = None
+        if self.objectives is not None:
+            # the single seam every engine path funnels through: annotate
+            # post-sim (pure spec arithmetic — the sims themselves stay
+            # bit-identical across engines) and enforce the energy budget
+            ppa = self.hwspec.annotate(cand.system, sim.makespan, sim.busy,
+                                       sim.pool_slots)
+            objs = ppa.objectives()
+            ppa_doc = ppa.as_dict()
+            if self.budgets is not None:
+                reason = self.budgets.violation(objs)
+                if reason is not None:
+                    # no PerfEstimate: an over-budget candidate must not
+                    # enter ok_makespans (it would tighten the scalar
+                    # prune threshold with a makespan nobody may pick)
+                    return None, CandidateOutcome(
+                        name=cand.name, status="infeasible",
+                        makespan_s=sim.makespan, critical_path_s=crit,
+                        lower_bound_s=lb, analysis_seconds=dt,
+                        cached_graph=ghit, cached_eval=ehit,
+                        bottleneck=sim.bottleneck(), error=reason,
+                        objectives=objs, ppa=ppa_doc)
         est = PerfEstimate(candidate=cand.name, makespan_s=sim.makespan,
                            sim=sim, graph_stats=stats, critical_path_s=crit,
                            analysis_seconds=dt)
@@ -1273,7 +1425,7 @@ class Explorer:
             name=cand.name, status="ok", makespan_s=sim.makespan,
             critical_path_s=crit, lower_bound_s=lb, analysis_seconds=dt,
             cached_graph=ghit, cached_eval=ehit,
-            bottleneck=sim.bottleneck())
+            bottleneck=sim.bottleneck(), objectives=objs, ppa=ppa_doc)
 
     def _sim_lookup(self, cand: Candidate, gkey: Optional[Tuple] = None) \
             -> Tuple[Tuple, Optional[str], Optional[SimResult]]:
@@ -1283,7 +1435,8 @@ class Explorer:
         hit/miss accounting for the lookup."""
         if gkey is None:
             gkey = _graph_key(cand.system, cand.eligibility)
-        key = _sim_key(gkey, cand.system, self.policy, self._sim_tier)
+        key = _sim_key(gkey, cand.system, self.policy, self._sim_tier,
+                       self._ppa_token)
         with self._lock:
             if self.cache_enabled and key in self._sims:
                 self.stats.eval_hits += 1
@@ -1377,9 +1530,15 @@ class Explorer:
         estimates: Dict[str, PerfEstimate] = {}
         ok_makespans: List[float] = []
         kk = max(1, top_k) if top_k is not None else 1
+        # with more than one objective axis, the scalar makespan cut is
+        # unsound — it would discard slow-but-frugal frontier members —
+        # so the lower-bound pruner only runs in single-axis mode
+        multi_axis = self.objectives is not None and len(self.objectives) > 1
+        energy_cap = self.budgets.energy_j if self.budgets is not None \
+            else None
 
         def threshold() -> Optional[float]:
-            if not prune or len(ok_makespans) < kk:
+            if multi_axis or not prune or len(ok_makespans) < kk:
                 return None
             return sorted(ok_makespans)[kk - 1]
 
@@ -1400,6 +1559,24 @@ class Explorer:
                     if infeasible is not None:
                         outcomes[i] = infeasible
                         continue
+                    if energy_cap is not None:
+                        # exact pre-cut composed with the lower-bound
+                        # machinery: energy >= static_w × makespan >=
+                        # static_w × lower_bound, so exceeding the cap
+                        # here is provable infeasibility, not a heuristic
+                        # prune (the graph/bound is cached work anyway)
+                        _, _, crit, lb, ghit = self._graph_for(cand)
+                        floor = self.hwspec.annotate(
+                            cand.system, 0.0, {}).static_w * lb
+                        if floor > energy_cap:
+                            outcomes[i] = CandidateOutcome(
+                                name=cand.name, status="infeasible",
+                                critical_path_s=crit, lower_bound_s=lb,
+                                cached_graph=ghit,
+                                error=f"energy_j lower bound {floor:.6g} "
+                                      f"exceeds budget {energy_cap:.6g}",
+                                analysis_seconds=time.perf_counter() - tc)
+                            continue
                     cut = threshold()
                     if cut is not None:
                         # the graph (hence the bound) is cached work anyway
@@ -1467,7 +1644,11 @@ class Explorer:
         result = ExplorationResult(
             outcomes=done, wall_seconds=time.perf_counter() - t0,
             policy=self.policy, n_workers=n_workers, top_k=top_k,
-            cache=cache, estimates=estimates)
+            cache=cache, estimates=estimates,
+            objectives=list(self.objectives)
+            if self.objectives is not None else None,
+            budgets=self.budgets.as_dict()
+            if self.budgets is not None else None)
         for rank, o in enumerate(result.ranked):
             o.rank = rank
         self._materialise_schedules(result, cands, estimates, kk)
@@ -1864,7 +2045,8 @@ class Explorer:
             cand = build(point)
             if cand.fabric and not cand.feasible(self.budget):
                 return float("inf")
-            return self._evaluate_outcome(cand)[0].makespan_s
+            est, _ = self._evaluate_outcome(cand)
+            return float("inf") if est is None else est.makespan_s
 
         return hillclimb(space, score, start=start, max_evals=max_evals,
                          seed=seed)
@@ -1889,7 +2071,10 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
             jax_megabatch: Optional[bool] = None,
             compile_cache: Optional["CompileCache"] = None,
             order_library: Optional[ReplayLibrary] = None,
-            max_rescue_rounds: int = MAX_RESCUE_ROUNDS) -> ExplorationResult:
+            max_rescue_rounds: int = MAX_RESCUE_ROUNDS,
+            objectives: Optional[Sequence[str]] = None,
+            budgets: Optional[Union[Budgets, Mapping[str, float]]] = None,
+            hwspec: Optional[SpecLibrary] = None) -> ExplorationResult:
     """Estimate every feasible candidate; rank; pick the best.
 
     This is the "coffee-break" loop: its wall time replaces one bitstream
@@ -1905,5 +2090,6 @@ def explore(trace: Trace, candidates: Sequence[Candidate], reports: ReportMap,
                   engine=engine, jax_chunk=jax_chunk,
                   jax_megabatch=jax_megabatch, compile_cache=compile_cache,
                   order_library=order_library,
-                  max_rescue_rounds=max_rescue_rounds)
+                  max_rescue_rounds=max_rescue_rounds,
+                  objectives=objectives, budgets=budgets, hwspec=hwspec)
     return ex.explore(candidates, top_k=top_k, prune=prune)

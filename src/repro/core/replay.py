@@ -991,3 +991,74 @@ def rankings_equivalent(got: Sequence[str], ref: Sequence[str],
                                           tolerance):
             return False
     return True
+
+
+def frontiers_equivalent(got: Sequence[str], ref: Sequence[str],
+                         ref_objectives: Mapping[str, Mapping[str, float]],
+                         axes: Sequence[str], tolerance: float = 0.0,
+                         noisy: Sequence[str] = ("makespan_s",
+                                                 "energy_j")) -> bool:
+    """Frontier-stability test between two Pareto-frontier name sets.
+
+    The multi-objective analogue of :func:`rankings_equivalent`: *which*
+    candidates sit on the frontier is a set question, so order is
+    ignored.  At tolerance 0 (the exact engines) the sets must be
+    identical — the frontier is a deterministic function of bit-identical
+    objective values.
+
+    At a non-zero tolerance (the jax tier), only the ``noisy`` axes carry
+    simulated floats (makespan, and energy = static·makespan + dynamic·
+    busy); the remaining axes are spec arithmetic on the candidate's pool
+    layout and engine-independent.  A perturbation of at most ``rtol`` on
+    the noisy axes can change frontier membership only across sub-
+    tolerance margins, which gives a checkable two-sided contract against
+    the *reference* objective values:
+
+    * a candidate ``x`` **dropped** from the reference frontier must have
+      been overtaken: some candidate ``y`` must match-or-beat ``x`` on
+      every exact axis and be within tolerance of (or beat) ``x`` on
+      every noisy axis — otherwise no rtol-sized perturbation could have
+      dominated ``x`` away;
+    * a candidate ``x`` that **appeared** (reference says dominated) must
+      have escaped each of its reference dominators across a noisy
+      margin: every ``y`` that strictly dominates ``x`` in the reference
+      must be within tolerance of ``x`` on at least one noisy axis —
+      an exact-axis or super-tolerance domination cannot be perturbed
+      away.
+
+    Names unknown to ``ref_objectives`` fail the test outright.
+    """
+    got_set, ref_set = set(got), set(ref)
+    if any(n not in ref_objectives for n in got_set | ref_set):
+        return False
+    if got_set == ref_set:
+        return True
+    if tolerance == 0.0:
+        return False
+    exact_axes = [a for a in axes if a not in noisy]
+    noisy_axes = [a for a in axes if a in noisy]
+
+    def covers(y: Mapping[str, float], x: Mapping[str, float]) -> bool:
+        # y could plausibly dominate x once noisy axes wiggle by the tier
+        return (all(y[a] <= x[a] for a in exact_axes)
+                and all(y[a] <= x[a]
+                        or makespans_close(y[a], x[a], tolerance)
+                        for a in noisy_axes))
+
+    for name in ref_set - got_set:          # dropped from the frontier
+        x = ref_objectives[name]
+        if not any(covers(ref_objectives[y], x)
+                   for y in ref_objectives if y != name):
+            return False
+    for name in got_set - ref_set:          # appeared on the frontier
+        x = ref_objectives[name]
+        for y, yv in ref_objectives.items():
+            if y == name:
+                continue
+            strict = (all(yv[a] <= x[a] for a in axes)
+                      and any(yv[a] < x[a] for a in axes))
+            if strict and not any(
+                    makespans_close(yv[a], x[a], tolerance)
+                    for a in noisy_axes):
+                return False
+    return True

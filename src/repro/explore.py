@@ -51,6 +51,7 @@ from .core.hlsreport import KernelReport
 from .core.replay import MAX_RESCUE_ROUNDS
 from .core.trace import Trace
 from .serve.protocol import (build_candidates, parse_accs,
+                             parse_budget_args, parse_objectives,
                              reports_from_entries, sweep_doc, timings_block)
 
 
@@ -104,6 +105,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--top-k", type=int, default=5, metavar="K")
     ap.add_argument("--prune", action="store_true",
                     help="lower-bound pruning (per-candidate exact path)")
+    ap.add_argument("--objectives", metavar="AXES", default=None,
+                    help="comma-separated PPA objective axes "
+                         "(makespan_s, area_mm2, power_w, energy_j); "
+                         "switches the sweep to Pareto-frontier output")
+    ap.add_argument("--budget", metavar="AXIS=VALUE", action="append",
+                    default=None, dest="ppa_budgets",
+                    help="PPA budget bound, repeatable (e.g. "
+                         "--budget power_w=2.5 --budget area_mm2=18); "
+                         "budgeted axes join the objectives")
     ap.add_argument("--processes", type=int, default=0, metavar="N",
                     help="worker processes (exact engines only)")
     ap.add_argument("--cache-dir", metavar="DIR",
@@ -146,13 +156,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             reports = _load_reports(args.reports)
         cands = _build_candidates(reports, _parse_accs(args.accs),
                                   smp=not args.no_smp)
+        objectives = parse_objectives(args.objectives)
+        budgets = parse_budget_args(args.ppa_budgets)
         ex = Explorer(trace, reports, policy=args.policy,
                       engine=args.engine, processes=args.processes,
                       cache_dir=args.cache_dir,
                       max_rescue_rounds=args.max_rescue_rounds,
                       candidate_timeout=args.candidate_timeout,
                       sweep_deadline=args.sweep_deadline,
-                      max_retries=args.max_retries)
+                      max_retries=args.max_retries,
+                      objectives=objectives, budgets=budgets)
     except (OSError, ValueError, KeyError, TypeError) as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 2

@@ -28,6 +28,7 @@ from ..core.augment import Eligibility
 from ..core.devices import zynq_system
 from ..core.explore import Candidate, ENGINE_NAMES
 from ..core.hlsreport import KernelReport
+from ..core.hwspec import Budgets, normalize_objectives
 from ..core.trace import Trace, TraceEvent
 
 #: Default whole-request latency budget (queue wait + sweep) in seconds.
@@ -82,6 +83,34 @@ def parse_accs(spec: str) -> List[int]:
     if not counts:
         raise ValueError(f"no slot counts in accs spec {spec!r}")
     return counts
+
+
+def parse_objectives(spec: Optional[str]) -> Optional[List[str]]:
+    """``"area_mm2,energy_j"`` -> axis-name list (validated downstream by
+    :func:`~repro.core.hwspec.normalize_objectives`); None/empty -> None."""
+    if spec is None:
+        return None
+    axes = [a.strip() for a in str(spec).split(",") if a.strip()]
+    return axes or None
+
+
+def parse_budget_args(pairs: Optional[Sequence[str]]
+                      ) -> Optional[Dict[str, float]]:
+    """Repeatable ``AXIS=VALUE`` CLI args -> budgets mapping (axis names
+    and bounds are validated downstream by
+    :class:`~repro.core.hwspec.Budgets`); None/empty -> None."""
+    if not pairs:
+        return None
+    out: Dict[str, float] = {}
+    for pair in pairs:
+        axis, sep, value = str(pair).partition("=")
+        if not sep or not axis.strip():
+            raise ValueError(f"budget {pair!r} is not AXIS=VALUE")
+        try:
+            out[axis.strip()] = float(value)
+        except ValueError:
+            raise ValueError(f"budget {pair!r}: {value!r} is not a number")
+    return out
 
 
 def reports_from_entries(entries: Sequence[dict]
@@ -145,6 +174,13 @@ class SweepRequest:
     prune: bool = False
     budget_s: float = DEFAULT_BUDGET_S
     candidate_timeout_s: Optional[float] = None
+    # multi-objective PPA mode (optional): ranked axes and budget bounds.
+    # The spec library itself is server-fixed — always derived from this
+    # request's kernel reports (SpecLibrary.from_reports), never supplied
+    # over the wire — so budgets/objectives select among existing
+    # behaviours without adding a remote lever
+    objectives: Optional[List[str]] = None
+    budgets: Optional[Dict[str, float]] = None
 
     @staticmethod
     def from_json(raw: Any) -> "SweepRequest":
@@ -212,6 +248,18 @@ class SweepRequest:
                 raise ProtocolError("candidate_timeout_s must be a number")
             if self.candidate_timeout_s <= 0:
                 raise ProtocolError("candidate_timeout_s must be > 0")
+        # strict PPA validation: unknown axes and non-positive/non-finite
+        # bounds are a 400, never a silently-ignored knob
+        if self.objectives is not None and (
+                not isinstance(self.objectives, list)
+                or not all(isinstance(a, str) for a in self.objectives)):
+            raise ProtocolError("objectives must be a list of axis names")
+        try:
+            parsed = Budgets.from_mapping(self.budgets)
+            if self.objectives is not None or parsed is not None:
+                normalize_objectives(self.objectives, parsed)
+        except ValueError as exc:
+            raise ProtocolError(str(exc))
 
     # ------------------------------------------------------- materialize
     def materialize(self) -> Tuple[Trace, Dict[Tuple[str, str],
@@ -276,8 +324,13 @@ def sweep_doc(trace_label: str, engine_requested: str, ex,
 
     ``ex`` is the Explorer after the sweep (``ex.engine`` is the final,
     possibly demoted engine), ``result`` its ExplorationResult.
+
+    In PPA mode (``result.objectives`` set) the document additionally
+    carries ``objectives``/``budgets``/``frontier``/``dominated`` and the
+    per-candidate objective values ride on each ``top`` entry; scalar-
+    mode documents are byte-identical to the pre-PPA shape.
     """
-    return {
+    doc = {
         "trace": trace_label,
         "engine": engine_requested,
         # engine demotion is sticky; != requested when the sweep degraded
@@ -300,6 +353,18 @@ def sweep_doc(trace_label: str, engine_requested: str, ex,
         "faults": {k: v for k, v in ex.stats.as_dict().items()
                    if k in FAULT_KEYS},
     }
+    if result.objectives is not None:
+        doc["objectives"] = list(result.objectives)
+        doc["budgets"] = dict(result.budgets) if result.budgets else {}
+        doc["frontier"] = [
+            {"rank": o.rank, "name": o.name, "makespan_s": o.makespan_s,
+             "objectives": dict(o.objectives or {}),
+             "ppa": o.ppa}
+            for o in result.frontier]
+        doc["dominated"] = result.dominated_count
+        for entry, o in zip(doc["top"], result.top(top_k)):
+            entry["objectives"] = dict(o.objectives or {})
+    return doc
 
 
 def error_doc(message: str, **extra: Any) -> Dict[str, Any]:

@@ -60,7 +60,8 @@ from ..core.explore import ENGINE_NAMES, Explorer, orders_disk_text
 from ..core.replay import ReplayLibrary
 from .coalesce import Coalescer, DEFAULT_WINDOW_S
 from .protocol import (FAULT_KEYS, POLICIES, ProtocolError, SweepRequest,
-                       error_doc, get_json, post_json, sweep_doc,
+                       error_doc, get_json, parse_budget_args,
+                       parse_objectives, post_json, sweep_doc,
                        timings_block)
 
 DEFAULT_QUEUE_LIMIT = 16
@@ -337,12 +338,18 @@ class SweepService:
                 runner = (lambda fg, systems, deadline_left:
                           self.coalescer.run_family(fg, systems, policy,
                                                     deadline_left))
+            # PPA mode rides the same machinery: the spec library is
+            # always derived server-side from this request's reports
+            # (never supplied over the wire), and coalescing stays safe
+            # because family evaluation exchanges raw SimResults — the
+            # PPA annotation happens post-sim in this Explorer
             ex = Explorer(trace, reports, policy=req.policy,
                           engine=granted, processes=procs,
                           cache_dir=cache_dir,
                           order_library=self.library,
                           candidate_timeout=req.candidate_timeout_s,
-                          family_runner=runner)
+                          family_runner=runner,
+                          objectives=req.objectives, budgets=req.budgets)
             with self.coalescer.context() as co:
                 result = ex.explore(cands, top_k=req.top_k,
                                     prune=req.prune, deadline_s=remaining)
@@ -613,6 +620,13 @@ def client_main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--budget", type=float, default=120.0, metavar="S",
                     help="whole-request latency budget "
                          "(default %(default)s)")
+    ap.add_argument("--objectives", metavar="AXES", default=None,
+                    help="comma-separated PPA objective axes — "
+                         "Pareto-frontier output")
+    ap.add_argument("--ppa-budget", metavar="AXIS=VALUE", action="append",
+                    default=None, dest="ppa_budgets",
+                    help="PPA budget bound, repeatable (distinct from the "
+                         "latency --budget)")
     ap.add_argument("--health", action="store_true",
                     help="print /healthz instead of sweeping")
     args = ap.parse_args(argv)
@@ -621,12 +635,24 @@ def client_main(argv: Optional[Sequence[str]] = None) -> int:
     if args.health:
         status, doc = get_json(base + "/healthz")
     else:
-        status, doc = post_json(base + "/sweep", {
+        body = {
             "trace": args.trace, "engine": args.engine,
             "policy": args.policy, "accs": args.accs,
             "smp": not args.no_smp, "top_k": args.top_k,
             "prune": args.prune, "budget_s": args.budget,
-        }, timeout=args.budget + 30.0)
+        }
+        try:
+            objectives = parse_objectives(args.objectives)
+            budgets = parse_budget_args(args.ppa_budgets)
+        except ValueError as exc:
+            print(f"error: {exc}", file=sys.stderr)
+            return 1
+        if objectives is not None:
+            body["objectives"] = objectives
+        if budgets is not None:
+            body["budgets"] = budgets
+        status, doc = post_json(base + "/sweep", body,
+                                timeout=args.budget + 30.0)
     print(json.dumps(doc, indent=2))
     if status != 200:
         print(f"error: HTTP {status}", file=sys.stderr)

@@ -58,6 +58,35 @@ def test_file_trace_with_reports_and_warm_cache(tmp_path, capsys):
     assert os.listdir(cache)
 
 
+def test_ppa_flags_produce_frontier_document(capsys):
+    rc, doc = run_main(["synth:24", "--accs", "1-6", "--top-k", "3",
+                        "--objectives", "area_mm2,energy_j",
+                        "--budget", "power_w=5.0"], capsys)
+    assert rc == 0
+    # budget axes join the objectives, canonical order
+    assert doc["objectives"] == ["makespan_s", "area_mm2", "power_w",
+                                 "energy_j"]
+    assert doc["budgets"] == {"power_w": 5.0}
+    assert doc["frontier"] and isinstance(doc["dominated"], int)
+    names = [e["name"] for e in doc["frontier"]]
+    assert doc["best"] in names                 # makespan minimum is Pareto
+    for e in doc["frontier"]:
+        assert set(e["objectives"]) == set(doc["objectives"])
+        assert e["ppa"]["area_mm2"] == e["objectives"]["area_mm2"]
+    # top entries carry the objective values too in PPA mode
+    assert all("objectives" in t for t in doc["top"])
+
+
+def test_ppa_flag_errors_exit_2(capsys):
+    for args in (["synth:8", "--objectives", "latency"],
+                 ["synth:8", "--budget", "power_w"],
+                 ["synth:8", "--budget", "bogus=1"],
+                 ["synth:8", "--budget", "power_w=-2"]):
+        assert main(args) == 2
+        err = capsys.readouterr().err
+        assert err.startswith("error:") and "Traceback" not in err
+
+
 def test_file_trace_requires_reports(tmp_path, capsys):
     trace_path = str(tmp_path / "trace.jsonl")
     synth_trace(8).save(trace_path)

@@ -202,6 +202,60 @@ def test_policy_and_smp_model_isolate_sim_entries(tmp_path, fixture_world):
     assert with_fn.cache["disk_hits"] == 0   # smp model fingerprinted
 
 
+def test_ppa_config_namespaces_sim_entries(tmp_path, fixture_world):
+    """A makespan-only sim entry must never satisfy a PPA-mode lookup
+    (or vice versa): the objective/budget configuration is part of the
+    on-disk sim key.  Graphs stay shared — graph content is independent
+    of how the sweep ranks."""
+    trace, reports, rep = fixture_world
+    cands = synth_candidates(rep, accs=(1,))
+    plain = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    ppa_kw = dict(objectives=["area_mm2", "energy_j"])
+    ppa = Explorer(trace, reports, cache_dir=str(tmp_path),
+                   **ppa_kw).explore(cands)
+    # 2 graphs reused, 2 sims recomputed under the PPA namespace
+    assert ppa.cache["disk_hits"] == 2 and ppa.cache["disk_misses"] == 2
+
+    # a different budget configuration is its own namespace again
+    budgeted = Explorer(trace, reports, cache_dir=str(tmp_path),
+                        budgets={"power_w": 5.0}, **ppa_kw).explore(cands)
+    assert budgeted.cache["disk_hits"] == 2
+    assert budgeted.cache["disk_misses"] == 2
+
+    # each namespace still hits itself, and plain results are unchanged
+    again = Explorer(trace, reports, cache_dir=str(tmp_path),
+                     **ppa_kw).explore(cands)
+    assert again.cache["disk_hits"] == 4 and again.cache["disk_misses"] == 0
+    back = Explorer(trace, reports, cache_dir=str(tmp_path)).explore(cands)
+    assert back.cache["disk_hits"] == 4 and back.cache["disk_misses"] == 0
+    assert [(o.name, o.makespan_s) for o in back.ranked] == \
+        [(o.name, o.makespan_s) for o in plain.ranked]
+
+
+def test_ppa_token_namespaces_order_library_keys(fixture_world):
+    """The order library key grows the same namespace token; plain-mode
+    keys are byte-identical to the pre-PPA layout so existing stores stay
+    valid."""
+    from repro.core.explore import orders_disk_text
+    plain = orders_disk_text("tok", "availability")
+    assert orders_disk_text("tok", "availability", ppa_token=None) == plain
+    ppa = orders_disk_text("tok", "availability", ppa_token="abcd1234")
+    assert ppa != plain and "abcd1234" in ppa
+
+    trace, reports, rep = fixture_world
+    plain_ex = Explorer(trace, reports)
+    ppa_ex = Explorer(trace, reports, objectives=["energy_j"])
+    assert plain_ex._ppa_token is None and ppa_ex._ppa_token is not None
+    # sim disk texts diverge purely on the ppa token
+    cands = synth_candidates(rep, accs=(1,))
+    plain_ex.explore(cands)
+    ppa_ex.explore(cands)
+    key = next(iter(plain_ex._graphs))
+    sys0 = cands[0].system
+    assert plain_ex._sim_disk_text(key, sys0) != \
+        ppa_ex._sim_disk_text(key, sys0)
+
+
 def test_changed_reports_invalidate_disk_entries(tmp_path, fixture_world):
     """A retuned HLS cost model must not be served yesterday's graphs: the
     ReportMap's cost fields are part of the on-disk key."""

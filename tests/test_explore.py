@@ -1,6 +1,8 @@
 """Exploration-engine tests: generators, caches, parallel determinism,
 pruning safety, JSON round-trip, plus property-based regression tests for
 the simulator/estimator invariants the engine relies on."""
+import json
+
 import hypothesis
 import hypothesis.strategies as st
 import pytest
@@ -260,6 +262,43 @@ def test_json_roundtrip(trace, reports_and_rep):
     assert back.to_json() == ExplorationResult.from_json(back.to_json()).to_json()
     with pytest.raises(ValueError):
         ExplorationResult.from_json('{"version": 1}')
+
+
+def test_json_roundtrip_ppa_fields(trace, reports_and_rep):
+    """The PPA additions (objectives/budgets on the result, per-outcome
+    objective values + component breakdowns, the derived frontier) and
+    the existing ``failed`` list all survive to_json/from_json — the
+    document the CLI prints and sweepd returns is a faithful store."""
+    import dataclasses as dc
+    reports, rep = reports_and_rep
+    res = explore(trace, synth_candidates(rep, accs=(1, 2, 3)), reports,
+                  top_k=2, objectives=["area_mm2", "energy_j"],
+                  budgets={"power_w": 5.0})
+    assert res.objectives == ["makespan_s", "area_mm2", "power_w",
+                              "energy_j"]
+    assert res.budgets == {"power_w": 5.0}
+    # synthesize a quarantined candidate so the failed list is non-empty
+    res.outcomes[-1] = dc.replace(res.outcomes[-1], status="failed",
+                                  error="RuntimeError('boom')", rank=None)
+    back = ExplorationResult.from_json(res.to_json())
+    assert back.objectives == res.objectives
+    assert back.budgets == res.budgets
+    assert [vars(o) for o in back.outcomes] == \
+        [vars(o) for o in res.outcomes]
+    assert [o.name for o in back.frontier] == [o.name for o in res.frontier]
+    assert back.dominated_count == res.dominated_count
+    for o in back.ranked:
+        assert set(o.objectives) == {"makespan_s", "area_mm2", "power_w",
+                                     "energy_j"}
+        assert set(o.ppa["components"]) >= {"base"}
+    assert [(o.name, o.error) for o in back.failed] == \
+        [(o.name, o.error) for o in res.failed] and back.failed
+    assert back.to_json() == \
+        ExplorationResult.from_json(back.to_json()).to_json()
+    # scalar sweeps keep the pre-PPA document shape: no phantom keys
+    scalar = explore(trace, synth_candidates(rep, accs=(1,)), reports)
+    doc = json.loads(scalar.to_json())
+    assert "objectives" not in doc and "budgets" not in doc
 
 
 def test_seed_explore_api_surface(trace, reports_and_rep):

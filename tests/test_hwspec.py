@@ -1,0 +1,221 @@
+"""Hardware spec library + Pareto invariants (property-based, tier-1).
+
+The four mandated frontier properties:
+
+* frontier members are mutually non-dominated;
+* frontier membership is invariant under candidate permutation;
+* single-objective mode reduces bit-identically to scalar top-k;
+* tightening a budget never adds frontier members.
+
+Plus the spec-library unit contracts: discrete knob lookup, annotation
+arithmetic, budget strictness, and signature sensitivity.
+"""
+import json
+import random
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.explore import Explorer
+from repro.core.hwspec import (BUDGET_AXES, Budgets, DEFAULT_CLOCK_SCALE,
+                               KindSpec, OBJECTIVE_NAMES, SpecLibrary,
+                               dominates, normalize_objectives,
+                               pareto_indices)
+from repro.testing.synth import (synth_candidates, synth_report,
+                                 synth_reports, synth_trace)
+
+
+# ---------------------------------------------------------------------------
+# Spec library units
+# ---------------------------------------------------------------------------
+
+
+def test_from_reports_derives_one_spec_per_kind():
+    lib = SpecLibrary.from_reports(synth_reports())
+    assert set(lib.kinds) == {"fpga:k"}
+    spec = lib.kinds["fpga:k"]
+    assert spec.area_mm2 > 0 and spec.dynamic_w > 0
+    # smp reports never become fabric specs
+    reports = dict(synth_reports())
+    reports[("k", "smp")] = synth_report("k", "smp")
+    assert set(SpecLibrary.from_reports(reports).kinds) == {"fpga:k"}
+
+
+def test_lookup_scales_linearly_and_clamps_clock():
+    lib = SpecLibrary.from_reports(synth_reports())
+    one = lib.lookup("fpga:k", 1)
+    four = lib.lookup("fpga:k", 4)
+    assert four["area_mm2"] == pytest.approx(4 * one["area_mm2"])
+    assert four["dynamic_w"] == pytest.approx(4 * one["dynamic_w"])
+    # the clock knob is a discrete table, clamped to its last entry
+    tail = lib.lookup("fpga:k", 10_000)["clock_scale"]
+    assert tail == DEFAULT_CLOCK_SCALE[-1]
+    with pytest.raises(KeyError):
+        lib.lookup("fpga:unknown", 1)
+
+
+def test_annotate_component_breakdown_adds_up():
+    lib = SpecLibrary.from_reports(synth_reports())
+    cand = synth_candidates([4], synth_report())[1]   # 4acc+smp
+    ppa = lib.annotate(cand.system, 0.01,
+                       {"acc_k": 0.004, "smp": 0.02})
+    comps = ppa.components
+    assert set(comps) == {"acc_k", "smp", "base"}
+    assert ppa.area_mm2 == pytest.approx(
+        sum(c["area_mm2"] for c in comps.values()))
+    assert ppa.energy_j == pytest.approx(
+        ppa.static_w * 0.01 + comps["acc_k"]["energy_j"]
+        + comps["smp"]["energy_j"])
+    # peak power is simulation-free: static + all pools at full activity
+    assert ppa.power_w == pytest.approx(
+        ppa.static_w + comps["acc_k"]["dynamic_w"]
+        + comps["smp"]["dynamic_w"])
+
+
+def test_signature_tracks_spec_content():
+    base = SpecLibrary.from_reports(synth_reports())
+    same = SpecLibrary.from_reports(synth_reports())
+    assert base.signature() == same.signature()
+    bigger = SpecLibrary({"fpga:k": KindSpec("fpga:k", 9.9, 0.5)})
+    assert bigger.signature() != base.signature()
+    other_node = SpecLibrary.from_reports(synth_reports(), tech_nm=16)
+    assert other_node.signature() != base.signature()
+
+
+def test_budgets_strict_parse():
+    assert Budgets.from_mapping(None) is None
+    b = Budgets.from_mapping({"area_mm2": 20.0, "power_w": 2.5})
+    assert b.axes() == ("area_mm2", "power_w")
+    assert b.as_dict() == {"area_mm2": 20.0, "power_w": 2.5}
+    assert b.violation({"area_mm2": 19.0, "power_w": 2.0}) is None
+    assert "power_w" in b.violation({"power_w": 3.0})
+    for bad in ({"bogus": 1.0}, {"area_mm2": 0}, {"power_w": -1},
+                {"energy_j": float("nan")}, {"energy_j": float("inf")},
+                {"area_mm2": True}, ["area_mm2"]):
+        with pytest.raises(ValueError):
+            Budgets.from_mapping(bad)
+
+
+def test_normalize_objectives_joins_budget_axes():
+    assert normalize_objectives(None, None) == ("makespan_s",)
+    assert normalize_objectives(["energy_j"], None) == ("makespan_s",
+                                                        "energy_j")
+    b = Budgets.from_mapping({"area_mm2": 20.0})
+    # budgeted axes always join, in canonical OBJECTIVE_NAMES order
+    assert normalize_objectives(["energy_j"], b) == (
+        "makespan_s", "area_mm2", "energy_j")
+    assert normalize_objectives(["energy_j", "makespan_s", "energy_j"],
+                                None) == ("makespan_s", "energy_j")
+    with pytest.raises(ValueError):
+        normalize_objectives(["latency"], None)
+
+
+# ---------------------------------------------------------------------------
+# Pareto properties (randomized point clouds)
+# ---------------------------------------------------------------------------
+
+
+def _points(seed, n, n_axes=3):
+    rng = random.Random(seed)
+    axes = list(OBJECTIVE_NAMES[:n_axes])
+    # coarse grid on purpose: collisions and ties must be exercised
+    return axes, [{a: rng.randrange(5) / 2.0 for a in axes}
+                  for _ in range(n)]
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 40))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_frontier_mutually_non_dominated(seed, n):
+    axes, pts = _points(seed, n)
+    front = [pts[i] for i in pareto_indices(pts, axes)]
+    assert front                    # at least one minimum always survives
+    for a in front:
+        for b in front:
+            assert not dominates(a, b, axes)
+    # completeness: every non-member is dominated by some member
+    member_ids = set(pareto_indices(pts, axes))
+    for i, p in enumerate(pts):
+        if i not in member_ids:
+            assert any(dominates(f, p, axes) for f in front)
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 30),
+                  st.integers(0, 10_000))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_frontier_invariant_under_permutation(seed, n, shuffle_seed):
+    axes, pts = _points(seed, n)
+    perm = list(range(n))
+    random.Random(shuffle_seed).shuffle(perm)
+    shuffled = [pts[i] for i in perm]
+    orig = {json.dumps(pts[i], sort_keys=True)
+            for i in pareto_indices(pts, axes)}
+    after = {json.dumps(shuffled[i], sort_keys=True)
+             for i in pareto_indices(shuffled, axes)}
+    assert orig == after
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(1, 30))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_single_axis_frontier_is_the_scalar_minimum(seed, n):
+    _, pts = _points(seed, n, n_axes=1)
+    idx = pareto_indices(pts, ["makespan_s"])
+    best = min(p["makespan_s"] for p in pts)
+    assert [i for i, p in enumerate(pts)
+            if p["makespan_s"] == best] == idx
+
+
+@hypothesis.given(st.integers(0, 10_000), st.integers(2, 30),
+                  st.sampled_from(BUDGET_AXES))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_tightening_a_budget_never_adds_frontier_members(seed, n, axis):
+    """Budgeted axes join the objectives, so a feasible-set shrink can
+    only remove frontier members: any dominator of a surviving candidate
+    is at least as feasible under componentwise upper bounds."""
+    axes, pts = _points(seed, n, n_axes=4)
+    values = sorted({p[axis] for p in pts})
+    loose_cap, tight_cap = values[-1], values[len(values) // 2]
+    loose = [p for p in pts if p[axis] <= loose_cap]
+    tight = [p for p in pts if p[axis] <= tight_cap]
+    front_loose = {json.dumps(loose[i], sort_keys=True)
+                   for i in pareto_indices(loose, axes)}
+    front_tight = {json.dumps(tight[i], sort_keys=True)
+                   for i in pareto_indices(tight, axes)}
+    assert front_tight <= front_loose
+
+
+# ---------------------------------------------------------------------------
+# End-to-end reductions on the real Explorer
+# ---------------------------------------------------------------------------
+
+
+def test_single_objective_mode_reduces_to_scalar_top_k():
+    trace, reports = synth_trace(32), synth_reports()
+    cands = synth_candidates(range(1, 6), synth_report())
+    plain = Explorer(trace, reports, engine="batch")
+    ppa = Explorer(trace, reports, engine="batch",
+                   objectives=["makespan_s"])
+    r_plain = plain.explore(cands, top_k=3)
+    r_ppa = ppa.explore(cands, top_k=3)
+    assert [(o.name, o.makespan_s, o.rank) for o in r_plain.ranked] == \
+        [(o.name, o.makespan_s, o.rank) for o in r_ppa.ranked]
+    assert [o.name for o in r_plain.top()] == [o.name for o in r_ppa.top()]
+    # single-axis mode keeps the annotation but the frontier degenerates
+    # to the makespan minimizers
+    best = r_ppa.ranked[0].makespan_s
+    assert all(o.makespan_s == best for o in r_ppa.frontier)
+
+
+def test_explorer_budget_tightening_monotone():
+    trace, reports = synth_trace(32), synth_reports()
+    cands = synth_candidates(range(1, 7), synth_report())
+    lib = SpecLibrary.from_reports(reports)
+
+    def frontier_names(budgets):
+        ex = Explorer(trace, reports, engine="batch", budgets=budgets,
+                      hwspec=lib, objectives=["area_mm2", "energy_j"])
+        return {o.name for o in ex.explore(cands).frontier}
+
+    loose = frontier_names({"area_mm2": 30.0})
+    tight = frontier_names({"area_mm2": 15.8})
+    assert tight <= loose

@@ -52,6 +52,14 @@ def body(**kw):
     body(budget_s="soon"),
     body(candidate_timeout_s=0),
     body(surprise_field=1),
+    body(objectives="area_mm2"),            # must be a list
+    body(objectives=["nope"]),              # unknown axis
+    body(objectives=[1, 2]),
+    body(budgets={"bogus": 1.0}),           # unknown budget axis
+    body(budgets={"power_w": -1}),          # no negative budgets
+    body(budgets={"area_mm2": 0}),
+    body(budgets={"energy_j": "lots"}),
+    body(budgets=["power_w"]),              # must be a mapping
 ])
 def test_request_validation_rejects(raw):
     with pytest.raises(ProtocolError):
@@ -105,6 +113,39 @@ def test_service_matches_one_shot_ranking():
     assert 0.0 <= t["queue_s"] and 0.0 < t["sweep_s"] <= t["total_s"]
     assert doc["engine_granted"] == "batch"
     assert svc.health_doc()["requests"]["done"] == 1
+
+
+def test_budgeted_pareto_matches_one_shot_cli():
+    """A budgeted multi-objective request through the service returns a
+    document bit-identical to the one-shot CLI on every PPA field — the
+    spec library is server-fixed, so there is nothing tier- or
+    deployment-dependent to drift."""
+    from repro.explore import main as cli_main
+    import io
+    import contextlib
+    svc = SweepService(coalesce_window=0.0)
+    status, doc = svc.submit(body(objectives=["area_mm2", "energy_j"],
+                                  budgets={"power_w": 5.0}))
+    assert status == 200
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert cli_main(["synth:24", "--top-k", "3",
+                         "--objectives", "area_mm2,energy_j",
+                         "--budget", "power_w=5.0"]) == 0
+    ref = json.loads(buf.getvalue())
+    for key in ("objectives", "budgets", "frontier", "dominated",
+                "top", "best"):
+        assert doc[key] == ref[key], key
+    assert doc["objectives"] == ["makespan_s", "area_mm2", "power_w",
+                                 "energy_j"]
+    assert doc["frontier"], "budgeted sweep produced an empty frontier"
+    for entry in doc["frontier"]:
+        assert set(entry) == {"rank", "name", "makespan_s", "objectives",
+                              "ppa"}
+    # scalar responses keep the pre-PPA document shape
+    s2, scalar = svc.submit(body())
+    assert s2 == 200
+    assert "frontier" not in scalar and "objectives" not in scalar
 
 
 def test_repeat_requests_reuse_warm_library():

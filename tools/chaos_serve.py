@@ -15,7 +15,12 @@ the way an unlucky day would:
 2. **Telemetry** — ``/healthz`` must show the recovery counters
    (worker retries / pool respawns) and the fault-state marker files
    must prove each injector really fired.
-3. **Drain** — SIGTERM lands while a request is in flight.  The
+3. **Pareto** — a budgeted multi-objective request (the injectors are
+   exhausted by now) must return a clean, well-formed frontier, and a
+   fault-free one-shot CLI run of the same request must produce a
+   bit-identical frontier/top/best document: chaos plus the service path
+   change nothing about the PPA ranking.
+4. **Drain** — SIGTERM lands while a request is in flight.  The
    in-flight request must still complete with the same ranking, a
    follow-up request must be refused (503 while draining, or connection
    refused once the listener is down), and the server process must exit
@@ -164,6 +169,59 @@ def check_telemetry(base: str, state_dir: str) -> None:
           f"coalesce {health['coalesce']}")
 
 
+#: The budgeted multi-objective variant of the storm request: same trace
+#: and candidate ramp, ranked over makespan/area/energy with a peak-power
+#: cap.  The spec library is server-fixed, so the service's frontier must
+#: be bit-identical to a fault-free one-shot CLI run.
+PARETO_DOC = dict(SWEEP_DOC, objectives=["area_mm2", "energy_j"],
+                  budgets={"power_w": 5.0})
+
+
+def check_pareto(base: str) -> None:
+    status, doc = post_json(base + "/sweep", PARETO_DOC, timeout=300.0)
+    if status != 200:
+        fail(f"budgeted Pareto request got HTTP {status}: "
+             f"{doc.get('error')}")
+    if doc["failed"]:
+        fail(f"budgeted Pareto request quarantined candidates: "
+             f"{doc['failed']}")
+    if not doc.get("frontier"):
+        fail(f"budgeted Pareto response carried no frontier: {doc}")
+    for entry in doc["frontier"]:
+        if set(entry) != {"rank", "name", "makespan_s", "objectives",
+                          "ppa"}:
+            fail(f"malformed frontier entry: {entry}")
+    if doc["best"] not in {e["name"] for e in doc["frontier"]}:
+        fail(f"makespan winner {doc['best']} missing from the frontier")
+
+    # fault-free one-shot CLI over the same request: every PPA field must
+    # be bit-identical to what the (chaos-hardened) service returned
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO_ROOT / "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    env.pop("REPRO_FAULTS", None)
+    env.pop("REPRO_FAULTS_STATE", None)
+    out = os.path.join(tempfile.gettempdir(), "chaos_pareto_oneshot.json")
+    cmd = [sys.executable, "-m", "repro.explore", SWEEP_DOC["trace"],
+           "--accs", SWEEP_DOC["accs"], "--top-k", str(SWEEP_DOC["top_k"]),
+           "--objectives", ",".join(PARETO_DOC["objectives"]),
+           "--budget", "power_w=5.0", "--json", out]
+    cp = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                        timeout=300)
+    if cp.returncode != 0:
+        fail(f"one-shot Pareto CLI exited {cp.returncode}: {cp.stderr}")
+    import json as _json
+    ref = _json.load(open(out))
+    for key in ("frontier", "top", "best", "objectives", "budgets",
+                "dominated"):
+        if doc[key] != ref[key]:
+            fail(f"service/CLI Pareto mismatch on {key!r}: "
+                 f"{doc[key]} vs {ref[key]}")
+    print(f"pareto ok: frontier {[e['name'] for e in doc['frontier']]}, "
+          f"{doc['dominated']} dominated, CLI one-shot bit-identical")
+
+
 def check_drain(proc, base: str, expected_top: list) -> None:
     inflight: dict = {}
 
@@ -211,6 +269,7 @@ def main() -> int:
             docs = storm(base)
             check_storm(docs)
             check_telemetry(base, state_dir)
+            check_pareto(base)
             expected_top = [t["name"] for t in docs[0]["top"]]
             check_drain(proc, base, expected_top)
         finally:
