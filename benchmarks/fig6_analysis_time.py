@@ -85,6 +85,112 @@ def _sweep_candidates(trace_bs: int, count: int) -> List[mm.Candidate]:
     return out
 
 
+def _topk_candidates(trace_bs: int, count: int) -> List[mm.Candidate]:
+    """The branch-and-bound needle shape: a population with real makespan
+    spread, where a top-k sweep has something to cut.
+
+    The saturated ``_sweep_candidates`` ramp is a *degenerate* top-k
+    population — past the parallelism knee every lane ties at the
+    saturated makespan, and exact ties are never retired (strict
+    ``bound > cutoff``), so it measures pruning overhead, not pruning.
+    This population stays in the unsaturated co-design band and crosses
+    it with the heterogeneity axes the paper's design space actually
+    has: slot counts 1..16, FPGA-only vs FPGA+SMP share at 1/2/4 A9
+    cores (the SMP share is 4-6× slower here — genuine losers), plus
+    the pure-software baselines (~30× — the needles' haystack floor).
+    """
+    kind = f"fpga:mxm{trace_bs}"
+    band = max(2, min(16, count // 4))
+    out: List[mm.Candidate] = []
+
+    def cand(name, n_acc, kinds, cores=2):
+        return mm.Candidate(
+            name=name,
+            system=zynq_system(name, {kind: n_acc}, smp_cores=cores),
+            eligibility=Eligibility({"mxm_block": kinds}))
+
+    # the pure-hardware ramp first: processing order seeds the incumbent
+    # with the likeliest winners, so later families launch with a tight
+    # cutoff (the cross-family propagation seam)
+    for n_acc in range(1, band + 1):
+        out.append(cand(f"{n_acc}acc{trace_bs}", n_acc, (kind,)))
+    for cores in (1, 2, 4):
+        for n_acc in range(1, band + 1):
+            out.append(cand(f"{n_acc}acc{trace_bs}+smp_c{cores}", n_acc,
+                            (kind, "smp"), cores))
+    for cores in (1, 2, 4):
+        out.append(cand(f"sw{trace_bs}_c{cores}", 1, ("smp",), cores))
+    return out
+
+
+def _pruned_rows(trace, reports, a9, count: int,
+                 smoke: bool) -> List[Tuple[str, float, str]]:
+    """ISSUE 10 tentpole measurement: ``prune=True`` composed with the
+    batch lockstep engine on a top-k needle sweep, paired per round
+    against the identical unpruned sweep (same Explorer config, same
+    candidates, same ``top_k`` deliverable — machine drift cancels).
+
+    Correctness rides along: the pruned top-k must be bit-identical to
+    the unpruned one, every retired candidate's recorded bound must
+    exceed the k-th best makespan, and ``retired_lanes > 0`` is asserted
+    (a sweep that retires nothing is not measuring retirement)."""
+    cands = _topk_candidates(trace.meta.get("bs", 64), count)
+    nc = len(cands)
+    kk = 3 if smoke else 10
+    mk = lambda: Explorer(trace, reports, smp_seconds_fn=a9)  # noqa: E731
+    mk().explore(cands)                       # untimed warm-up
+    rounds = 1 if smoke else 3
+    best = {"plain": float("inf"), "pruned": float("inf")}
+    per_round: List[Dict[str, float]] = []
+    res: Dict[str, object] = {}
+    exs: Dict[str, Explorer] = {}
+    for _ in range(rounds):
+        rd: Dict[str, float] = {}
+        for name, prune in (("plain", False), ("pruned", True)):
+            exs[name] = mk()
+            t0 = time.perf_counter()
+            res[name] = exs[name].explore(cands, top_k=kk, prune=prune)
+            rd[name] = time.perf_counter() - t0
+            best[name] = min(best[name], rd[name])
+        per_round.append(rd)
+    plain, pruned = res["plain"], res["pruned"]
+    stats = exs["pruned"].batch_stats.as_dict()
+    cstats = exs["pruned"].stats.as_dict()
+    retired = int(cstats["retired_lanes"])
+
+    topk = lambda r: [(o.name, o.makespan_s)  # noqa: E731
+                      for o in r.ranked[:kk]]
+    assert topk(pruned) == topk(plain), \
+        "pruned top-k must be bit-identical to the unpruned sweep"
+    assert retired > 0 and len(pruned.pruned) > 0, \
+        f"the needle sweep must retire lanes in flight: {stats}"
+    kth = plain.ranked[min(kk, len(plain.ranked)) - 1].makespan_s
+    spans = {o.name: o.makespan_s for o in plain.ranked}
+    for o in res["pruned"].outcomes:
+        if o.status == "pruned":
+            assert spans[o.name] > kth, o.name
+
+    paired = [rd["plain"] / rd["pruned"] for rd in per_round]
+    speedup = max(paired)
+    if not smoke:
+        assert speedup >= 1.3, \
+            f"batch+prune must clear ≥1.3× the unpruned batch top-k " \
+            f"sweep paired-per-round (got {speedup:.2f}x: pruned " \
+            f"{best['pruned']:.3f}s vs plain {best['plain']:.3f}s)"
+    METRICS.update({
+        "sweep_batch_pruned_seconds": best["pruned"],
+        "sweep_batch_pruned_unpruned_seconds": best["plain"],
+        "sweep_batch_pruned_vs_unpruned_speedup": speedup,
+        "sweep_batch_pruned_retired": retired,
+        "sweep_batch_pruned_candidates": nc,
+        "sweep_batch_pruned_stats": stats,
+    })
+    return [("fig6/sweep_batch_pruned", best["pruned"] * 1e6,
+             f"candidates={nc},top_k={kk},seconds={best['pruned']:.3f},"
+             f"vs_unpruned={speedup:.2f}x,retired={retired},"
+             f"incumbent_updates={stats['incumbent_updates']}")]
+
+
 # PR-2 perf trajectory (BENCH_simulator.json as committed by PR 2) — the
 # fixed yardsticks the batch-engine target is measured against.  The pr1
 # path runs code that has not changed since, so ``measured_pr1 / PR2_PR1_S``
@@ -126,12 +232,22 @@ def _sweep_rows(trace, reports, a9, count: int,
       ``jaxsim.simulate_jax_many``): every graph family of the sweep
       padded along the task axis into **one** compiled scan, warm order
       library + warm in-memory compile cache (steady state).
-    * *(post-rounds)* ``sweep_jax_warm`` — the cross-process cold-start
-      shape: a fresh Explorer whose :class:`CompileCache` memory tier is
-      empty but whose DiskCache ``xla`` store is warm, so the sweep runs
-      with **zero** XLA compiles (asserted, with ``disk_hits >= 1``) —
-      the executable deserializes in milliseconds instead of recompiling
-      for seconds.
+    * ``jaxw``        — per-sweep warm path (ISSUE 10 satellite): fresh
+      Explorers sharing a CompileCache whose memory tier a single
+      priming sweep loaded from the warm DiskCache ``xla`` store.  Zero
+      XLA compiles *and* zero per-sweep disk deserializations (both
+      asserted as deltas against the priming pass) — the shape every
+      sweep after the first takes in a warm process, now that Explorers
+      share the loaded-executable tier per cache root
+      (``explore._shared_compile_cache``).  Re-gated paired against
+      ``jaxm``: warm must stay within jitter of the cold megabatch (the
+      regression this catches made warm 1.66× *slower* than cold by
+      re-deserializing executables on every sweep).
+    * *(pre-rounds)* ``sweep_jax_warmstart`` — the one-off cross-process
+      cold start itself: the priming sweep over an empty memory tier and
+      a warm disk store (zero compiles, ``disk_hits >= 1``, both
+      asserted) — deserialization in milliseconds instead of
+      recompilation in seconds, paid once per process.
     * ``batchw``      — repeat sweep with a *warm order library*: a fresh
       Explorer (cold graph/sim caches — every candidate re-simulates)
       sharing the ``ReplayLibrary`` a priming sweep populated, so every
@@ -190,6 +306,26 @@ def _sweep_rows(trace, reports, a9, count: int,
     warm_lib = ReplayLibrary()
     mk(order_library=warm_lib).explore(cands)
 
+    # warm-start priming (ISSUE 10 satellite): a fresh CompileCache over
+    # the warm DiskCache store is the cross-process cold start — every
+    # executable deserializes once (zero XLA compiles, the contract
+    # below).  That one-off used to sit on the per-sweep hot path, which
+    # is the sweep_jax_warm regression this section re-gates: Explorers
+    # now share the loaded-executable memory tier per cache root
+    # (``explore._shared_compile_cache``), so a process pays
+    # deserialization once and every following sweep runs pure
+    # memory-tier — the `jaxw` timed rows measure exactly that.
+    warm_cc = CompileCache(DiskCache(xla_dir))
+    t0 = time.perf_counter()
+    mk(engine="jax", order_library=jaxm_lib, compile_cache=warm_cc) \
+        .explore(cands)
+    jaxws_s = time.perf_counter() - t0
+    wcc0 = warm_cc.as_dict()
+    assert wcc0["compiles"] == 0, \
+        f"warm-store sweep must not compile (XLA cache miss): {wcc0}"
+    assert wcc0["disk_hits"] >= 1, \
+        f"warm-store sweep must deserialize from the xla namespace: {wcc0}"
+
     # round-robin the engine configurations across measurement rounds so
     # machine-speed drift (frequency scaling, neighbours) hits every engine
     # alike — in-run comparisons (procs vs serial) stay apples-to-apples
@@ -204,6 +340,8 @@ def _sweep_rows(trace, reports, a9, count: int,
         "jaxc": dict(engine="jax", jax_megabatch=False, jax_chunk=16),
         "jaxm": dict(engine="jax", order_library=jaxm_lib,
                      compile_cache=jaxm_cc),
+        "jaxw": dict(engine="jax", order_library=jaxm_lib,
+                     compile_cache=warm_cc),
         "batchw": dict(order_library=warm_lib),
     }
     rounds = {name: (1 if smoke else 3) for name in cfgs}
@@ -227,27 +365,23 @@ def _sweep_rows(trace, reports, a9, count: int,
     pr1_s, fast_s, batch_s = best["pr1"], best["fast"], best["batch"]
     fastp_s, batchp_s, disk_s = best["fastp"], best["batchp"], best["disk"]
     jax_s, jaxc_s, batchw_s = best["jax"], best["jaxc"], best["batchw"]
-    jaxm_s = best["jaxm"]
+    jaxm_s, jaxw_s = best["jaxm"], best["jaxw"]
     pr1, fast, batch = res["pr1"], res["fast"], res["batch"]
     fastp, batchp, disk = res["fastp"], res["batchp"], res["disk"]
     jaxr, jaxcr, batchw = res["jax"], res["jaxc"], res["batchw"]
-    jaxmr = res["jaxm"]
+    jaxmr, jaxwr = res["jaxm"], res["jaxw"]
     batch_ex, jax_ex, warm_ex = exs["batch"], exs["jax"], exs["batchw"]
     jaxm_ex = exs["jaxm"]
 
-    # the warm row: a fresh Explorer over the same DiskCache store but an
-    # empty CompileCache memory tier — what the *next process* pays.  Zero
-    # compiles and at least one disk deserialize are the contract.
-    warm_cc = CompileCache(DiskCache(xla_dir))
-    exw = mk(engine="jax", order_library=jaxm_lib, compile_cache=warm_cc)
-    t0 = time.perf_counter()
-    jaxwr = exw.explore(cands)
-    jaxw_s = time.perf_counter() - t0
+    # the per-sweep warm contract: the timed `jaxw` rounds above ran over
+    # the already-loaded memory tier — zero compiles AND zero further
+    # disk deserializations beyond the one-off priming pass
     wcc = warm_cc.as_dict()
-    assert wcc["compiles"] == 0, \
-        f"warm-store sweep must not compile (XLA cache miss): {wcc}"
-    assert wcc["disk_hits"] >= 1, \
-        f"warm-store sweep must deserialize from the xla namespace: {wcc}"
+    assert wcc["compiles"] == wcc0["compiles"] == 0, \
+        f"warm rounds must never compile: {wcc}"
+    assert wcc["disk_hits"] == wcc0["disk_hits"], \
+        f"warm rounds must run pure memory-tier (no re-deserialization " \
+        f"per sweep): priming {wcc0} vs after-rounds {wcc}"
 
     key = lambda r: [(o.name, o.makespan_s) for o in r.ranked]
     assert key(pr1) == key(fast) == key(batch) == key(fastp) \
@@ -342,11 +476,22 @@ def _sweep_rows(trace, reports, a9, count: int,
                  f"vs_chunked={jaxm_vs_chunked:.2f}x,"
                  f"lockstep={mstats['lockstep_lanes']},"
                  f"diverged={mstats['diverged_lanes']}"))
+    # warm-vs-cold-megabatch paired within a round: the regression this
+    # re-gates was the warm path paying CompileCache deserialization per
+    # sweep (1.66× *slower* than cold); warm now shares the memory tier
+    wjp = [rd["jaxm"] / rd["jaxw"] for rd in per_round
+           if "jaxm" in rd and "jaxw" in rd]
+    jaxw_vs_megabatch = max(wjp) if wjp else jaxm_s / jaxw_s
     rows.append(("fig6/sweep_jax_warm", jaxw_s * 1e6,
                  f"candidates={nc},seconds={jaxw_s:.3f},"
                  f"speedup={pr1_s / jaxw_s:.1f}x,"
+                 f"vs_megabatch={jaxw_vs_megabatch:.2f}x,"
                  f"compiles={wcc['compiles']},"
                  f"disk_hits={wcc['disk_hits']}"))
+    rows.append(("fig6/sweep_jax_warmstart", jaxws_s * 1e6,
+                 f"candidates={nc},seconds={jaxws_s:.3f} "
+                 f"(one-off per process: deserialize the warm xla store, "
+                 f"zero compiles)"))
     rows.append(("fig6/sweep_jax_compile", jax_compile_s * 1e6,
                  f"candidates={nc},seconds={jax_compile_s:.3f} "
                  f"(one-off: XLA compile + first sweep)"))
@@ -371,6 +516,8 @@ def _sweep_rows(trace, reports, a9, count: int,
         "sweep_jax_chunked_seconds": jaxc_s,
         "sweep_jax_megabatch_seconds": jaxm_s,
         "sweep_jax_warm_seconds": jaxw_s,
+        "sweep_jax_warmstart_seconds": jaxws_s,
+        "sweep_jax_warm_vs_megabatch_speedup": jaxw_vs_megabatch,
         "jax_compile_seconds": jax_compile_s,
         "jax_megabatch_compile_seconds": jaxm_compile_s,
         "jax_megabatch_vs_chunked_speedup": jaxm_vs_chunked,
@@ -433,6 +580,15 @@ def _sweep_rows(trace, reports, a9, count: int,
         # sweep-wide executable family (cohort-drift-immune signatures,
         # zero-compile warm starts — asserted on the sweep_jax_warm row);
         # the throughput crossover is a multi-core story (ROADMAP).
+        # per-sweep warm runs the *same* megabatch engine over the same
+        # routing with a pre-loaded executable tier — structurally it can
+        # only differ from jaxm by cache-lookup noise, so the honest gate
+        # is within-jitter parity (the regression this re-gates was a
+        # 1.66× slowdown from per-sweep deserialization, not percents)
+        assert jaxw_vs_megabatch >= 0.9, \
+            f"warm jax sweep must stay within jitter of the cold " \
+            f"megabatch (got {jaxw_vs_megabatch:.2f}x: warm " \
+            f"{jaxw_s:.3f}s vs megabatch {jaxm_s:.3f}s)"
         assert jaxm_vs_chunked >= 1.0, \
             f"the megabatch scan must not lose to the per-graph chunked " \
             f"jax path (got {jaxm_vs_chunked:.2f}x: megabatch " \
@@ -606,6 +762,9 @@ def run(n: int = 256, sweep: int = 200,
 
     # --- tentpole: array-compiled batch sweep vs the PR-1 cached path ------
     rows += _sweep_rows(traces[64], reports, a9, sweep, smoke)
+
+    # --- branch-and-bound top-k sweep (in-flight lane retirement) ----------
+    rows += _pruned_rows(traces[64], reports, a9, sweep, smoke)
 
     # --- multi-objective PPA sweep (budgeted Pareto ranking) ---------------
     rows += _pareto_rows(traces[64], reports, a9, sweep, smoke)

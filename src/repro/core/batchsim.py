@@ -60,8 +60,8 @@ import numpy as np
 from .devices import SystemConfig
 from .fastsim import FrozenGraph, simulate_fast  # noqa: F401 — re-export
 from .replay import (BatchStats, MAX_RESCUE_ROUNDS, MIN_LOCKSTEP,
-                     RESCUE_MIN, ReplayLibrary, graph_aux, lane_results,
-                     simulate_grouped)
+                     PruneContext, RESCUE_MIN, ReplayLibrary, bound_aux,
+                     graph_aux, lane_results, simulate_grouped)
 from .simulator import SimResult
 from ..testing import faults
 
@@ -70,6 +70,12 @@ from ..testing import faults
 # wasted lockstep work.
 _WINDOW = 24
 
+# Retired lanes are compacted out of the stacked state once at least this
+# fraction of the current lanes is dead (retired but still carried) — one
+# repack amortises over many retirements; below the threshold dead lanes
+# ride along in the vector ops, which cost the same either way.
+RETIRE_COMPACT_FRAC = 0.25
+
 
 def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
                    policy: str = "availability", *,
@@ -77,7 +83,8 @@ def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
                    stats: Optional[BatchStats] = None,
                    library: Optional[ReplayLibrary] = None,
                    max_rounds: int = MAX_RESCUE_ROUNDS,
-                   rescue_min: int = RESCUE_MIN) -> List[SimResult]:
+                   rescue_min: int = RESCUE_MIN,
+                   prune: Optional[PruneContext] = None) -> List[SimResult]:
     """Schedule-free :class:`SimResult` per system, in input order.
 
     Ranking-identical to ``[simulate_fast(fg, s, policy) for s in
@@ -91,21 +98,31 @@ def simulate_batch(fg: FrozenGraph, systems: Sequence[SystemConfig],
     :func:`repro.core.replay.replay_group`.  A shared library makes repeat
     sweeps start warm: every lane routes straight to the order its slot
     counts validated against before.
+
+    With a :class:`~repro.core.replay.PruneContext` (``prune``), lanes
+    whose monotone partial bound exceeds the incumbent cutoff are retired
+    mid-sweep and returned as :class:`~repro.core.replay.Retired` markers
+    in their result slots; without one every slot is a SimResult.
     """
     return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
                             stats=stats, library=library,
                             max_rounds=max_rounds, rescue_min=rescue_min,
-                            lockstep_fn=_run_lockstep)
+                            prune=prune, lockstep_fn=_run_lockstep)
 
 
 def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
                   layouts: Sequence[Tuple[List[str], List[int], List[int]]],
-                  policy: str) -> Tuple[Dict[int, SimResult], List[int]]:
-    """Drive every lane through ``order``; return ``(done, diverged)``.
+                  policy: str, cutoffs: Optional[np.ndarray] = None
+                  ) -> Tuple[Dict[int, SimResult], List[int],
+                             Dict[int, float]]:
+    """Drive every lane through ``order``; return ``(done, diverged,
+    retired)``.
 
     ``done`` maps lane position -> schedule-free SimResult (``system`` is
     filled by the caller); ``diverged`` lists lane positions whose heap
-    keys broke monotonicity somewhere — their state is abandoned.
+    keys broke monotonicity somewhere — their state is abandoned;
+    ``retired`` maps lane position -> the monotone partial bound that
+    exceeded the lane's ``cutoffs`` entry mid-sweep.
 
     Validation and makespan folding are *windowed*: popped ready times and
     task end times are buffered per step and checked/folded every
@@ -113,6 +130,25 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
     step.  Late detection is already part of the exactness contract (a
     diverged lane's state is discarded, never resumed), so letting a bad
     lane run to the end of its window costs only its own wasted work.
+
+    **Retirement exactness.**  The running bound folds ``end_eff + tsm``
+    per step (:func:`~repro.core.replay.bound_aux`), which lower-bounds a
+    lane's final makespan *only if the replayed prefix equals the lane's
+    true simulation prefix* — and monotonicity alone cannot certify that
+    at a window boundary, because a deviation can be detected late.  The
+    flush therefore also checks the *static ready set* ``R_t`` (rows with
+    every predecessor executed in the order prefix, not yet popped —
+    identical across lanes, maintained incrementally): if the popped keys
+    were monotone through step ``t`` **and** every row still in ``R_t``
+    has a strictly larger ``(ready, tie_break)`` key than the one popped
+    at ``t``, any earlier deviation would have been caught — a deviating
+    row either got popped by ``t`` (key inversion → the monotone check)
+    or is still in ``R_t`` with a smaller key (→ this check).  Only lanes
+    certified exact this way are retired; ties make the check
+    conservatively refuse, which costs performance, never correctness.
+    Retired lanes stop being validated or reported but their columns ride
+    along until at least ``RETIRE_COMPACT_FRAC`` of the lanes are dead,
+    then one repack compacts the candidate axis in place.
     """
     if faults.fire("fail_lockstep"):
         raise RuntimeError("injected fault: fail_lockstep")
@@ -161,6 +197,22 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
     win_tb: List[int] = [-1]
     end_buf: List[np.ndarray] = []
 
+    # ---- retirement state (prune mode only) -------------------------------
+    prune_on = cutoffs is not None
+    retired: Dict[int, float] = {}
+    if prune_on:
+        _tail, tsm_arr = bound_aux(fg)
+        tsm_l = tsm_arr.tolist()
+        tb_np = np.asarray(tb, dtype=np.int64)
+        cut = np.asarray(cutoffs, dtype=float).copy()
+        bnd = np.zeros(L)                   # running monotone partial bound
+        deadm = np.zeros(L, dtype=bool)     # retired, not yet compacted
+        win_tsm: List[float] = []
+        # static ready set R_t: rows whose preds all executed in the order
+        # prefix and that were not themselves popped — lane-independent
+        rem = list(_n_pred)
+        rset = {i for i in range(n) if rem[i] == 0}
+
     def choose(row: int, rt: np.ndarray) -> np.ndarray:
         """Vectorised `_choose_kind` over all current lanes: same option
         order, same strict-< tie-breaks as the reference — one kind id per
@@ -194,10 +246,12 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
 
     def flush_window() -> bool:
         """Validate the buffered window's heap-key monotonicity, fold the
-        buffered end times into makespans, compress out diverged lanes.
-        Returns False when every lane has diverged."""
+        buffered end times into makespans (and, in prune mode, into the
+        running partial bounds — retiring provably-beaten lanes), compress
+        out diverged lanes (and retired ones past the compaction
+        threshold).  Returns False when every lane is dead."""
         nonlocal ready, placement, clocks, busy, seen, makespan, alive, \
-            aL, L, win_rts, win_tb, end_buf
+            aL, L, win_rts, win_tb, end_buf, win_tsm, bnd, cut, deadm
         rts = np.stack(win_rts)                       # [W+1, L]
         viol = rts[1:] < rts[:-1]
         # ties on ready time are only legal when the static tie-break
@@ -210,9 +264,38 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
         bad = viol.any(axis=0)
         np.maximum(makespan, np.stack(end_buf).max(axis=0), out=makespan)
         last_rt = win_rts[-1]
-        if bad.any():
-            diverged.extend(alive[bad].tolist())
+        keep: Optional[np.ndarray] = None
+        if prune_on:
+            bad &= ~deadm       # retired lanes left validation already
+            np.maximum(
+                bnd, (np.stack(end_buf)
+                      + np.asarray(win_tsm)[:, None]).max(axis=0),
+                out=bnd)
+            cand = ~bad & ~deadm & (bnd > cut)
+            if cand.any():
+                # prefix-exactness certificate (see docstring): monotone
+                # so far AND every still-ready row's key strictly above
+                # the last popped key — retiring is only legal for lanes
+                # whose replayed prefix is provably their true prefix
+                if rset:
+                    ys = np.fromiter(rset, dtype=np.int64,
+                                     count=len(rset))
+                    ra = ready[ys]                          # [m, L]
+                    tbv = tb_np[ys]
+                    exact = ((ra > last_rt[None, :])
+                             | ((ra == last_rt[None, :])
+                                & (tbv[:, None] > win_tb[-1]))).all(axis=0)
+                    cand &= exact
+                for li in np.flatnonzero(cand):
+                    retired[int(alive[li])] = float(bnd[li])
+                deadm |= cand
+            if bad.any() or deadm.all() \
+                    or deadm.sum() >= max(1.0, RETIRE_COMPACT_FRAC * L):
+                keep = ~(bad | deadm)
+        elif bad.any():
             keep = ~bad
+        if keep is not None:
+            diverged.extend(alive[bad].tolist())
             ready = ready[:, keep]
             placement = placement[:, keep]
             clocks = clocks[:, :, keep]
@@ -221,6 +304,10 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
             makespan = makespan[keep]
             alive = alive[keep]
             last_rt = last_rt[keep]
+            if prune_on:
+                bnd = bnd[keep]
+                cut = cut[keep]
+                deadm = np.zeros(alive.size, dtype=bool)
             L = alive.size
             if L == 0:
                 return False
@@ -229,6 +316,8 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
         win_rts = [last_rt]
         win_tb = [win_tb[-1]]
         end_buf = []
+        if prune_on:
+            win_tsm = []
         return True
 
     _MISS = object()
@@ -338,16 +427,32 @@ def _run_lockstep(fg: FrozenGraph, order: Sequence[int],
         else:
             end_eff = rt                   # every lane skipped this row
         end_buf.append(end_eff)
-        for j in succs[r]:
-            np.maximum(ready[j], end_eff, out=ready[j])
+        if prune_on:
+            win_tsm.append(tsm_l[r])
+            rset.discard(r)
+            for j in succs[r]:
+                np.maximum(ready[j], end_eff, out=ready[j])
+                rem[j] -= 1
+                if rem[j] == 0:
+                    rset.add(j)
+        else:
+            for j in succs[r]:
+                np.maximum(ready[j], end_eff, out=ready[j])
         if len(end_buf) >= _WINDOW and not flush_window():
-            return {}, diverged
+            return {}, diverged, retired
     if end_buf and not flush_window():
-        return {}, diverged
+        return {}, diverged, retired
 
     # ---- assemble per-lane schedule-free results --------------------------
     for p in seen_pools:
         seen[p] = True
+    if prune_on and deadm.any():
+        # retired lanes still riding below the compaction threshold: drop
+        # them now so they are never assembled into results
+        fin = ~deadm
+        alive, makespan = alive[fin], makespan[fin]
+        busy, seen = busy[:, fin], seen[:, fin]
+        placement = placement[:, fin]
     done = lane_results(fg, pool_names, lane_counts, alive.tolist(), policy,
                         makespan, busy, seen, placement)
-    return done, diverged
+    return done, diverged, retired

@@ -88,7 +88,8 @@ from .estimator import PerfEstimate
 from .fastsim import FrozenGraph, simulate_fast
 from .hwspec import (Budgets, OBJECTIVE_NAMES, SpecLibrary,
                      normalize_objectives, pareto_indices)
-from .replay import ENGINE_FALLBACK, MAX_RESCUE_ROUNDS, ReplayLibrary
+from .replay import (ENGINE_FALLBACK, ENGINE_TOLERANCE, Incumbent,
+                     MAX_RESCUE_ROUNDS, PruneContext, ReplayLibrary, Retired)
 from .hlsreport import KernelReport, ReportMap, ZYNQ_7045_BUDGET, fits
 from .simulator import SimResult, simulate
 from .taskgraph import TaskGraph
@@ -315,6 +316,15 @@ class CacheStats:
     ``cache_quarantined`` integrity-failed disk entries moved aside by
     this Explorer's own :class:`~repro.core.diskcache.DiskCache` handle
     (worker-side handles quarantine independently).
+
+    The retirement counters mirror the branch-and-bound fusion
+    (``prune=True`` composed with the lockstep engines):
+    ``retired_lanes`` lanes retired mid-sweep because their monotone
+    partial bound crossed the incumbent cutoff, ``retire_sweeps``
+    lockstep sweeps that retired at least one lane, and
+    ``incumbent_updates`` cutoff tightenings folded in from the sweep's
+    :class:`~repro.core.replay.Incumbent` trackers (parent and
+    worker-side).
     """
 
     graph_hits: int = 0
@@ -332,6 +342,9 @@ class CacheStats:
     quarantined: int = 0
     engine_demotions: int = 0
     cache_quarantined: int = 0
+    retired_lanes: int = 0
+    retire_sweeps: int = 0
+    incumbent_updates: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -351,6 +364,11 @@ class CacheStats:
                      f"{self.pool_respawns}rs/{self.chunk_timeouts}to/"
                      f"{self.quarantined}q/{self.engine_demotions}d/"
                      f"{self.cache_quarantined}cq")
+        # likewise the retirement telemetry: only pruned sweeps show it
+        if any((self.retired_lanes, self.retire_sweeps,
+                self.incumbent_updates)):
+            base += (f", retire {self.retired_lanes}l/"
+                     f"{self.retire_sweeps}s/{self.incumbent_updates}u")
         return base + ")"
 
 
@@ -743,7 +761,8 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
                         items: Sequence[Tuple[int, SystemConfig]],
                         policy: str, batch: bool,
                         orders: Optional[Mapping] = None,
-                        max_rounds: int = MAX_RESCUE_ROUNDS
+                        max_rounds: int = MAX_RESCUE_ROUNDS,
+                        prune_seed: Optional[Tuple] = None
                         ) -> Optional[Tuple]:
     """Worker-side unit: one graph (by registry hash, with the pickled
     payload riding along only on seeding chunks) × a slice of slot-count
@@ -756,7 +775,16 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
     with the payload attached), else ``(results, orders_export,
     batch_stats_dict)``: the worker's full order set for the graph rides
     back so the parent can merge discoveries into the sweep library.
-    Must stay module-level picklable."""
+    Must stay module-level picklable.
+
+    ``prune_seed`` is the parent's ``(cutoff, k, caps)`` snapshot at
+    submit time: the worker rebuilds a *local* incumbent seeded with the
+    parent's best-so-far cutoff (the k-th smallest over any superset is
+    never larger than over this slice, so local tightening stays sound),
+    arms per-lane energy caps, and retires lanes in flight exactly like
+    the in-process path — retired slots come back as
+    :class:`~repro.core.replay.Retired` markers, and the local
+    incumbent's tightenings fold into the returned stats dict."""
     # fault sites (no-ops without an active plan): a delayed chunk models a
     # straggling worker; a kill models a hard crash — os._exit skips every
     # finally/atexit, exactly like the OOM-killer, so the parent sees a
@@ -788,9 +816,17 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
     if orders:
         _WORKER_LIBRARY.merge(g, policy, orders)
     stats = BatchStats()
+    pr = inc = None
+    if prune_seed is not None:
+        seed, k, caps = prune_seed
+        if k > 0:
+            inc = Incumbent(k, seed=seed)
+        pr = PruneContext(inc, caps)
     sims = simulate_batch(g, [system for _, system in items], policy,
                           stats=stats, library=_WORKER_LIBRARY,
-                          max_rounds=max_rounds)
+                          max_rounds=max_rounds, prune=pr)
+    if inc is not None:
+        stats.incumbent_updates += inc.updates
     return ([(pos, sim) for (pos, _), sim in zip(items, sims)],
             _WORKER_LIBRARY.export(g.content_hash(), policy),
             stats.as_dict())
@@ -800,6 +836,25 @@ def _process_eval_chunk(ghash: str, fg: Optional[FrozenGraph],
 #: is the object engine, ``fast``/``batch`` the exact array engines, and
 #: ``jax`` the rtol-tier compiled scan (see ``repro.core.replay``).
 ENGINE_NAMES = ("reference", "fast", "batch", "jax")
+
+
+_COMPILE_CACHES: Dict[str, object] = {}
+_COMPILE_CACHES_LOCK = threading.Lock()
+
+
+def _shared_compile_cache(disk: DiskCache) -> "CompileCache":
+    """The process-global :class:`~repro.core.xlacache.CompileCache` for
+    one cache root — Explorers sharing a ``cache_dir`` share loaded
+    executables (the memory tier), so a warm sweep never re-pays disk
+    deserialization per Explorer.  CompileCache is internally locked, so
+    sharing across threads is safe."""
+    from .xlacache import CompileCache
+    key = os.path.abspath(disk.root)
+    with _COMPILE_CACHES_LOCK:
+        cc = _COMPILE_CACHES.get(key)
+        if cc is None:
+            cc = _COMPILE_CACHES[key] = CompileCache(disk)
+    return cc  # type: ignore[return-value]
 
 
 def orders_disk_text(graph_token: str, policy: str,
@@ -1037,8 +1092,14 @@ class Explorer:
         if compile_cache is not None:
             self.compile_cache: Optional["CompileCache"] = compile_cache
         elif engine == "jax" and self._disk is not None:
-            from .xlacache import CompileCache
-            self.compile_cache = CompileCache(self._disk)
+            # one CompileCache per cache root, shared process-wide: a
+            # fresh per-Explorer instance would start with an empty
+            # memory tier and re-deserialize every executable from disk
+            # on each warm sweep — slower than the cold in-memory path
+            # (the BENCH sweep_jax_warm regression).  The shared
+            # instance keeps loaded executables across Explorers while
+            # the disk tier still serves future processes.
+            self.compile_cache = _shared_compile_cache(self._disk)
         else:
             # None ⇒ jaxsim's process-global in-memory cache: fresh
             # Explorers share warm executables within one process
@@ -1064,6 +1125,12 @@ class Explorer:
         self._disk_texts: Dict[Tuple, str] = {}
         self._deadline: Optional[float] = None  # set per explore() call
         self._respawns = 0          # pool respawns this explore() call
+        # branch-and-bound state, armed per explore() call when
+        # prune=True: the live k-th-best incumbent (None in multi-axis
+        # mode, where a scalar makespan cut is unsound) and the energy
+        # budget backing the static_w × bound in-flight pre-cut
+        self._incumbent: Optional[Incumbent] = None
+        self._prune_energy_cap: Optional[float] = None
         # explore() mutates per-call state on self (_deadline, _respawns,
         # _shipped), so concurrent calls on ONE instance serialize here;
         # concurrent sweeps want one Explorer each, sharing order_library /
@@ -1394,8 +1461,27 @@ class Explorer:
 
     def _outcome_from_sim(self, cand: Candidate, stats: Dict[str, object],
                           crit: float, lb: float, ghit: bool, ehit: bool,
-                          sim: SimResult, dt: float) \
+                          sim: Union[SimResult, Retired], dt: float) \
             -> Tuple[Optional[PerfEstimate], CandidateOutcome]:
+        if isinstance(sim, Retired):
+            # in-flight retirement: the engine proved the lane's final
+            # makespan exceeds sim.bound.  Past the energy cap that is
+            # provable infeasibility; past the incumbent cutoff it is a
+            # pruned lane — either way it is reported with its bound,
+            # never silently ranked
+            bound = sim.bound if lb is None else max(float(lb), sim.bound)
+            status, err = "pruned", None
+            if self._prune_energy_cap is not None:
+                floor = self.hwspec.annotate(
+                    cand.system, 0.0, {}).static_w * sim.bound
+                if floor > self._prune_energy_cap:
+                    status = "infeasible"
+                    err = (f"energy_j lower bound {floor:.6g} exceeds "
+                           f"budget {self._prune_energy_cap:.6g}")
+            return None, CandidateOutcome(
+                name=cand.name, status=status, critical_path_s=crit,
+                lower_bound_s=bound, analysis_seconds=dt,
+                cached_graph=ghit, cached_eval=ehit, error=err)
         objs = ppa_doc = None
         if self.objectives is not None:
             # the single seam every engine path funnels through: annotate
@@ -1418,6 +1504,11 @@ class Explorer:
                         cached_graph=ghit, cached_eval=ehit,
                         bottleneck=sim.bottleneck(), error=reason,
                         objectives=objs, ppa=ppa_doc)
+        if self._incumbent is not None:
+            # the cross-family (and cache-hit) tightening seam: every ok
+            # makespan — offers are name-keyed, so re-offering a value
+            # the engine already folded in is a no-op
+            self._incumbent.offer(cand.name, sim.makespan)
         est = PerfEstimate(candidate=cand.name, makespan_s=sim.makespan,
                            sim=sim, graph_stats=stats, critical_path_s=crit,
                            analysis_seconds=dt)
@@ -1490,13 +1581,20 @@ class Explorer:
                 deadline_s: Optional[float] = None) -> ExplorationResult:
         """Evaluate a candidate batch → ranked :class:`ExplorationResult`.
 
-        ``prune=True`` enables the lower-bound cut: a candidate whose
-        critical-path bound is already *strictly worse* than the current
-        k-th best makespan (k = ``top_k`` or 1) is recorded as ``pruned``
-        without simulating.  The bound is exact, so the optimum (and the
-        full top-k set) is never discarded; only the tail of the ranking
-        loses its exact makespans.  Pruning decisions are taken between
-        deterministic chunks, so results do not depend on worker timing.
+        ``prune=True`` enables branch-and-bound pruning against the
+        incumbent (the k-th best makespan so far, k = ``top_k`` or 1),
+        at two levels: a candidate whose static critical-path bound is
+        already *strictly worse* than the cutoff is recorded as
+        ``pruned`` without simulating, and — composed with the lockstep
+        engines (``batch``/``jax``) — lanes whose monotone partial bound
+        crosses the cutoff are *retired mid-sweep* (energy budgets add a
+        ``static_w × bound`` pre-cut that retires provably over-budget
+        lanes as ``infeasible``).  Every bound is exact, so the optimum,
+        the full top-k set and the Pareto frontier are never discarded;
+        only the tail of the ranking loses its exact makespans.  The
+        incumbent only ever tightens and retirement is strict, so the
+        reported top-k is bit-identical to the unpruned sweep on the
+        exact engines regardless of worker timing.
 
         ``deadline_s`` overrides the constructor's ``sweep_deadline`` for
         this call only — the sweep server derives it per request from the
@@ -1528,7 +1626,6 @@ class Explorer:
             else _resolve_workers(self.max_workers, len(cands))
         outcomes: List[Optional[CandidateOutcome]] = [None] * len(cands)
         estimates: Dict[str, PerfEstimate] = {}
-        ok_makespans: List[float] = []
         kk = max(1, top_k) if top_k is not None else 1
         # with more than one objective axis, the scalar makespan cut is
         # unsound — it would discard slow-but-frugal frontier members —
@@ -1536,11 +1633,20 @@ class Explorer:
         multi_axis = self.objectives is not None and len(self.objectives) > 1
         energy_cap = self.budgets.energy_j if self.budgets is not None \
             else None
+        # the branch-and-bound incumbent: every ok outcome offers its
+        # makespan (at the _outcome_from_sim seam, so cache hits count
+        # too) and the k-th best so far is the live retirement cutoff —
+        # threaded into the lockstep engines per family and shipped to
+        # process workers per chunk
+        self._incumbent = Incumbent(kk) if prune and not multi_axis \
+            else None
+        self._prune_energy_cap = energy_cap if prune else None
 
         def threshold() -> Optional[float]:
-            if multi_axis or not prune or len(ok_makespans) < kk:
+            if self._incumbent is None:
                 return None
-            return sorted(ok_makespans)[kk - 1]
+            cut = self._incumbent.get()
+            return cut if cut != float("inf") else None
 
         pool = ThreadPoolExecutor(max_workers=n_workers) \
             if not use_procs and n_workers > 1 else None
@@ -1548,7 +1654,7 @@ class Explorer:
         try:
             chunk = self._chunk_size(
                 len(cands), prune, self.processes if use_procs else 0,
-                self.batch and not use_procs and pool is None and not prune,
+                self.batch and not use_procs and pool is None,
                 n_workers)
             for base in range(0, len(cands), chunk):
                 batch: List[Tuple[int, Candidate]] = []
@@ -1591,12 +1697,12 @@ class Explorer:
                     batch.append((i, cand))
                 # engine demotion may have dropped self.fast / self.batch
                 # since the last chunk — re-resolve the dispatch each time.
-                # the lockstep batch engine wants the whole graph-sharing
-                # family in one chunk; pruning wants chunk boundaries to
-                # re-test the cut — serial+prune stays per-candidate
+                # the lockstep batch engine composes with pruning now:
+                # the incumbent cutoff rides into the sweep itself (lanes
+                # retire in flight), so chunk boundaries only matter for
+                # the cheap lower-bound pre-cut above
                 procs_now = use_procs and self.fast
-                use_batch = self.batch and not procs_now and pool is None \
-                    and not prune
+                use_batch = self.batch and not procs_now and pool is None
                 if procs_now or use_batch:
                     results = self._evaluate_batch_grouped(procs_now, batch)
                 elif pool is not None:
@@ -1608,11 +1714,17 @@ class Explorer:
                     outcomes[i] = out
                     if est is not None:
                         estimates[cand.name] = est
-                        ok_makespans.append(est.makespan_s)
         finally:
             if pool is not None:
                 pool.shutdown()
             self._deadline = None
+            if self._incumbent is not None:
+                # the parent incumbent's tightenings join the worker-side
+                # ones already folded through BatchStats.add_dict
+                self.batch_stats.incumbent_updates += \
+                    self._incumbent.updates
+            self._incumbent = None
+            self._prune_energy_cap = None
             # the process pool is the shared, worker-persistent executor —
             # it outlives this call so repeat sweeps reuse the workers'
             # graph registries
@@ -1631,6 +1743,12 @@ class Explorer:
         self.stats.serial_fallback_lanes += \
             bstats["serial_fallback_lanes"] \
             - bstats_before["serial_fallback_lanes"]
+        self.stats.retired_lanes += \
+            bstats["retired_lanes"] - bstats_before["retired_lanes"]
+        self.stats.retire_sweeps += \
+            bstats["retire_sweeps"] - bstats_before["retire_sweeps"]
+        self.stats.incumbent_updates += \
+            bstats["incumbent_updates"] - bstats_before["incumbent_updates"]
         # fold integrity-failed disk entries this Explorer's own DiskCache
         # handle moved aside (worker-side handles quarantine independently)
         if self._disk is not None:
@@ -1663,9 +1781,13 @@ class Explorer:
         whole candidate set goes out as one deterministic chunk — the
         batch engine sees every graph-sharing family intact, and process
         workers get the per-graph slices re-balanced across the whole
-        sweep instead of per-64-candidate window.  With pruning, chunk
-        boundaries are where the lower-bound cut re-tests, so aim for a
-        few chunks per worker and keep them in a sane [24, 256] band.
+        sweep instead of per-64-candidate window.  The lockstep engines
+        keep the whole-sweep chunk even under pruning: the incumbent
+        rides *into* the sweep (in-flight retirement), so splitting
+        families to re-test a chunk-boundary cut would only shrink
+        lockstep groups.  Serial and process paths still re-test the
+        static lower-bound cut at chunk boundaries, so with pruning they
+        aim for a few chunks per worker in a sane [24, 256] band.
         """
         if procs > 0:
             if prune:
@@ -1740,9 +1862,10 @@ class Explorer:
                                              items, results)
                     continue
                 t0 = time.perf_counter()
+                fam = [cand for _, cand, _, _, _ in items]
                 try:
-                    sims = self._lockstep_family(
-                        payload, [cand for _, cand, _, _, _ in items])
+                    sims = self._lockstep_family(payload, fam,
+                                                 self._family_prune(fam))
                 except Exception:   # noqa: BLE001 — fallback chain
                     # exhausted mid-family: isolate (quarantines repeaters)
                     self._isolate_candidates(payload, graph_info[gkey],
@@ -1750,7 +1873,10 @@ class Explorer:
                     continue
                 share = (time.perf_counter() - t0) / max(len(items), 1)
                 for (pos, cand, key, text, ghit), sim in zip(items, sims):
-                    self._sim_store(key, text, sim)
+                    if not isinstance(sim, Retired):
+                        # a retirement marker is not a result: it must
+                        # never satisfy a later (possibly unpruned) lookup
+                        self._sim_store(key, text, sim)
                     results[pos] = self._outcome_from_sim(
                         cand, stats, crit, lb, ghit, False, sim, share)
             return results
@@ -1878,11 +2004,24 @@ class Explorer:
             fg_arg = payload
             self._shipped[ghash] = self._shipped.get(ghash, 0) + 1
         work = [(pos, cand.system) for pos, cand, _, _, _ in unit["items"]]
+        prune_arg = None
+        if self.batch and (self._incumbent is not None
+                           or self._prune_energy_cap is not None):
+            # ship the parent's best-so-far at submit time; the worker
+            # re-seeds a local incumbent with it (sound: its cutoff only
+            # ever over-estimates the final global k-th best) and folds
+            # improvements back through the stats dict
+            fam = [cand for _, cand, _, _, _ in unit["items"]]
+            prune_arg = (
+                self._incumbent.get() if self._incumbent is not None
+                else float("inf"),
+                self._incumbent.k if self._incumbent is not None else 0,
+                self._family_caps(fam))
         unit["engine"] = self.engine
         unit["t0"] = time.perf_counter()
         unit["fut"] = ppool.submit(_process_eval_chunk, ghash, fg_arg, work,
                                    self.policy, self.batch, orders_arg,
-                                   self.max_rescue_rounds)
+                                   self.max_rescue_rounds, prune_arg)
 
     def _respawn_pool(self, ppool: ProcessPoolExecutor,
                       units: "collections.deque",
@@ -1935,7 +2074,8 @@ class Explorer:
             / max(len(unit["items"]), 1)
         for pos, cand, key, text, ghit in unit["items"]:
             sim = sims[pos]
-            self._sim_store(key, text, sim)
+            if not isinstance(sim, Retired):
+                self._sim_store(key, text, sim)
             results[pos] = self._outcome_from_sim(
                 cand, stats, crit, lb, ghit, False, sim, share)
 
@@ -1949,33 +2089,74 @@ class Explorer:
         from .jaxsim import simulate_jax_many
         gkeys = list(pending)
         fams = []
+        prunes: List[Optional[PruneContext]] = []
         for gkey in gkeys:
             payload = graph_info[gkey][0]
             self._load_orders(payload)
-            fams.append((payload, [cand.system for _, cand, _, _, _
-                                   in pending[gkey]]))
+            fam = [cand for _, cand, _, _, _ in pending[gkey]]
+            fams.append((payload, [c.system for c in fam]))
+            # one context per family, all sharing the live incumbent —
+            # cross-family tightening happens inside the megabatch too
+            prunes.append(self._family_prune(fam))
         t0 = time.perf_counter()
         kw = {} if self.jax_chunk is None else {"chunk": self.jax_chunk}
         fam_sims = simulate_jax_many(
             fams, self.policy, stats=self.batch_stats,
             library=self.order_library, max_rounds=self.max_rescue_rounds,
-            compile_cache=self.compile_cache, **kw)
+            compile_cache=self.compile_cache,
+            prunes=prunes if any(p is not None for p in prunes) else None,
+            **kw)
         n_total = sum(len(v) for v in pending.values()) or 1
         share = (time.perf_counter() - t0) / n_total
         for gkey, sims in zip(gkeys, fam_sims):
             _, stats, crit, lb = graph_info[gkey]
             for (pos, cand, key, text, ghit), sim in zip(pending[gkey],
                                                          sims):
-                self._sim_store(key, text, sim)
+                if not isinstance(sim, Retired):
+                    self._sim_store(key, text, sim)
                 results[pos] = self._outcome_from_sim(
                     cand, stats, crit, lb, ghit, False, sim, share)
         return results
 
+    def _family_caps(self, cands: Sequence[Candidate]) \
+            -> Optional[List[float]]:
+        """Static per-lane energy caps for one candidate family —
+        ``energy_cap / static_w`` per lane (energy >= static_w × makespan
+        >= static_w × bound, so a bound past the cap proves
+        infeasibility); ``None`` when no energy budget is armed."""
+        if self._prune_energy_cap is None:
+            return None
+        caps = []
+        for c in cands:
+            w = self.hwspec.annotate(c.system, 0.0, {}).static_w
+            caps.append(self._prune_energy_cap / w if w > 0
+                        else float("inf"))
+        return caps
+
+    def _family_prune(self, cands: Sequence[Candidate]) \
+            -> Optional[PruneContext]:
+        """The :class:`~repro.core.replay.PruneContext` for one family of
+        the current explore call: the live shared incumbent, the static
+        energy caps, and the engine's equivalence tolerance (jax inflates
+        the cutoff by its rtol so a sub-tolerance tie can never retire
+        off the exact top-k).  ``None`` when nothing can retire."""
+        caps = self._family_caps(cands)
+        if self._incumbent is None and caps is None:
+            return None
+        return PruneContext(self._incumbent, caps,
+                            ENGINE_TOLERANCE.get(self.engine, 0.0))
+
     def _lockstep_family(self, payload: FrozenGraph,
-                         cands: Sequence[Candidate]) -> List[SimResult]:
+                         cands: Sequence[Candidate],
+                         prune: Optional[PruneContext] = None) \
+            -> List[Union[SimResult, Retired]]:
         """One graph-sharing candidate family through the configured
         candidate-axis backend (numpy lockstep or the jax scan), replaying
-        orders from the sweep's (disk-warmed) library.
+        orders from the sweep's (disk-warmed) library.  With ``prune``,
+        lanes may come back as :class:`~repro.core.replay.Retired`
+        markers (the ``family_runner`` seam stays unpruned in-flight —
+        its sweeps run out-of-process of the incumbent; the pre-cut in
+        ``_explore`` still applies to its candidates).
 
         An engine fault demotes down :data:`~repro.core.replay.
         ENGINE_FALLBACK` and re-runs the *whole family* on the next tier
@@ -1995,7 +2176,7 @@ class Explorer:
                                         library=self.order_library,
                                         max_rounds=self.max_rescue_rounds,
                                         compile_cache=self.compile_cache,
-                                        **kw)
+                                        prune=prune, **kw)
                 if self.engine == "batch":
                     self._load_orders(payload)
                     if self.family_runner is not None:
@@ -2004,7 +2185,8 @@ class Explorer:
                     return simulate_batch(payload, systems, self.policy,
                                           stats=self.batch_stats,
                                           library=self.order_library,
-                                          max_rounds=self.max_rescue_rounds)
+                                          max_rounds=self.max_rescue_rounds,
+                                          prune=prune)
                 if self.engine == "fast":
                     return [simulate_fast(payload, s, self.policy)
                             for s in systems]

@@ -173,6 +173,8 @@ class FrozenGraph:
         state.pop("_rt", None)          # plain-list mirror is rebuilt on use
         state.pop("_batch_aux", None)   # batchsim constants likewise
         state.pop("_jax_xs", None)      # jaxsim scan inputs likewise
+        state.pop("_bound_aux", None)   # retirement bound tables likewise
+        state.pop("_serial_tails", None)    # serial-abort tail list likewise
         return state
 
     def _runtime(self):
@@ -292,10 +294,29 @@ def pool_layout(kinds: Sequence[str], system: SystemConfig
     return pool_names, pool_counts, kind_pool
 
 
+class LanePruned(Exception):
+    """Raised by :func:`simulate_fast` when ``cutoff`` pruning is armed
+    and the running makespan lower bound crossed it mid-loop.
+
+    ``bound`` is the bound at abort time — a certified lower bound on the
+    makespan this run would have produced (the serial prefix *is* the
+    lane's true execution, so unlike the lockstep engines no
+    prefix-exactness certificate is involved).  The partially-filled
+    ``order_out`` of an aborted run must not be recorded as a replay
+    order.
+    """
+
+    def __init__(self, bound: float):
+        super().__init__(bound)
+        self.bound = bound
+
+
 def simulate_fast(fg: FrozenGraph, system: SystemConfig,
                   policy: str = "availability", *,
                   with_schedule: bool = False,
-                  order_out: Optional[List[int]] = None) -> SimResult:
+                  order_out: Optional[List[int]] = None,
+                  cutoff: Optional[float] = None,
+                  bound_tails: Optional[Sequence[float]] = None) -> SimResult:
     """Run the reference list-scheduling semantics over a FrozenGraph.
 
     Bit-identical to ``Simulator(graph, system, policy).run()`` (no
@@ -307,6 +328,14 @@ def simulate_fast(fg: FrozenGraph, system: SystemConfig,
     ``order_out`` — optional list the dispatch order (graph row indices,
     heap pop order) is appended to; the batch engine records its reference
     order this way without paying for full schedule records.
+
+    ``cutoff`` + ``bound_tails`` arm branch-and-bound retirement: after
+    each executed task ``i`` the loop folds ``end_i + bound_tails[i]``
+    (``bound_tails`` is the max min-cost critical path through ``i``'s
+    successors — :func:`repro.core.replay.bound_aux`'s ``tsm`` column, a
+    certified remaining-work floor for *any* slot configuration) and
+    raises :class:`LanePruned` the moment it exceeds ``cutoff``, instead
+    of simulating a provably-beaten candidate to completion.
     """
     if policy not in ("availability", "eft"):
         raise ValueError(f"unknown policy {policy!r}")
@@ -426,6 +455,10 @@ def simulate_fast(fg: FrozenGraph, system: SystemConfig,
                                               start, end, roles[i]))
         if end > makespan:
             makespan = end
+        if cutoff is not None:
+            b = end + bound_tails[i]
+            if b > cutoff:
+                raise LanePruned(b)
         done += 1
         for j in succs[i]:
             if end > ready[j]:

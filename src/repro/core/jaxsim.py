@@ -82,9 +82,9 @@ from .devices import SystemConfig
 from .fastsim import FrozenGraph, simulate_fast
 # JAX_RTOL is re-exported here on purpose: it is this engine's tier constant.
 from .replay import (BatchStats, JAX_RTOL, Layout,  # noqa: F401
-                     MAX_RESCUE_ROUNDS, MIN_LOCKSTEP, RESCUE_MIN,
-                     ReplayLibrary, graph_aux, lane_results, simulate_grouped,
-                     simulate_many)
+                     MAX_RESCUE_ROUNDS, MIN_LOCKSTEP, PruneContext,
+                     RESCUE_MIN, ReplayLibrary, graph_aux, lane_results,
+                     simulate_grouped, simulate_many)
 from .simulator import SimResult
 from .xlacache import CompileCache
 from ..testing import faults
@@ -541,14 +541,16 @@ def _group_xs(fg: FrozenGraph, order: Sequence[int],
 
 
 def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
-                                          Sequence[Layout]]],
+                                          Sequence[Layout],
+                                          Optional[np.ndarray]]],
                   policy: str, *, chunk: int,
                   compile_cache: Optional[CompileCache] = None,
                   step_impl: str = "auto",
                   slot_bucketed: bool = False
-                  ) -> List[Tuple[Dict[int, SimResult], List[int]]]:
-    """Drive every lane of every ``(fg, order, layouts)`` cohort through
-    one shared compiled scan.
+                  ) -> List[Tuple[Dict[int, SimResult], List[int],
+                                  Dict[int, float]]]:
+    """Drive every lane of every ``(fg, order, layouts, cutoffs)`` cohort
+    through one shared compiled scan.
 
     Task-axis padding layout: per-cohort step inputs (:func:`_group_xs`)
     are stacked into ``[T_max, G, ...]`` blocks — steps beyond a cohort's
@@ -576,9 +578,19 @@ def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
     pre-grouped by pool template, and one shape per chunk width keeps the
     jit cache minimal.
 
-    Returns one ``(done, diverged)`` pair per cohort in the
+    Retirement on this engine is **post-scan classification**: the
+    ``lax.scan`` trip count is fixed at trace time, so lanes cannot be
+    dropped mid-flight without recompiling — instead a cohort with a
+    finite ``cutoffs`` entry has its non-diverged lanes whose *final*
+    makespan exceeds the cutoff reported as retired (the makespan itself
+    is the bound — exact, not an estimate).  Compiled-shape reuse and the
+    megabatch ``valid`` machinery are untouched; the win is
+    protocol-level (retired lanes skip schedule materialisation and rank
+    assembly), not scan-time.
+
+    Returns one ``(done, diverged, retired)`` triple per cohort in the
     :data:`repro.core.replay.LockstepFn` contract, positions indexing the
-    cohort's own ``layouts``.
+    cohort's own ``layouts``; ``retired`` maps position to its bound.
     """
     _, jnp, enable_x64 = _jax()
     impl = _resolve_step_impl(step_impl)
@@ -586,13 +598,13 @@ def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
     eft = policy == "eft"
 
     per = []
-    for fg, order, layouts in cohorts:
+    for fg, order, layouts, cuts in cohorts:
         pool_names, _, kind_pool = layouts[0]           # template-shared
         kinds = fg.kinds
         caps = _pool_caps(fg, order, kind_pool, len(pool_names))
         lane_counts = [lay[1] for lay in layouts]
         per.append({
-            "fg": fg, "xs": _group_xs(fg, order, kind_pool),
+            "fg": fg, "xs": _group_xs(fg, order, kind_pool), "cuts": cuts,
             "pool_names": pool_names, "kind_pool": list(kind_pool),
             "smp_kid": kinds.index("smp") if "smp" in kinds else -1,
             "lane_counts": lane_counts,
@@ -676,6 +688,7 @@ def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
     accs = [{"kept": [], "mk": [], "busy": [], "seen": [], "place": []}
             for _ in per]
     diverged: List[List[int]] = [[] for _ in per]
+    retired: List[Dict[int, float]] = [{} for _ in per]
     step = _bucket(chunk, cap=chunk)    # effective power-of-two slice width
 
     def _need(lane):
@@ -761,13 +774,20 @@ def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
                     diverged[gi].append(pos)
                     continue
                 acc, c = accs[gi], per[gi]
+                cuts = c["cuts"]
+                if cuts is not None and mk_np[li] > cuts[pos]:
+                    # post-scan retirement: the final makespan is its own
+                    # (exact) bound, and it exceeds the incumbent cutoff
+                    retired[gi][pos] = float(mk_np[li])
+                    continue
                 acc["kept"].append(pos)
                 acc["mk"].append(mk_np[li:li + 1])
                 acc["busy"].append(busy_np[:c["P"], li:li + 1])
                 acc["seen"].append(seen_np[:c["P"], li:li + 1])
                 acc["place"].append(place_np[:c["n"], li:li + 1])
 
-    results: List[Tuple[Dict[int, SimResult], List[int]]] = []
+    results: List[Tuple[Dict[int, SimResult], List[int],
+                        Dict[int, float]]] = []
     for gi, c in enumerate(per):
         acc = accs[gi]
         done: Dict[int, SimResult] = {}
@@ -778,22 +798,24 @@ def _scan_cohorts(cohorts: Sequence[Tuple[FrozenGraph, Sequence[int],
                 np.concatenate(acc["busy"], axis=1),
                 np.concatenate(acc["seen"], axis=1),
                 np.concatenate(acc["place"], axis=1).astype(np.int64))
-        results.append((done, diverged[gi]))
+        results.append((done, diverged[gi], retired[gi]))
     return results
 
 
 def _scan_group(fg: FrozenGraph, order: Sequence[int],
-                layouts: Sequence[Layout], policy: str, *,
+                layouts: Sequence[Layout], policy: str,
+                cutoffs: Optional[np.ndarray] = None, *,
                 chunk: int = DEFAULT_CHUNK,
                 compile_cache: Optional[CompileCache] = None,
                 step_impl: str = "auto"
-                ) -> Tuple[Dict[int, SimResult], List[int]]:
+                ) -> Tuple[Dict[int, SimResult], List[int],
+                           Dict[int, float]]:
     """One-cohort form of :func:`_scan_cohorts` — the per-graph
     :data:`repro.core.replay.LockstepFn`."""
-    (pair,) = _scan_cohorts([(fg, order, layouts)], policy, chunk=chunk,
-                            compile_cache=compile_cache,
-                            step_impl=step_impl)
-    return pair
+    (triple,) = _scan_cohorts([(fg, order, layouts, cutoffs)], policy,
+                              chunk=chunk, compile_cache=compile_cache,
+                              step_impl=step_impl)
+    return triple
 
 
 # ---------------------------------------------------------------------------
@@ -810,7 +832,8 @@ def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
                  max_rounds: int = MAX_RESCUE_ROUNDS,
                  rescue_min: int = RESCUE_MIN,
                  compile_cache: Optional[CompileCache] = None,
-                 step_impl: str = "auto") -> List[SimResult]:
+                 step_impl: str = "auto",
+                 prune: Optional[PruneContext] = None):
     """Schedule-free :class:`SimResult` per system, in input order.
 
     The jax tier of :func:`repro.core.batchsim.simulate_batch`: equivalent
@@ -826,20 +849,28 @@ def simulate_jax(fg: FrozenGraph, systems: Sequence[SystemConfig],
     two).  ``compile_cache`` persists compiled executables (default: a
     process-local in-memory cache); ``step_impl`` picks the step-commit
     implementation (see :data:`STEP_IMPLS`).
+
+    ``prune`` enables in-flight lane retirement
+    (:class:`~repro.core.replay.PruneContext`): lanes whose makespan
+    exceeds the inflated incumbent cutoff come back as
+    :class:`~repro.core.replay.Retired` markers instead of results.
+    Cutoffs on this engine are pre-inflated by the
+    :data:`~repro.core.replay.JAX_RTOL` tolerance so sub-rtol ties never
+    retire.
     """
     require_jax()
     if chunk < 1:
         raise ValueError(f"chunk must be >= 1, got {chunk!r}")
     _resolve_step_impl(step_impl)               # fail fast on bad names
 
-    def lockstep(fg, order, layouts, policy):
-        return _scan_group(fg, order, layouts, policy, chunk=chunk,
+    def lockstep(fg, order, layouts, policy, cutoffs=None):
+        return _scan_group(fg, order, layouts, policy, cutoffs, chunk=chunk,
                            compile_cache=compile_cache, step_impl=step_impl)
 
     return simulate_grouped(fg, systems, policy, min_lockstep=min_lockstep,
                             stats=stats, library=library,
                             max_rounds=max_rounds, rescue_min=rescue_min,
-                            lockstep_fn=lockstep)
+                            lockstep_fn=lockstep, prune=prune)
 
 
 def simulate_jax_many(items: Sequence[Tuple[FrozenGraph,
@@ -851,7 +882,9 @@ def simulate_jax_many(items: Sequence[Tuple[FrozenGraph,
                       library: Optional[ReplayLibrary] = None,
                       max_rounds: int = MAX_RESCUE_ROUNDS,
                       compile_cache: Optional[CompileCache] = None,
-                      step_impl: str = "auto") -> List[List[SimResult]]:
+                      step_impl: str = "auto",
+                      prunes: Optional[Sequence[Optional[PruneContext]]]
+                      = None) -> List[List[SimResult]]:
     """Multi-graph megabatch: every ``(graph, systems)`` family of a sweep
     through **one** compiled scan.
 
@@ -877,4 +910,5 @@ def simulate_jax_many(items: Sequence[Tuple[FrozenGraph,
 
     return simulate_many(items, policy, lockstep_many_fn=lockstep_many,
                          min_lockstep=min_lockstep, stats=stats,
-                         library=library, max_rounds=max_rounds)
+                         library=library, max_rounds=max_rounds,
+                         prunes=prunes)

@@ -56,14 +56,16 @@ vice versa) without laundering rtol results into the exact tier.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
+from collections import deque
 from typing import (Callable, Dict, List, Mapping, Optional, Sequence, Set,
-                    Tuple)
+                    Tuple, Union)
 
 import numpy as np
 
 from .devices import SystemConfig
-from .fastsim import FrozenGraph, pool_layout, simulate_fast
+from .fastsim import FrozenGraph, LanePruned, pool_layout, simulate_fast
 from .simulator import SimResult
 
 # Below this many lanes per group the per-step dispatch overhead outweighs
@@ -116,18 +118,28 @@ ENGINE_FALLBACK: Mapping[str, Optional[str]] = {
 
 # A layout as produced by fastsim.pool_layout: (names, counts, kind_pool).
 Layout = Tuple[List[str], List[int], List[int]]
-# A backend's inner sweep: (fg, order, layouts, policy) ->
+# A backend's inner sweep: (fg, order, layouts, policy, cutoffs) ->
 # ({lane position -> schedule-free SimResult with system=""}, [diverged
-# lane positions]).  Positions index the *layouts* sequence.
-LockstepFn = Callable[[FrozenGraph, Sequence[int], Sequence[Layout], str],
-                      Tuple[Dict[int, SimResult], List[int]]]
+# lane positions], {lane position -> retirement bound}).  Positions index
+# the *layouts* sequence.  ``cutoffs`` is a per-lane float array (or
+# ``None`` = no pruning): a lane whose monotone partial bound exceeds its
+# cutoff may be *retired* mid-sweep — its bound is a proven lower bound on
+# its exact makespan, so the lane is provably outside the incumbent top-k.
+LockstepFn = Callable[[FrozenGraph, Sequence[int], Sequence[Layout], str,
+                       Optional[np.ndarray]],
+                      Tuple[Dict[int, SimResult], List[int],
+                            Dict[int, float]]]
 # One megabatch cohort: every lane replays `order` over `fg` (the lanes
-# share a pool template; slot counts vary per layout).
-CohortSpec = Tuple[FrozenGraph, Tuple[int, ...], List[Layout]]
+# share a pool template; slot counts vary per layout); the last element is
+# the per-lane cutoff array (or None — no pruning for this cohort).
+CohortSpec = Tuple[FrozenGraph, Tuple[int, ...], List[Layout],
+                   Optional[np.ndarray]]
 # A backend's megabatch sweep: all cohorts advance through ONE backend
-# call; one (done, diverged) pair per cohort, in the LockstepFn contract.
+# call; one (done, diverged, retired) triple per cohort, in the LockstepFn
+# contract.
 LockstepManyFn = Callable[[Sequence[CohortSpec]],
-                          List[Tuple[Dict[int, SimResult], List[int]]]]
+                          List[Tuple[Dict[int, SimResult], List[int],
+                                     Dict[int, float]]]]
 
 
 @dataclasses.dataclass
@@ -151,6 +163,14 @@ class BatchStats:
     against another order; ``order_hits`` counts lanes completed against
     an order the library already held before the call (the warm-sweep
     figure of merit).
+
+    Retirement counters (branch-and-bound pruning fused into the sweep):
+    ``retired_lanes`` counts lanes retired mid-sweep because their
+    monotone partial bound exceeded the incumbent cutoff (terminal, like
+    the classification above — a retired lane is never rescued);
+    ``retire_sweeps`` counts lockstep sweeps that retired at least one
+    lane; ``incumbent_updates`` counts cutoff tightenings folded in from
+    :class:`Incumbent` trackers (local and worker-side).
     """
 
     groups: int = 0
@@ -162,6 +182,9 @@ class BatchStats:
     serial_fallback_lanes: int = 0
     small_group_lanes: int = 0
     reference_lanes: int = 0
+    retired_lanes: int = 0
+    retire_sweeps: int = 0
+    incumbent_updates: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -172,6 +195,222 @@ class BatchStats:
         for k, v in other.items():
             if hasattr(self, k):
                 setattr(self, k, getattr(self, k) + int(v))
+
+
+# ---------------------------------------------------------------------------
+# Branch-and-bound pruning: incumbent, cutoffs, retirement
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Retired:
+    """In-flight retirement marker, returned in a result slot instead of a
+    :class:`~repro.core.simulator.SimResult`: the lane's monotone partial
+    bound exceeded its cutoff mid-sweep, so its final makespan provably
+    exceeds the cutoff too.  ``bound`` is a true lower bound on the lane's
+    exact makespan — the exploration layer reports it as
+    ``status="pruned"`` (or ``"infeasible"`` when an energy cap retired
+    the lane), never silently ranks it."""
+
+    bound: float
+
+
+class Incumbent:
+    """Thread-safe k-th-best makespan tracker — the branch-and-bound
+    incumbent shared across families, engines and process chunks.
+
+    Offers are keyed by candidate name, so the same completion may be
+    offered from both the engine (within-family tightening) and the
+    exploration outcome seam (cross-family) without double counting; the
+    cutoff is the k-th smallest offered makespan (``+inf`` until k
+    candidates have completed), optionally capped by a ``seed`` shipped
+    from a parent process at chunk-submit time.  A stale snapshot is
+    always sound: the cutoff only tightens over time and retirement uses
+    a strict ``bound > cutoff`` test, so a looser value can only retire
+    fewer lanes — never a top-k member."""
+
+    def __init__(self, k: int = 1, seed: Optional[float] = None):
+        self.k = max(1, int(k))
+        self.seed = float("inf") if seed is None else float(seed)
+        self.updates = 0
+        self._vals: Dict[str, float] = {}
+        self._cut = float("inf")
+        self._lock = threading.Lock()
+
+    def deficit(self) -> int:
+        """Completions still needed before the cutoff goes finite (0 when
+        a parent seed already supplies one)."""
+        with self._lock:
+            if self.seed != float("inf"):
+                return 0
+            return max(0, self.k - len(self._vals))
+
+    def get(self) -> float:
+        """The current cutoff: any lane whose makespan provably exceeds
+        it is outside the final top-k."""
+        with self._lock:
+            return min(self.seed, self._cut)
+
+    def offer(self, name: str, makespan: float) -> bool:
+        """Fold one completed candidate in; returns True when the cutoff
+        tightened."""
+        m = float(makespan)
+        with self._lock:
+            old = self._vals.get(name)
+            if old is not None and old <= m:
+                return False
+            self._vals[name] = m
+            if len(self._vals) >= self.k and m < self._cut:
+                cut = heapq.nsmallest(self.k, self._vals.values())[-1]
+                if cut < self._cut:
+                    tightened = min(self.seed, cut) < min(self.seed,
+                                                          self._cut)
+                    self._cut = cut
+                    if tightened:
+                        self.updates += 1
+                    return tightened
+            return False
+
+
+class PruneContext:
+    """Pruning context threaded through the replay protocol into the
+    lockstep backends: a live shared :class:`Incumbent` (the scalar top-k
+    cutoff), optional static per-lane energy caps (``energy_cap /
+    static_w`` — energy ``>= static_w × makespan >= static_w × bound``,
+    so a bound past the cap proves infeasibility), and the engine's
+    equivalence tolerance — non-zero tiers (jax) inflate the cutoff so a
+    sub-tolerance tie can never be retired off the exact top-k."""
+
+    __slots__ = ("incumbent", "caps", "tolerance")
+
+    def __init__(self, incumbent: Optional[Incumbent] = None,
+                 caps: Optional[np.ndarray] = None,
+                 tolerance: float = 0.0):
+        self.incumbent = incumbent
+        self.caps = None if caps is None else np.asarray(caps, dtype=float)
+        self.tolerance = float(tolerance)
+
+    def subset(self, idx: Sequence[int]) -> "PruneContext":
+        """The context for a subsequence of this call's lanes (shares the
+        live incumbent; slices the static caps)."""
+        if self.caps is None:
+            return self
+        return PruneContext(self.incumbent,
+                            self.caps[np.asarray(idx, dtype=np.int64)],
+                            self.tolerance)
+
+    def cutoffs(self, lanes: Sequence[int]) -> Optional[np.ndarray]:
+        """Per-lane cutoff array for ``lanes`` (positions into this
+        context's lane space), re-reading the live incumbent; ``None``
+        when nothing can retire (all cutoffs infinite)."""
+        cut = self.incumbent.get() if self.incumbent is not None \
+            else float("inf")
+        c = np.full(len(lanes), cut)
+        if self.caps is not None:
+            np.minimum(c, self.caps[np.asarray(lanes, dtype=np.int64)],
+                       out=c)
+        if not np.isfinite(c).any():
+            return None
+        if self.tolerance:
+            fin = np.isfinite(c)
+            c[fin] *= 1.0 + 4.0 * self.tolerance
+        return c
+
+    def serial_cutoff(self, lane: int) -> Optional[float]:
+        """The single-lane cutoff for a serial (``simulate_fast``) run —
+        ``None`` when this lane cannot retire."""
+        c = self.cutoffs([lane])
+        return None if c is None else float(c[0])
+
+    def offer(self, name: str, makespan: float) -> None:
+        if self.incumbent is not None:
+            self.incumbent.offer(name, makespan)
+
+    def deficit(self) -> int:
+        return self.incumbent.deficit() if self.incumbent is not None else 0
+
+
+def bound_aux(fg: FrozenGraph) -> Tuple[np.ndarray, np.ndarray]:
+    """Static remainder table for the monotone partial bound, memoised on
+    the FrozenGraph like ``_batch_aux`` (and dropped on pickling).
+
+    ``tail[j]`` is the minimum possible critical path from ``j``
+    *inclusive* to a sink — each row costed at its cheapest eligible kind,
+    conditional rows at zero (they may be skipped) — and ``tsm[r] =
+    max(tail[j] for j in succs(r))`` (0 at sinks).  For a lane whose
+    replay is exact, every successor of the row finishing at ``end``
+    becomes ready no earlier than ``end`` and must still run its own
+    cheapest chain, so the lane's final makespan is ``>= end + tsm[row]``
+    — the per-step quantity the engines fold into the running bound."""
+    aux = getattr(fg, "_bound_aux", None)
+    if aux is not None:
+        return aux
+    n = fg.n
+    c = np.where(np.isnan(fg.cost), np.inf, fg.cost)
+    minc = c.min(axis=1) if c.size else np.zeros(n)
+    minc = np.where(np.isfinite(minc), minc, 0.0)
+    minc[np.asarray(fg.cond) >= 0] = 0.0
+    indptr = fg.succ_indptr.tolist()
+    succ = fg.succ_rows.tolist()
+    # Kahn topo order — row index is usually already topological, but the
+    # bound's validity must not depend on that
+    rem = fg.n_pred.tolist()
+    dq = deque(i for i in range(n) if rem[i] == 0)
+    topo: List[int] = []
+    while dq:
+        r = dq.popleft()
+        topo.append(r)
+        for j in succ[indptr[r]:indptr[r + 1]]:
+            rem[j] -= 1
+            if rem[j] == 0:
+                dq.append(j)
+    tail = np.zeros(n)
+    tsm = np.zeros(n)
+    for r in reversed(topo):      # rows on a cycle keep tail 0: still sound
+        row = succ[indptr[r]:indptr[r + 1]]
+        m = max((tail[j] for j in row), default=0.0)
+        tsm[r] = m
+        tail[r] = minc[r] + m
+    fg._bound_aux = (tail, tsm)
+    return tail, tsm
+
+
+def serial_tails(fg: FrozenGraph) -> List[float]:
+    """:func:`bound_aux`'s ``tsm`` column as a plain list (memoised,
+    dropped on pickling) — the ``bound_tails`` argument of
+    :func:`~repro.core.fastsim.simulate_fast`'s cutoff mode."""
+    t = getattr(fg, "_serial_tails", None)
+    if t is None:
+        t = fg._serial_tails = bound_aux(fg)[1].tolist()
+    return t
+
+
+def _serial_sim(fg: FrozenGraph, system, policy: str,
+                prune: Optional[PruneContext], lane: int, *,
+                with_schedule: bool = False,
+                order_out: Optional[List[int]] = None
+                ) -> Union[SimResult, Retired]:
+    """The serial completion path of the replay protocol: an exact
+    :func:`~repro.core.fastsim.simulate_fast` run that, under a
+    :class:`PruneContext`, retires itself the moment its monotone bound
+    crosses the live cutoff.  The serial prefix *is* the lane's true
+    execution, so no prefix-exactness certificate is needed — this is
+    where pruning pays on ramp-shaped sweeps, whose slow lanes diverge
+    out of lockstep and would otherwise re-simulate serially to
+    completion.  Callers must not record the ``order_out`` of a run that
+    came back :class:`Retired` (it is a partial order)."""
+    cutoff = prune.serial_cutoff(lane) if prune is not None else None
+    if cutoff is None:
+        return simulate_fast(fg, system, policy,
+                             with_schedule=with_schedule,
+                             order_out=order_out)
+    try:
+        return simulate_fast(fg, system, policy,
+                             with_schedule=with_schedule,
+                             order_out=order_out, cutoff=cutoff,
+                             bound_tails=serial_tails(fg))
+    except LanePruned as e:
+        return Retired(float(e.bound))
 
 
 # ---------------------------------------------------------------------------
@@ -454,7 +693,9 @@ def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
                      max_rounds: int = MAX_RESCUE_ROUNDS,
                      rescue_min: int = RESCUE_MIN,
                      schedule_free: bool = True,
-                     lockstep_fn: LockstepFn) -> List[SimResult]:
+                     prune: Optional[PruneContext] = None,
+                     lockstep_fn: LockstepFn
+                     ) -> List[Union[SimResult, Retired]]:
     """Schedule-free :class:`SimResult` per system, in input order.
 
     The shared outer loop of every candidate-axis engine: group systems by
@@ -463,10 +704,14 @@ def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
     :func:`replay_group` (library-routed replay + rescue + fallback).
     ``library`` carries discovered orders across calls, engines, processes
     and runs; ``None`` still rescues within the call via an ephemeral one.
+    With a :class:`PruneContext` (``prune``), lockstep lanes may be
+    retired mid-sweep and come back as :class:`Retired` markers instead of
+    results; without one this never happens.
     """
     if policy not in ("availability", "eft"):
         raise ValueError(f"unknown policy {policy!r}")
-    results: List[Optional[SimResult]] = [None] * len(systems)
+    results: List[Optional[Union[SimResult, Retired]]] = \
+        [None] * len(systems)
     groups: Dict[Tuple, List[int]] = {}
     layouts: List[Layout] = []
     for i, system in enumerate(systems):
@@ -480,8 +725,14 @@ def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
             stats.groups += 1
         if len(lanes) < min_lockstep:
             for i in lanes:
-                results[i] = simulate_fast(fg, systems[i], policy,
-                                           with_schedule=with_schedule)
+                res = _serial_sim(fg, systems[i], policy, prune, i,
+                                  with_schedule=with_schedule)
+                results[i] = res
+                if isinstance(res, Retired):
+                    if stats is not None:
+                        stats.retired_lanes += 1
+                elif prune is not None:
+                    prune.offer(systems[i].name, res.makespan)
             if stats is not None:
                 stats.small_group_lanes += len(lanes)
             continue
@@ -490,7 +741,8 @@ def simulate_grouped(fg: FrozenGraph, systems: Sequence[SystemConfig],
                 [layouts[i] for i in lanes], policy, stats, lockstep_fn,
                 library=library, min_lockstep=min_lockstep,
                 max_rounds=max_rounds, rescue_min=rescue_min,
-                schedule_free=schedule_free)):
+                schedule_free=schedule_free,
+                prune=prune.subset(lanes) if prune is not None else None)):
             results[i] = sim
     return results  # type: ignore[return-value]
 
@@ -503,7 +755,9 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
                  min_lockstep: int = MIN_LOCKSTEP,
                  max_rounds: int = MAX_RESCUE_ROUNDS,
                  rescue_min: int = RESCUE_MIN,
-                 schedule_free: bool = True) -> List[SimResult]:
+                 schedule_free: bool = True,
+                 prune: Optional[PruneContext] = None
+                 ) -> List[Union[SimResult, Retired]]:
     """One pool-template group through the multi-order replay protocol.
 
     Three phases, every completion either a validated lockstep lane or an
@@ -530,6 +784,16 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
     :class:`~repro.core.simulator.ScheduledTask` records are built —
     sweeps rank schedule-free and replay full records only for top-k
     winners); lockstep lanes are schedule-free by construction.
+
+    With a :class:`PruneContext`, every completion (lockstep or serial)
+    is offered to the live incumbent, each sweep re-reads the cutoff at
+    launch, and lanes the backend retires come back as :class:`Retired`
+    markers — never rescued, never signature-mapped (their replay was
+    only validated through the retirement step, not end-to-end).  When
+    the incumbent still needs completions to go finite (a cold top-k
+    sweep), a phase-0 seeding pass runs that many of the most-parallel
+    lanes — the likeliest winners — through the exact serial path first,
+    recording their orders, so the main sweep starts with a live cutoff.
     """
     lib = library if library is not None else ReplayLibrary()
     key = lib.key(fg, layouts[0], policy)
@@ -546,9 +810,19 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
     failed_at: Dict[int, Set[int]] = {}     # lane -> positions it diverged on
     with_schedule = not schedule_free
 
+    def offer(i: int) -> None:
+        if prune is not None:
+            prune.offer(systems[i].name, results[i].makespan)
+
     def pinned_serial(i: int, hit: bool) -> None:
-        results[i] = simulate_fast(fg, systems[i], policy,
-                                   with_schedule=with_schedule)
+        res = _serial_sim(fg, systems[i], policy, prune, i,
+                          with_schedule=with_schedule)
+        results[i] = res
+        if isinstance(res, Retired):
+            if stats is not None:
+                stats.retired_lanes += 1
+            return
+        offer(i)
         if stats is not None:
             stats.order_pinned_lanes += 1
             if hit:
@@ -557,19 +831,30 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
     def sweep(lanes: List[int], position: int,
               from_cache: bool) -> List[int]:
         """Replay the order at ``position`` for ``lanes``; returns the
-        lanes that diverged (their lockstep state is discarded)."""
-        done, diverged = lockstep_fn(fg, order_by_pos[position],
-                                     [layouts[i] for i in lanes], policy)
+        lanes that diverged (their lockstep state is discarded).  Lanes
+        the backend retired (partial bound past the cutoff) are finalised
+        as :class:`Retired` markers here: provably outside the incumbent
+        top-k, never rescued, never signature-mapped."""
+        cuts = prune.cutoffs(lanes) if prune is not None else None
+        done, diverged, retired = lockstep_fn(
+            fg, order_by_pos[position], [layouts[i] for i in lanes],
+            policy, cuts)
         for pos, sim in done.items():
             i = lanes[pos]
             results[i] = dataclasses.replace(sim, system=systems[i].name)
             lib.map_sig(key, sig_of[i], position)
+            offer(i)
             if stats is not None:
                 stats.lockstep_lanes += 1
                 if from_cache:
                     stats.order_hits += 1
                 if i in ever_diverged:
                     stats.rescued_lanes += 1
+        for pos, bound in retired.items():
+            results[lanes[pos]] = Retired(float(bound))
+        if stats is not None and retired:
+            stats.retired_lanes += len(retired)
+            stats.retire_sweeps += 1
         failed = [lanes[pos] for pos in diverged]
         for i in failed:
             failed_at.setdefault(i, set()).add(position)
@@ -580,8 +865,41 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
         ever_diverged.update(failed)
         return failed
 
-    # ---- phase 1: signature routing ----------------------------------
+    # ---- phase 0: incumbent seeding (prune mode) ----------------------
     pending = list(range(len(systems)))
+    if prune is not None:
+        need = prune.deficit()
+        if need:
+            # branch-and-bound needs a finite incumbent before any bound
+            # can cut: run the most-parallel lanes (the likeliest winners)
+            # through the exact serial path first, recording their orders
+            # so the rest of the group still routes
+            seeds = sorted(pending, key=lambda j: (-totals[j], j))[:need]
+            for i in seeds:
+                out0: List[int] = []
+                # the incumbent is still infinite here, but static energy
+                # caps can already retire a seed (budgeted mode)
+                res = _serial_sim(fg, systems[i], policy, prune, i,
+                                  with_schedule=with_schedule,
+                                  order_out=out0)
+                results[i] = res
+                if isinstance(res, Retired):
+                    if stats is not None:
+                        stats.retired_lanes += 1
+                    continue
+                offer(i)
+                pos = lib.record(key, out0, sig_of[i])
+                if pos is not None:
+                    order_by_pos[pos] = tuple(out0)
+                if stats is not None:
+                    if pos is None:
+                        stats.serial_fallback_lanes += 1
+                    else:
+                        stats.reference_lanes += 1
+            taken = set(seeds)
+            pending = [i for i in pending if i not in taken]
+
+    # ---- phase 1: signature routing ----------------------------------
     if sig_map or pins:
         routed: Dict[int, List[int]] = {}
         unrouted: List[int] = []
@@ -636,18 +954,31 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
     while pending:
         if rounds >= max_rounds:
             for i in pending:
-                results[i] = simulate_fast(fg, systems[i], policy,
-                                           with_schedule=with_schedule)
+                res = _serial_sim(fg, systems[i], policy, prune, i,
+                                  with_schedule=with_schedule)
+                results[i] = res
+                if isinstance(res, Retired):
+                    if stats is not None:
+                        stats.retired_lanes += 1
+                    continue
+                offer(i)
                 if stats is not None:
                     stats.serial_fallback_lanes += 1
             break
         i = max(pending, key=lambda j: (totals[j], j))
         pending.remove(i)
         out: List[int] = []
-        results[i] = simulate_fast(fg, systems[i], policy,
-                                   with_schedule=with_schedule,
-                                   order_out=out)
+        res = _serial_sim(fg, systems[i], policy, prune, i,
+                          with_schedule=with_schedule, order_out=out)
+        results[i] = res
         rounds += 1
+        if isinstance(res, Retired):
+            # a retired discovery records nothing (its order is partial);
+            # the next round picks another lane to discover with
+            if stats is not None:
+                stats.retired_lanes += 1
+            continue
+        offer(i)
         position = lib.record(key, out, sig_of[i])
         if position is not None and position in failed_at.get(i, ()):
             # the lane's own recorded order already failed its validation:
@@ -661,8 +992,14 @@ def replay_group(fg: FrozenGraph, systems: Sequence[SystemConfig],
                 stats.reference_lanes += 1
         if position is None:
             for j in pending:
-                results[j] = simulate_fast(fg, systems[j], policy,
-                                           with_schedule=with_schedule)
+                res = _serial_sim(fg, systems[j], policy, prune, j,
+                                  with_schedule=with_schedule)
+                results[j] = res
+                if isinstance(res, Retired):
+                    if stats is not None:
+                        stats.retired_lanes += 1
+                    continue
+                offer(j)
                 if stats is not None:
                     stats.serial_fallback_lanes += 1
             break
@@ -688,7 +1025,9 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                   stats: Optional[BatchStats] = None,
                   library: Optional[ReplayLibrary] = None,
                   max_rounds: int = MAX_RESCUE_ROUNDS,
-                  schedule_free: bool = True) -> List[List[SimResult]]:
+                  schedule_free: bool = True,
+                  prunes: Optional[Sequence[Optional[PruneContext]]] = None
+                  ) -> List[List[Union[SimResult, Retired]]]:
     """Every ``(graph, systems)`` family of a sweep through **one** backend
     call — the megabatch form of :func:`simulate_grouped`.
 
@@ -719,19 +1058,34 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
     Every completion is still either a validated lockstep lane or an exact
     serial run, so the engine tiers are preserved by construction.
     Returns one result list per family, each in its ``systems`` order.
+
+    ``prunes`` carries one optional :class:`PruneContext` per family
+    (sharing a live :class:`Incumbent` across them); cohorts then ship
+    per-lane cutoffs into the megabatch dispatch, and retired lanes come
+    back as :class:`Retired` markers exactly as in :func:`replay_group`.
     """
     if policy not in ("availability", "eft"):
         raise ValueError(f"unknown policy {policy!r}")
     lib = library if library is not None else ReplayLibrary()
     with_schedule = not schedule_free
-    results: List[List[Optional[SimResult]]] = \
+    results: List[List[Optional[Union[SimResult, Retired]]]] = \
         [[None] * len(systems) for _fg, systems in items]
 
+    def pr_of(gi: int) -> Optional[PruneContext]:
+        return prunes[gi] if prunes is not None else None
+
     def serial(gi: int, i: int, out: Optional[List[int]] = None
-               ) -> SimResult:
+               ) -> Union[SimResult, Retired]:
         fg, systems = items[gi]
-        return simulate_fast(fg, systems[i], policy,
-                             with_schedule=with_schedule, order_out=out)
+        pr = pr_of(gi)
+        res = _serial_sim(fg, systems[i], policy, pr, i,
+                          with_schedule=with_schedule, order_out=out)
+        if isinstance(res, Retired):
+            if stats is not None:
+                stats.retired_lanes += 1
+        elif pr is not None:
+            pr.offer(systems[i].name, res.makespan)
+        return res
 
     # ---- plan: route every group's lanes to (order, cohort) ------------
     cohorts: List[Dict] = []
@@ -750,6 +1104,28 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                     stats.small_group_lanes += len(lanes)
                 continue
             key = lib.key(fg, layouts[lanes[0]], policy)
+            pr = pr_of(gi)
+            if pr is not None and pr.deficit():
+                # phase-0 incumbent seeding, as in replay_group: the most-
+                # parallel lanes run serially (orders recorded) so the
+                # megabatch launches with a finite cutoff
+                seeds = sorted(lanes, key=lambda i: (-sum(layouts[i][1]),
+                                                     i))[:pr.deficit()]
+                for i in seeds:
+                    out0: List[int] = []
+                    results[gi][i] = serial(gi, i, out0)
+                    if isinstance(results[gi][i], Retired):
+                        continue            # partial order: never recorded
+                    pos0 = lib.record(key, out0, tuple(layouts[i][1]))
+                    if stats is not None:
+                        if pos0 is None:
+                            stats.serial_fallback_lanes += 1
+                        else:
+                            stats.reference_lanes += 1
+                taken = set(seeds)
+                lanes = [i for i in lanes if i not in taken]
+                if not lanes:
+                    continue
             orders, sig_map, pins = lib.lookup(key)
             grp = {"gi": gi, "fg": fg, "key": key, "layouts": layouts,
                    "n_cached": len(orders), "discoveries": 0}
@@ -760,7 +1136,8 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                 sig = tuple(layouts[i][1])
                 if sig in pins:
                     results[gi][i] = serial(gi, i)
-                    if stats is not None:
+                    if stats is not None and \
+                            not isinstance(results[gi][i], Retired):
                         stats.order_pinned_lanes += 1
                         stats.order_hits += 1
                     continue
@@ -777,7 +1154,8 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                 if max_rounds <= 0:
                     for i in unrouted:
                         results[gi][i] = serial(gi, i)
-                        if stats is not None:
+                        if stats is not None and \
+                                not isinstance(results[gi][i], Retired):
                             stats.serial_fallback_lanes += 1
                     unrouted = []
                 else:
@@ -787,16 +1165,23 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                     out: List[int] = []
                     results[gi][j] = serial(gi, j, out)
                     grp["discoveries"] += 1
-                    pos = lib.record(key, out, tuple(layouts[j][1]))
-                    if stats is not None:
-                        if pos is None:
-                            stats.serial_fallback_lanes += 1
-                        else:
-                            stats.reference_lanes += 1
+                    if isinstance(results[gi][j], Retired):
+                        # the group's likeliest winner is already beaten:
+                        # no order to ride — the rest go serial, where the
+                        # same cutoff aborts them just as fast
+                        pos = None
+                    else:
+                        pos = lib.record(key, out, tuple(layouts[j][1]))
+                        if stats is not None:
+                            if pos is None:
+                                stats.serial_fallback_lanes += 1
+                            else:
+                                stats.reference_lanes += 1
                     if pos is None:         # key full (shared library)
                         for i in unrouted:
                             results[gi][i] = serial(gi, i)
-                            if stats is not None:
+                            if stats is not None and \
+                                    not isinstance(results[gi][i], Retired):
                                 stats.serial_fallback_lanes += 1
                         unrouted = []
                     else:
@@ -820,7 +1205,8 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
             gi = grp["gi"]
             for i in c["lanes"]:
                 results[gi][i] = serial(gi, i)
-                if stats is not None:
+                if stats is not None and \
+                        not isinstance(results[gi][i], Retired):
                     stats.order_pinned_lanes += 1
                     if c["position"] < grp["n_cached"]:
                         stats.order_hits += 1
@@ -830,18 +1216,28 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
     if cohorts:
         outs = lockstep_many_fn(
             [(c["grp"]["fg"], c["order"],
-              [c["grp"]["layouts"][i] for i in c["lanes"]])
+              [c["grp"]["layouts"][i] for i in c["lanes"]],
+              None if pr_of(c["grp"]["gi"]) is None
+              else pr_of(c["grp"]["gi"]).cutoffs(c["lanes"]))
              for c in cohorts])
-        for c, (done, diverged) in zip(cohorts, outs):
+        for c, (done, diverged, retired) in zip(cohorts, outs):
             grp = c["grp"]
             gi, key, layouts = grp["gi"], grp["key"], grp["layouts"]
             systems = items[gi][1]
+            pr = pr_of(gi)
             from_cache = c["position"] < grp["n_cached"]
+            for pos_l, bound in retired.items():
+                results[gi][c["lanes"][pos_l]] = Retired(float(bound))
+            if stats is not None and retired:
+                stats.retired_lanes += len(retired)
+                stats.retire_sweeps += 1
             for pos_l, sim in done.items():
                 i = c["lanes"][pos_l]
                 results[gi][i] = dataclasses.replace(
                     sim, system=systems[i].name)
                 lib.map_sig(key, tuple(layouts[i][1]), c["position"])
+                if pr is not None:
+                    pr.offer(systems[i].name, sim.makespan)
                 if stats is not None:
                     stats.lockstep_lanes += 1
                     if from_cache:
@@ -853,7 +1249,8 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                     stats.diverged_lanes += 1
                 if grp["discoveries"] >= max_rounds:
                     results[gi][i] = serial(gi, i)
-                    if stats is not None:
+                    if stats is not None and \
+                            not isinstance(results[gi][i], Retired):
                         stats.serial_fallback_lanes += 1
                     continue
                 # serial discovery: the lane's own order is recorded so
@@ -861,6 +1258,8 @@ def simulate_many(items: Sequence[Tuple[FrozenGraph,
                 out2: List[int] = []
                 results[gi][i] = serial(gi, i, out2)
                 grp["discoveries"] += 1
+                if isinstance(results[gi][i], Retired):
+                    continue                # partial order: never recorded
                 pos2 = lib.record(key, out2, sig)
                 if pos2 is None:
                     if stats is not None:

@@ -104,7 +104,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="drop the ±SMP eligibility axis")
     ap.add_argument("--top-k", type=int, default=5, metavar="K")
     ap.add_argument("--prune", action="store_true",
-                    help="lower-bound pruning (per-candidate exact path)")
+                    help="branch-and-bound pruning: composes with every "
+                         "engine — on batch/jax, lanes whose bound "
+                         "crosses the top-k incumbent retire mid-sweep "
+                         "(reported as pruned, never ranked)")
     ap.add_argument("--objectives", metavar="AXES", default=None,
                     help="comma-separated PPA objective axes "
                          "(makespan_s, area_mm2, power_w, energy_j); "

@@ -47,6 +47,11 @@ MAX_ACC_SLOTS = 1024
 FAULT_KEYS = ("worker_retries", "pool_respawns", "chunk_timeouts",
               "quarantined", "engine_demotions", "cache_quarantined")
 
+#: The CacheStats branch-and-bound retirement counters (``prune=True``
+#: fused into the lockstep engines) — the CLI/server ``retire`` block
+#: and the sweepd ``/healthz`` lifetime totals.
+RETIRE_KEYS = ("retired_lanes", "retire_sweeps", "incumbent_updates")
+
 
 class ProtocolError(ValueError):
     """Malformed request — the server answers HTTP 400, never a 500."""
@@ -233,6 +238,15 @@ class SweepRequest:
         if not isinstance(self.top_k, int) or self.top_k < 1:
             raise ProtocolError(f"top_k must be a positive int, "
                                 f"got {self.top_k!r}")
+        # strict prune knob: retirement decisions ride on this flag, so a
+        # truthy-but-not-bool value ("no", 0.5, [1]) is a 400, never a
+        # silently-coerced sweep mode
+        if not isinstance(self.prune, bool):
+            raise ProtocolError(f"prune must be a boolean, "
+                                f"got {self.prune!r}")
+        if not isinstance(self.smp, bool):
+            raise ProtocolError(f"smp must be a boolean, "
+                                f"got {self.smp!r}")
         try:
             self.budget_s = float(self.budget_s)
         except (TypeError, ValueError):
@@ -348,6 +362,10 @@ def sweep_doc(trace_label: str, engine_requested: str, ex,
                    for o in result.failed],
         "cache": dict(result.cache),
         "replay": ex.batch_stats.as_dict(),
+        # this sweep's in-flight retirement telemetry (per-call deltas —
+        # lanes retired mid-sweep by the branch-and-bound cutoff; the
+        # counts stay 0 on unpruned sweeps)
+        "retire": {k: int(result.cache.get(k, 0)) for k in RETIRE_KEYS},
         # lifetime fault counters (includes construction-time demotions,
         # which per-sweep result.cache deltas cannot see)
         "faults": {k: v for k, v in ex.stats.as_dict().items()

@@ -59,7 +59,8 @@ from ..core.diskcache import DiskCache
 from ..core.explore import ENGINE_NAMES, Explorer, orders_disk_text
 from ..core.replay import ReplayLibrary
 from .coalesce import Coalescer, DEFAULT_WINDOW_S
-from .protocol import (FAULT_KEYS, POLICIES, ProtocolError, SweepRequest,
+from .protocol import (FAULT_KEYS, POLICIES, ProtocolError, RETIRE_KEYS,
+                       SweepRequest,
                        error_doc, get_json, parse_budget_args,
                        parse_objectives, post_json, sweep_doc,
                        timings_block)
@@ -240,6 +241,7 @@ class SweepService:
         self.shed = 0               # 429s
         self.errors = 0             # 4xx/5xx besides shed
         self.fault_totals: Dict[str, int] = {k: 0 for k in FAULT_KEYS}
+        self.retire_totals: Dict[str, int] = {k: 0 for k in RETIRE_KEYS}
         self._ema_sweep_s = 1.0     # Retry-After estimate
         # the coalescer gates its merge window on the running count: solo
         # requests skip the latency floor, and a leader holding every
@@ -364,6 +366,8 @@ class SweepService:
         with self._cond:
             for k in FAULT_KEYS:
                 self.fault_totals[k] += int(ex_faults.get(k, 0))
+            for k in RETIRE_KEYS:
+                self.retire_totals[k] += int(ex_faults.get(k, 0))
             self._ema_sweep_s = (0.7 * self._ema_sweep_s
                                  + 0.3 * result.wall_seconds)
 
@@ -421,6 +425,7 @@ class SweepService:
                              "waiting": self.waiting, "shed": self.shed,
                              "errors": self.errors},
                 "faults": dict(self.fault_totals),
+                "retire": dict(self.retire_totals),
             }
         doc["breaker"] = self.breaker.as_dict()
         doc["coalesce"] = self.coalescer.stats.as_dict()
@@ -616,7 +621,9 @@ def client_main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--accs", default="1-8", metavar="SPEC")
     ap.add_argument("--no-smp", action="store_true")
     ap.add_argument("--top-k", type=int, default=5, metavar="K")
-    ap.add_argument("--prune", action="store_true")
+    ap.add_argument("--prune", action="store_true",
+                    help="branch-and-bound pruning (composes with the "
+                         "batch/jax lockstep engines)")
     ap.add_argument("--budget", type=float, default=120.0, metavar="S",
                     help="whole-request latency budget "
                          "(default %(default)s)")

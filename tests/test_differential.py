@@ -72,11 +72,11 @@ def _world(seed, max_events=32, max_acc=7):
     return trace, reports, cands, policy, objectives, budgets
 
 
-def _run(engine, world, **kw):
+def _run(engine, world, prune=False, **kw):
     trace, reports, cands, policy, objectives, budgets = world
     ex = Explorer(trace, reports, policy=policy, engine=engine,
                   objectives=objectives, budgets=budgets, **kw)
-    return ex, ex.explore(cands, top_k=3)
+    return ex, ex.explore(cands, top_k=3, prune=prune)
 
 
 def _table(result):
@@ -127,6 +127,66 @@ def test_exact_engines_identical_under_energy_budget(seed):
     assert [o.name for o in got.frontier] == [o.name for o in ref.frontier]
     statuses = {o.status for o in ref.outcomes}
     assert "infeasible" in statuses         # the cut actually fired
+
+
+# ---------------------------------------------------------------------------
+# Pruned column: branch-and-bound retirement preserves every contract
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=6, deadline=None)
+def test_pruned_column_matches_unpruned(seed):
+    """``prune=True`` composed with each exact engine: the top-k slice,
+    the frontier and the infeasible set are bit-identical to the unpruned
+    fast reference; candidates retired mid-sweep surface as ``pruned``
+    with a bound that the unpruned sweep confirms exceeds the k-th best."""
+    world = _world(seed)
+    objectives, budgets = world[4], world[5]
+    _, ref = _run("fast", world)
+    ref_spans = {o.name: o.makespan_s for o in ref.ranked}
+    kth = ref.ranked[min(3, len(ref.ranked)) - 1].makespan_s \
+        if ref.ranked else float("inf")
+    scalar = objectives is None and budgets is None
+    for engine in EXACT_ENGINES:
+        ex, got = _run(engine, world, prune=True)
+        assert ex.engine == engine          # prune never demotes the engine
+        assert [(o.name, o.makespan_s) for o in got.ranked[:3]] == \
+            [(o.name, o.makespan_s) for o in ref.ranked[:3]], engine
+        assert [o.name for o in got.frontier] == \
+            [o.name for o in ref.frontier], engine
+        assert sorted(got.infeasible) == sorted(ref.infeasible), engine
+        for o in got.outcomes:
+            if o.status == "pruned":
+                assert scalar, engine   # multi-axis mode never retires here
+                assert ref_spans[o.name] > kth, (engine, o.name)
+        if not scalar:
+            # multi-axis draws (objectives or a static power budget):
+            # the scalar incumbent is off, so the sweep is untouched
+            assert _table(got) == _table(ref), engine
+
+
+@needs_jax
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=2, deadline=None)
+def test_pruned_column_rtol_stable_on_jax(seed):
+    world = _world(seed, max_events=20, max_acc=4)
+    _, ref = _run("batch", world)
+    ref_names = [o.name for o in ref.ranked]
+    ref_spans = {o.name: o.makespan_s for o in ref.ranked}
+    for megabatch in (True, False):
+        ex, got = _run("jax", world, prune=True, jax_megabatch=megabatch)
+        if ex.engine != "jax":
+            pytest.skip(f"jax demoted to {ex.engine}: backend unusable")
+        names = [o.name for o in got.ranked]
+        assert rankings_equivalent(names[:3], ref_names[:3], ref_spans,
+                                   JAX_RTOL)
+        if ref.objectives is not None:
+            ref_objs = {o.name: o.objectives for o in ref.ranked}
+            assert frontiers_equivalent(
+                [o.name for o in got.frontier],
+                [o.name for o in ref.frontier],
+                ref_objs, ref.objectives, JAX_RTOL)
 
 
 # ---------------------------------------------------------------------------

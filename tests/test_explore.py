@@ -144,7 +144,8 @@ def test_cache_hit_miss_counters(trace, reports_and_rep):
              "serial_fallback_lanes": 0}
     faults = {"worker_retries": 0, "pool_respawns": 0, "chunk_timeouts": 0,
               "quarantined": 0, "engine_demotions": 0,
-              "cache_quarantined": 0}
+              "cache_quarantined": 0, "retired_lanes": 0,
+              "retire_sweeps": 0, "incumbent_updates": 0}
     assert res.cache == {"graph_hits": 2, "graph_misses": 2,
                          "eval_hits": 0, "eval_misses": 4,
                          "disk_hits": 0, "disk_misses": 0, **lanes, **faults}
